@@ -1,0 +1,45 @@
+"""Kernel micro-benchmarks: the Pallas crossbar datapath vs the jnp reference
+(interpret mode on CPU — wall times are CPU-emulation numbers; the relevant
+derived metrics are conversion counts and exactness, plus the TPU roofline
+estimates from the dry-run in EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import crossbar as cb
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3) -> float:
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def crossbar_kernel_bench() -> Dict[str, float]:
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 1 << 16, size=(64, 512)))
+    w = jnp.asarray(rng.integers(-(1 << 15), 1 << 15, size=(512, 128)))
+    t_ref = _time(lambda a, b: ref.crossbar_vmm_ref(a, b), x, w)
+    t_pal = _time(lambda a, b: ops.crossbar_vmm_op(a, b, interpret=True), x, w)
+    t_fast = _time(lambda a, b: ops.crossbar_vmm_op(a, b, fast=True, interpret=True), x, w)
+    y1 = ops.crossbar_vmm_op(x, w, interpret=True)
+    y2 = ref.crossbar_vmm_ref(x, w)
+    stats = cb.conversion_stats(64, 512, 128, cb.DEFAULT_SPEC)
+    return {
+        "ref_us": t_ref,
+        "pallas_us": t_pal,
+        "pallas_fast_us": t_fast,
+        "bit_exact": float(bool(jnp.array_equal(y1, y2))),
+        "adc_conversions": float(stats.conversions),
+    }
+
+
+ALL = [("crossbar_kernel", crossbar_kernel_bench)]

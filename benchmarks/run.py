@@ -1,0 +1,35 @@
+"""Benchmark harness: one function per paper table/figure plus kernel
+micro-benchmarks.  Prints ``name,us_per_call,derived`` CSV rows.
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--only fig21]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    from benchmarks import kernel_bench, paper_figures
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    for name, fn in paper_figures.ALL + kernel_bench.ALL:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        derived = fn()
+        dt_us = (time.perf_counter() - t0) * 1e6
+        compact = json.dumps({k: (round(v, 4) if isinstance(v, float) else v)
+                              for k, v in derived.items()})
+        print(f"{name},{dt_us:.0f},{compact}")
+
+
+if __name__ == "__main__":
+    main()

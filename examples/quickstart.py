@@ -1,0 +1,58 @@
+"""Quickstart: the Newton crossbar datapath in five minutes.
+
+Runs the paper's core pipeline end to end on CPU:
+  1. a bit-exact crossbar VMM (16-bit operands, 2-bit cells, 1-bit DAC,
+     9-bit column ADCs) vs the integer-matmul oracle,
+  2. the adaptive-ADC schedule (Fig 5) and its zero-accuracy-impact claim,
+  3. Karatsuba & Strassen divide-and-conquer, bit-identical with fewer
+     ADC conversions,
+  4. the Pallas TPU kernel (interpret mode) matching everything above,
+  5. the analytic Newton-vs-ISAAC headline numbers.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import adc, crossbar as cb, karatsuba as ka, strassen as st
+from repro.core import arch, energy as en, workloads as wl
+from repro.kernels import ops
+
+rng = np.random.default_rng(0)
+x = rng.integers(0, 1 << 16, size=(4, 256))        # unsigned activations
+w = rng.integers(-(1 << 15), 1 << 15, size=(256, 32))  # signed weights
+
+print("== 1. crossbar datapath ==")
+y = np.asarray(cb.crossbar_vmm(jnp.asarray(x), jnp.asarray(w)))
+ref = cb.exact_vmm_reference(x, w, cb.DEFAULT_SPEC)
+print(f"bit-exact vs int64 oracle: {np.array_equal(y, ref)}")
+
+print("\n== 2. adaptive ADC (T2) ==")
+sched = adc.adaptive_schedule(cb.DEFAULT_SPEC.replace(signed_weights=False))
+print(f"SAR bit decisions: {sched.mean():.2f} avg of 9 "
+      f"({100 * (1 - sched.mean() / 9):.0f}% fewer)")
+tr = adc.make_partial_transform(cb.DEFAULT_SPEC, adc.SAFE_ADAPTIVE)
+y_ad = np.asarray(cb.crossbar_vmm(jnp.asarray(x), jnp.asarray(w), partial_transform=tr))
+print(f"adaptive output == full-resolution output: {np.array_equal(y_ad, ref)}")
+
+print("\n== 3. divide & conquer (T3, T4) ==")
+y_ka = np.asarray(ka.karatsuba_vmm(jnp.asarray(x), jnp.asarray(w)))
+c1 = ka.karatsuba_cost(1)
+print(f"karatsuba bit-exact: {np.array_equal(y_ka, ref)}; "
+      f"ADC slots 128 -> {c1.adc_slots} (-{100*c1.adc_reduction_vs_baseline:.0f}%)")
+y_st = np.asarray(st.strassen_matmul(jnp.asarray(x), jnp.asarray(w)))
+print(f"strassen bit-exact: {np.array_equal(y_st, ref)} (7/8 of the products)")
+
+print("\n== 4. Pallas kernel (interpret mode on CPU) ==")
+y_k = np.asarray(ops.crossbar_vmm_op(jnp.asarray(x), jnp.asarray(w), interpret=True))
+print(f"pallas == reference datapath: {np.array_equal(y_k, ref)}")
+
+print("\n== 5. Newton vs ISAAC (paper Table II suite) ==")
+res = en.evaluate_suite(wl.benchmark_suite())
+h = en.headline(res)
+print(f"power decrease:      {100*h['power_decrease']:.0f}%  (paper: 77%)")
+print(f"energy decrease:     {100*h['energy_decrease']:.0f}%  (paper: 51%)")
+print(f"throughput/area:     {h['throughput_per_area_x']:.2f}x (paper: 2.2x)")
+pj_i = np.mean([r['isaac'].pj_per_op for r in res.values()])
+pj_n = np.mean([r['newton (+strassen)'].pj_per_op for r in res.values()])
+print(f"energy/op:           {pj_i:.2f} -> {pj_n:.2f} pJ (paper: 1.8 -> 0.85; ideal 0.33)")

@@ -1,0 +1,40 @@
+"""End-to-end training driver (deliverable b): train a ~100M-class model for
+a few hundred steps with checkpoints, NaN-guards and deterministic resume.
+
+Default trains a width-reduced smollm for 300 steps on synthetic data; pass
+--full-360m to train the real 360M config (slow on CPU).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import sys
+
+sys.argv = [sys.argv[0]] + (sys.argv[1:] or [])
+
+from repro.launch import train as train_mod  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--full-360m", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    argv = [
+        "train",
+        "--arch", "smollm-360m",
+        "--steps", str(args.steps),
+        "--batch", "8",
+        "--seq", "256",
+        "--ckpt-dir", args.ckpt_dir,
+        "--ckpt-every", "100",
+    ]
+    if not args.full_360m:
+        argv.insert(2, "--reduced")
+    sys.argv = argv
+    train_mod.main()
+
+
+if __name__ == "__main__":
+    main()

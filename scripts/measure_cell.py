@@ -1,0 +1,78 @@
+"""Hillclimb helper: measure one (arch, shape) cell end to end.
+
+Runs the full-depth compile + the unrolled depth variants, then prints the
+three roofline terms, dominant bottleneck, HBM, and per-collective bytes.
+
+  PYTHONPATH=src python scripts/measure_cell.py --arch kimi-k2-1t-a32b --shape train_4k
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+import argparse
+import json
+
+from repro.configs import get_config
+from repro.launch import dryrun as dr
+from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS, model_flops_per_device
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--json", default=None, help="dump raw results here")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    reps_full = [s.repeats for s in cfg.stages]
+    n_stages = len(reps_full)
+
+    full = dr.run_cell(args.arch, args.shape, args.mesh)
+    variants = {}
+    if n_stages == 1:
+        for r in ("1", "2"):
+            variants[r] = dr.run_cell(args.arch, args.shape, args.mesh, stage_repeats=r)
+        b = {
+            k: variants["2"][k] - variants["1"][k]
+            for k in ("flops", "bytes_accessed")
+        }
+        b["coll"] = variants["2"]["collectives"]["total"] - variants["1"]["collectives"]["total"]
+        flops = variants["1"]["flops"] + (reps_full[0] - 1) * max(0, b["flops"])
+        byts = variants["1"]["bytes_accessed"] + (reps_full[0] - 1) * max(0, b["bytes_accessed"])
+        coll = variants["1"]["collectives"]["total"] + (reps_full[0] - 1) * max(0, b["coll"])
+    else:
+        for r in ("1,1", "2,1", "1,2"):
+            variants[r] = dr.run_cell(args.arch, args.shape, args.mesh, stage_repeats=r)
+        v = variants
+        flops = v["1,1"]["flops"] + (reps_full[0] - 1) * max(0, v["2,1"]["flops"] - v["1,1"]["flops"]) \
+            + (reps_full[1] - 1) * max(0, v["1,2"]["flops"] - v["1,1"]["flops"])
+        byts = v["1,1"]["bytes_accessed"] \
+            + (reps_full[0] - 1) * max(0, v["2,1"]["bytes_accessed"] - v["1,1"]["bytes_accessed"]) \
+            + (reps_full[1] - 1) * max(0, v["1,2"]["bytes_accessed"] - v["1,1"]["bytes_accessed"])
+        coll = v["1,1"]["collectives"]["total"] \
+            + (reps_full[0] - 1) * max(0, v["2,1"]["collectives"]["total"] - v["1,1"]["collectives"]["total"]) \
+            + (reps_full[1] - 1) * max(0, v["1,2"]["collectives"]["total"] - v["1,1"]["collectives"]["total"])
+
+    t_c, t_m, t_x = flops / PEAK_FLOPS, byts / HBM_BW, coll / LINK_BW
+    mem = full["memory"]
+    hbm = (mem["argument_size_in_bytes"] + mem["temp_size_in_bytes"]) / 2**30
+    mf = model_flops_per_device(args.arch, args.shape, full["n_devices"])
+    print(f"\n=== {args.arch} x {args.shape} on {args.mesh} ===")
+    print(f"compute    {t_c:.4e} s")
+    print(f"memory     {t_m:.4e} s")
+    print(f"collective {t_x:.4e} s")
+    dom = max((t_c, 'compute'), (t_m, 'memory'), (t_x, 'collective'))
+    print(f"dominant   {dom[1]}  (bound {dom[0]:.4e} s; roofline frac {t_c/dom[0]:.3f})")
+    print(f"useful/HLO {min(1.0, mf/max(flops,1)):.3f}   HBM {hbm:.1f} GiB/dev")
+    print(f"collectives (full-depth raw): "
+          f"{json.dumps({k: round(v/2**30, 3) for k, v in full['collectives'].items()})} GiB")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"full": full, "variants": variants,
+                       "corrected": {"flops": flops, "bytes": byts, "coll": coll}}, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,336 @@
+"""Analytic power / energy / area evaluation (paper §IV-V).
+
+Combines the mapper's allocation with per-component unit costs to produce,
+per benchmark: peak power, energy per sample, area, CE (GOPS/s/mm^2), PE
+(GOPS/W) — for ISAAC and every increment of the Newton technique stack.
+
+Calibration
+-----------
+One explicit scalar reconciles Table I's Kull ADC instance (3.1 mW) with the
+published ISAAC aggregates Newton validates against (1.8 pJ/op average; ADC
+~49% of chip power, §V): ``CAL.adc_power_scale = 0.65`` (the effective 2.0 mW
+ISAAC's table uses for the same ADC).  Everything else is computed
+bottom-up; the tests assert the paper's *relative* claims — which do not
+depend on this scalar — plus the absolute anchors within tolerance.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import adc as adc_mod
+from repro.core.arch import (
+    ADC_8B,
+    CROSSBAR_128,
+    ChipConfig,
+    DAC_ARRAY_128,
+    HYPER_TRANSPORT,
+    ISAAC_CHIP,
+    TileConfig,
+    newton_chip,
+)
+from repro.core.crossbar import CrossbarSpec, DEFAULT_SPEC
+from repro.core.karatsuba import karatsuba_cost
+from repro.core.mapper import MappingReport, map_network
+from repro.core.workloads import Network
+
+BYTES_PER_VAL = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    adc_power_scale: float = 1.0  # Table I Kull ADC used as-is
+    edram_pj_per_byte: float = 0.65  # 20.7 mW / (32 GB/s read stream), CACTI 6.5-ish
+    htree_pj_per_byte: float = 0.47  # short on-tile wires at 16-bit links, 32 nm
+    router_pj_per_byte: float = 1.3  # Orion 2.0, 32-flit 8-port at 1 GHz
+    ht_pj_per_byte: float = 1625.0  # 10.4 W / 6.4 GB/s HyperTransport
+    digital_pj_per_mac: float = 0.05  # shift-and-add + misc per 16b MAC
+    # Fraction of provisioned (peak) power drawn regardless of activity —
+    # eDRAM refresh, clock trees, ADC bias, repeater leakage.  Idle ADCs are
+    # clock-gated (peak power still provisions them; energy does not), so
+    # the static share is small.  This is how provisioning reductions
+    # (compact HTree, FC tiles) show up in *energy*, not just peak power.
+    static_frac: float = 0.05
+
+
+CAL = Calibration()
+
+
+@dataclasses.dataclass
+class EvalResult:
+    network: str
+    chip: str
+    mapping: MappingReport
+    area_mm2: float
+    peak_power_w: float
+    energy_per_sample_j: float
+    throughput_samples_s: float
+    ops_per_sample: float
+    breakdown: Dict[str, float]  # energy by component (J per sample)
+
+    @property
+    def pj_per_op(self) -> float:
+        return self.energy_per_sample_j * 1e12 / self.ops_per_sample
+
+    @property
+    def ce(self) -> float:  # GOPS / (s mm^2) on the allocated hardware
+        return self.ops_per_sample * self.throughput_samples_s / 1e9 / self.area_mm2
+
+    @property
+    def pe(self) -> float:  # GOPS / W
+        return self.ops_per_sample * self.throughput_samples_s / 1e9 / self.peak_power_w
+
+
+def _adc_energy_per_conversion_j(tile: TileConfig, cal: Calibration) -> float:
+    """Energy of one full-resolution conversion on this tile's ADC."""
+    ima = tile.ima
+    base = ADC_8B.power_w * cal.adc_power_scale / ima.adc_rate
+    # FC tiles run the ADC slower; SAR conversion energy is ~rate-independent
+    # (same capacitor charges, longer idle), so energy per conversion is flat,
+    # but leakage share rises slightly — ignored (conservative).
+    return base
+
+
+def evaluate(
+    net: Network,
+    chip: ChipConfig,
+    policy: str = "newton",
+    strassen: bool = False,
+    cal: Calibration = CAL,
+) -> EvalResult:
+    """Evaluate one network on one chip configuration."""
+    m = map_network(net, chip, policy=policy)
+    ima = chip.conv_tile.ima
+    spec = ima.xbar_spec
+
+    # --- ADC schedule / divide & conquer (Fig-5 unsigned schedule) ---
+    # Per-conversion energy from the schedule *histogram*: a conversion that
+    # resolves zero bits is fully gated (no CDAC charge either).
+    sched = adc_mod.adaptive_schedule(spec.replace(signed_weights=False), ima.adc_cfg)
+    sar = ima.sar
+    e_full = sar.energy_pj(spec.adc_bits)
+    bits_frac = float(np.mean([sar.energy_pj(b) for b in sched.ravel()])) / e_full
+    bits_frac *= e_full / (sar.energy_per_sample_j * 1e12)  # vs 8-bit Kull sample
+    conv_slots_frac = 1.0
+    if ima.karatsuba_levels:
+        c = karatsuba_cost(ima.karatsuba_levels, spec)
+        conv_slots_frac = c.adc_slots / (spec.n_iters * spec.n_slices)
+    if strassen:
+        conv_slots_frac *= 7.0 / 8.0  # paper-mode accounting (see strassen.py)
+
+    e_conv = _adc_energy_per_conversion_j(chip.conv_tile, cal)
+
+    # --- per-sample energies ---
+    # HTree repeaters are sized for the provisioned link width: energy per
+    # moved byte scales with it (ISAAC 39-bit private links vs Newton's
+    # 16-bit shared links after embedded shift-and-add / adaptive ADC).
+    out_bits = 23 if ima.compact_htree else spec.acc_bits
+    if ima.adc_cfg.mode == "adaptive":
+        out_bits = 16
+    htree_width_scale = (out_bits + (16 if ima.compact_htree else 32)) / 32.0
+
+    e_adc = e_dac = e_xbar = e_edram = e_htree = e_router = e_digital = 0.0
+    total_macs = 0
+    for lm in m.layers:
+        layer = lm.layer
+        groups = -(-layer.rows // spec.rows)
+        col_convs = layer.cols  # one ADC conversion per output column
+        d_and_c = conv_slots_frac
+        if strassen and layer.kind == "conv":
+            d_and_c *= 7.0 / 8.0  # Strassen applies to conv matmuls only
+        conversions = (
+            layer.pixels * col_convs * groups * spec.n_iters * spec.n_slices
+        ) * d_and_c
+        e_adc += conversions * e_conv * bits_frac
+        # crossbar + DAC active energy: arrays light up for the VMM duration
+        xbar_vmms = layer.pixels * groups * -(-layer.cols // spec.cols) * spec.n_slices
+        if strassen and layer.kind == "conv":
+            xbar_vmms *= 7.0 / 8.0
+        e_xbar += xbar_vmms * CROSSBAR_128.power_w * ima.vmm_time_s
+        e_dac += xbar_vmms * (DAC_ARRAY_128.power_w / 128 * spec.rows) * ima.vmm_time_s
+        # buffers: read rows once per pixel; write cols once per pixel
+        bytes_moved = layer.pixels * (layer.rows + layer.cols) * BYTES_PER_VAL
+        e_edram += bytes_moved * cal.edram_pj_per_byte * 1e-12
+        e_htree += bytes_moved * cal.htree_pj_per_byte * htree_width_scale * 1e-12
+        total_macs += layer.macs_per_sample
+
+    e_router = m.inter_tile_bytes_per_sample * cal.router_pj_per_byte * 1e-12
+    e_ht = (
+        m.inter_tile_bytes_per_sample * cal.ht_pj_per_byte * 1e-12 * max(0, m.chips - 1)
+        / max(1, m.chips)
+        * 0.1  # only layer-boundary traffic crossing chips (statically routed)
+    )
+    e_digital = total_macs * cal.digital_pj_per_mac * 1e-12
+
+    # --- peak power and area: provisioned tiles ---
+    conv_p = chip.conv_tile.total_power_w()
+    conv_a = chip.conv_tile.total_area_mm2()
+    fc_cfg = chip.fc_tile or chip.conv_tile
+    fc_p = fc_cfg.total_power_w()
+    fc_a = fc_cfg.total_area_mm2()
+    power = m.conv_tiles * conv_p + m.fc_tiles * fc_p + m.chips * HYPER_TRANSPORT.power_w
+    area = m.conv_tiles * conv_a + m.fc_tiles * fc_a + m.chips * HYPER_TRANSPORT.area_mm2
+
+    # Static share of provisioned power drawn for the whole sample period
+    # (refresh, clocks, bias; see Calibration.static_frac).
+    e_static = cal.static_frac * power / m.throughput_samples_s
+
+    breakdown = {
+        "adc": e_adc,
+        "crossbar": e_xbar,
+        "dac": e_dac,
+        "edram": e_edram,
+        "htree": e_htree,
+        "router": e_router,
+        "ht": e_ht,
+        "digital": e_digital,
+        "static": e_static,
+    }
+    energy = sum(breakdown.values())
+
+    return EvalResult(
+        network=net.name,
+        chip=chip.name,
+        mapping=m,
+        area_mm2=area,
+        peak_power_w=power,
+        energy_per_sample_j=energy,
+        throughput_samples_s=m.throughput_samples_s,
+        ops_per_sample=2.0 * total_macs,
+        breakdown=breakdown,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The incremental technique stack (Figs 11, 12, 14, 16, 17/18, 19, 20-23)
+# ---------------------------------------------------------------------------
+
+def technique_stack() -> List[tuple]:
+    """(label, chip, policy, strassen) in the paper's cumulative order."""
+    return [
+        ("isaac", ISAAC_CHIP, "isaac", False),
+        (
+            "+compact-htree",
+            newton_chip(compact=True, adaptive=False, karatsuba=0, small_buffers=False, fc_tiles=False),
+            "newton",
+            False,
+        ),
+        (
+            "+adaptive-adc",
+            newton_chip(compact=True, adaptive=True, karatsuba=0, small_buffers=False, fc_tiles=False),
+            "newton",
+            False,
+        ),
+        (
+            "+karatsuba",
+            newton_chip(compact=True, adaptive=True, karatsuba=1, small_buffers=False, fc_tiles=False),
+            "newton",
+            False,
+        ),
+        (
+            "+small-buffers",
+            newton_chip(compact=True, adaptive=True, karatsuba=1, small_buffers=True, fc_tiles=False),
+            "newton",
+            False,
+        ),
+        (
+            "+fc-tiles",
+            newton_chip(compact=True, adaptive=True, karatsuba=1, small_buffers=True, fc_tiles=True),
+            "newton",
+            False,
+        ),
+        (
+            "newton (+strassen)",
+            newton_chip(compact=True, adaptive=True, karatsuba=1, small_buffers=True, fc_tiles=True),
+            "newton",
+            True,
+        ),
+    ]
+
+
+def evaluate_suite(nets: List[Network]) -> Dict[str, Dict[str, EvalResult]]:
+    """All benchmarks x all technique increments."""
+    out: Dict[str, Dict[str, EvalResult]] = {}
+    for net in nets:
+        row = {}
+        for label, chip, policy, strassen in technique_stack():
+            row[label] = evaluate(net, chip, policy=policy, strassen=strassen)
+        out[net.name] = row
+    return out
+
+
+def headline(results: Dict[str, Dict[str, EvalResult]]) -> Dict[str, float]:
+    """Suite-average Newton-vs-ISAAC deltas (the 77% / 51% / 2.2x claims)."""
+    power_ratio, energy_ratio, ce_ratio = [], [], []
+    for net, row in results.items():
+        base = row["isaac"]
+        new = row["newton (+strassen)"]
+        power_ratio.append(new.peak_power_w / base.peak_power_w)
+        energy_ratio.append(new.energy_per_sample_j / base.energy_per_sample_j)
+        ce_ratio.append(new.ce / base.ce)
+    return {
+        "power_decrease": 1.0 - float(np.mean(power_ratio)),
+        "energy_decrease": 1.0 - float(np.mean(energy_ratio)),
+        "throughput_per_area_x": float(np.mean(ce_ratio)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Reference designs for Fig 20 / Fig 24 (digital baselines + TPU-1)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DigitalRef:
+    name: str
+    pj_per_op: float
+    ce_gops_mm2: float
+    pe_gops_w: float
+
+
+# Peak CE/PE from the respective papers as cited by Newton Fig 20.
+DADIANNAO_REF = DigitalRef("dadiannao", 3.5, 63.0, 286.0)
+ISAAC_REF = DigitalRef("isaac", 1.8, 479.0, 644.0)
+IDEAL_NEURON = DigitalRef("ideal", 0.33, float("nan"), float("nan"))
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUModel:
+    """TPU-1-like analytic model for the Fig 24 iso-area comparison.
+
+    65536 8-bit MACs at 700 MHz, 92 TOPS peak, 34 GB/s GDDR5 (the paper
+    models GDDR5 to lift the memory bound), 331 mm^2, 40 W TDP, 7 ms latency
+    target limiting batch size.
+    """
+
+    peak_tops: float = 92.0
+    mem_bw_gbs: float = 34.0
+    area_mm2: float = 331.0
+    power_w: float = 40.0
+    latency_target_s: float = 7e-3
+    # Measured CNN utilization of TPU-1 (Jouppi et al., ISCA'17: CNNs ran at
+    # ~14-22 TOPS of the 92 TOPS peak due to systolic fill/drain and
+    # activation traffic); the paper's "idle processing units".
+    cnn_utilization: float = 0.20
+
+    def _sample_time(self, net: Network, batch: int) -> float:
+        macs = net.total_macs
+        weight_bytes = net.total_weights  # int8 weights
+        t_compute = 2 * macs * batch / (self.peak_tops * 1e12 * self.cnn_utilization)
+        t_mem = weight_bytes / (self.mem_bw_gbs * 1e9)  # weights fetched once/batch
+        return max(t_compute, t_mem)
+
+    def throughput(self, net: Network, batch: int) -> float:
+        """Samples/s under the roofline of compute vs weight refetch."""
+        return batch / self._sample_time(net, batch)
+
+    def best_batch(self, net: Network, max_batch: int = 256) -> int:
+        best, arg = 0.0, 1
+        for b in (1, 2, 4, 8, 16, 32, 64, 128, 256):
+            if b > max_batch:
+                break
+            if self._sample_time(net, b) <= self.latency_target_s and self.throughput(net, b) > best:
+                best, arg = self.throughput(net, b), b
+        return arg

@@ -1,0 +1,142 @@
+"""Fixed-point formats and bit decompositions for the crossbar datapath.
+
+Newton/ISAAC represent a 16-bit weight as eight 2-bit cells ("slices") spread
+across eight crossbars, and stream a 16-bit input one bit per cycle through a
+1-bit DAC ("planes").  Everything here is pure jnp and bit-exact: recomposition
+round-trips are the identity, which the property tests assert.
+
+Conventions
+-----------
+* Inputs (activations) are unsigned ``Q(in_bits)`` integers (ISAAC assumes
+  post-ReLU activations; signed activations are offset-encoded by the caller).
+* Weights are signed and stored **biased**: ``w_biased = w + 2**(w_bits-1)``,
+  so every cell is a non-negative conductance.  The bias is removed digitally
+  after accumulation (see ``crossbar.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QFormat:
+    """Unsigned fixed-point format with ``bits`` total bits, ``frac`` fractional."""
+
+    bits: int = 16
+    frac: int = 0
+
+    @property
+    def max_int(self) -> int:
+        return (1 << self.bits) - 1
+
+    def quantize(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Real -> integer code (round-to-nearest, saturating)."""
+        scaled = jnp.round(x * (1 << self.frac))
+        return jnp.clip(scaled, 0, self.max_int).astype(jnp.int32)
+
+    def dequantize(self, q: jnp.ndarray) -> jnp.ndarray:
+        return q.astype(jnp.float32) / (1 << self.frac)
+
+
+@dataclasses.dataclass(frozen=True)
+class SignedQFormat:
+    """Signed two's-complement fixed point, stored biased for crossbar cells."""
+
+    bits: int = 16
+    frac: int = 0
+
+    @property
+    def bias(self) -> int:
+        return 1 << (self.bits - 1)
+
+    @property
+    def min_int(self) -> int:
+        return -(1 << (self.bits - 1))
+
+    @property
+    def max_int(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+    def quantize(self, x: jnp.ndarray) -> jnp.ndarray:
+        scaled = jnp.round(x * (1 << self.frac))
+        return jnp.clip(scaled, self.min_int, self.max_int).astype(jnp.int32)
+
+    def to_biased(self, q: jnp.ndarray) -> jnp.ndarray:
+        """Signed integer code -> biased unsigned cell code in [0, 2**bits)."""
+        return (q + self.bias).astype(jnp.int32)
+
+    def from_biased(self, b: jnp.ndarray) -> jnp.ndarray:
+        return (b - self.bias).astype(jnp.int32)
+
+    def dequantize(self, q: jnp.ndarray) -> jnp.ndarray:
+        return q.astype(jnp.float32) / (1 << self.frac)
+
+
+def bit_planes(x: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """Decompose unsigned integers into ``n_bits`` bit planes (LSB first).
+
+    Returns shape ``(n_bits,) + x.shape`` with plane ``t`` holding bit ``t``,
+    each entry in {0, 1}.
+    """
+    x = x.astype(jnp.int32)
+    shifts = jnp.arange(n_bits, dtype=jnp.int32).reshape((n_bits,) + (1,) * x.ndim)
+    return (x[None] >> shifts) & 1
+
+
+def from_bit_planes(planes: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`bit_planes`."""
+    n_bits = planes.shape[0]
+    weights = (1 << jnp.arange(n_bits, dtype=jnp.int32)).reshape(
+        (n_bits,) + (1,) * (planes.ndim - 1)
+    )
+    return jnp.sum(planes.astype(jnp.int32) * weights, axis=0)
+
+
+def cell_slices(w: jnp.ndarray, n_bits: int, cell_bits: int) -> jnp.ndarray:
+    """Decompose unsigned integers into ``ceil(n_bits/cell_bits)`` slices.
+
+    Slice ``s`` holds bits ``[s*cell_bits, (s+1)*cell_bits)`` (LSB first); each
+    entry lies in ``[0, 2**cell_bits)``.  Returns ``(n_slices,) + w.shape``.
+    """
+    n_slices = -(-n_bits // cell_bits)
+    w = w.astype(jnp.int32)
+    shifts = (cell_bits * jnp.arange(n_slices, dtype=jnp.int32)).reshape(
+        (n_slices,) + (1,) * w.ndim
+    )
+    mask = (1 << cell_bits) - 1
+    return (w[None] >> shifts) & mask
+
+
+def from_cell_slices(slices: jnp.ndarray, cell_bits: int) -> jnp.ndarray:
+    """Inverse of :func:`cell_slices`."""
+    n_slices = slices.shape[0]
+    weights = (1 << (cell_bits * jnp.arange(n_slices, dtype=jnp.int32))).reshape(
+        (n_slices,) + (1,) * (slices.ndim - 1)
+    )
+    return jnp.sum(slices.astype(jnp.int32) * weights, axis=0)
+
+
+def split_halves(v: jnp.ndarray, n_bits: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Split unsigned ``n_bits`` integers into (low, high) halves.
+
+    Used by Karatsuba: ``v = hi * 2**(n_bits//2) + lo``.
+    """
+    half = n_bits // 2
+    mask = (1 << half) - 1
+    v = v.astype(jnp.int32)
+    return v & mask, v >> half
+
+
+def round_shift_right(v: jnp.ndarray, shift: int) -> jnp.ndarray:
+    """Arithmetic right shift with round-half-up.
+
+    This is the "rounding mode to generate carries" the paper adopts from
+    Gupta et al. [11] when dropping LSBs.  Works on signed int32/int64.
+    """
+    if shift <= 0:
+        return v
+    half = jnp.asarray(1, v.dtype) << (shift - 1)
+    return (v + half) >> shift

@@ -1,0 +1,183 @@
+"""Karatsuba bit-level divide & conquer on the crossbar datapath (§III.A.1).
+
+The 16b x 16b product is decomposed into three narrower products that run on
+separate crossbars (Fig 3 / Fig 9):
+
+    W = 2^h W1 + W0,  X = 2^h X1 + X0        (h = 8)
+    WX = 2^2h W1X1 + 2^h [(W1+W0)(X1+X0) - W1X1 - W0X0] + W0X0
+
+* ``A = W1 X1`` and ``B = W0 X0`` are 8b x 8b products: 4 slices x 8
+  iterations each, run **in parallel** on the left crossbars of the IMA's 8
+  mats (paper Fig 9) — 8 ADCs busy for 8 iterations.
+* ``C = (W1+W0)(X1+X0)`` is a 9b x 9b product: 5 slices x 9 iterations on the
+  right crossbars of 5 mats — 5 ADCs busy for 9 iterations.
+
+ADC work drops from 8x16 = 128 conversion slots to 8x8 + 5x9 = 109 (-15%),
+at +1 iteration of latency (17 vs 16) — exactly the paper's numbers, which
+``karatsuba_stats`` reproduces and the benchmarks assert.
+
+The recombination is exact integer arithmetic (two-limb), so the result is
+bit-identical to the direct datapath — asserted by the property tests.
+Recursion (``levels=2``) splits A, B, C again; the paper finds one level is
+nearly as good as two and much simpler (Fig 13).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixedpoint as fxp
+from repro.core.crossbar import (
+    ConversionStats,
+    CrossbarSpec,
+    DEFAULT_SPEC,
+    crossbar_accumulate,
+    limb_add,
+    limb_from_int_shifted,
+    limb_normalize,
+    limb_sub,
+    requantize_exact_limbs,
+)
+
+
+def _sub_spec(spec: CrossbarSpec, in_bits: int, w_bits: int) -> CrossbarSpec:
+    return spec.replace(
+        input_bits=in_bits, weight_bits=w_bits, signed_weights=False
+    )
+
+
+def _accumulate_unsigned(x, w, spec: CrossbarSpec, in_bits: int, w_bits: int, levels: int):
+    """Exact limb accumulator of unsigned x @ w, with `levels` of Karatsuba."""
+    if levels == 0 or in_bits <= 2 or w_bits <= 2:
+        acc, _ = crossbar_accumulate(x, w, _sub_spec(spec, in_bits, w_bits))
+        return acc
+    hx = in_bits // 2
+    hw = w_bits // 2
+    # Symmetric split keeps the algebra simple; the paper splits both at n/2.
+    h = min(hx, hw)
+    x0, x1 = x & ((1 << h) - 1), x >> h
+    w0, w1 = w & ((1 << h) - 1), w >> h
+    in_hi_bits, w_hi_bits = in_bits - h, w_bits - h
+    A = _accumulate_unsigned(x1, w1, spec, in_hi_bits, w_hi_bits, levels - 1)
+    B = _accumulate_unsigned(x0, w0, spec, h, h, levels - 1)
+    C = _accumulate_unsigned(
+        x0 + x1, w0 + w1, spec, max(h, in_hi_bits) + 1, max(h, w_hi_bits) + 1, levels - 1
+    )
+    # WX = 2^2h A + 2^h (C - A - B) + B
+    mid = limb_sub(limb_sub(C, A), B)
+    total = limb_add(_limb_shift(A, 2 * h), limb_add(_limb_shift(mid, h), B))
+    return total
+
+
+def _limb_shift(acc, shift: int):
+    """Shift a normalized limb pair left by ``shift`` bits, exactly.
+
+    value = hi * 2^20 + lo; shifted = hi * 2^(20+shift) + lo * 2^shift.
+    Both pieces are re-decomposed through ``limb_from_int_shifted``; ``hi``
+    must satisfy |hi| < 2^30 / 2^shift after shifting into the hi limb, which
+    holds for all uses here (sub-products <= 2^26 before shifting).
+    """
+    if shift == 0:
+        return limb_normalize(*acc)
+    hi, lo = limb_normalize(*acc)
+    h1, l1 = limb_from_int_shifted(lo, shift)
+    # hi * 2^(20+shift): lands entirely in the hi limb
+    return limb_normalize(h1 + (hi << shift), l1)
+
+
+def karatsuba_vmm(
+    x_codes: jnp.ndarray,
+    w_codes: jnp.ndarray,
+    spec: CrossbarSpec = DEFAULT_SPEC,
+    levels: int = 1,
+) -> jnp.ndarray:
+    """Karatsuba crossbar VMM — bit-identical to ``crossbar.crossbar_vmm``.
+
+    x_codes: (..., K) unsigned input codes; w_codes: (K, N) signed codes if
+    ``spec.signed_weights``.  The biased weight code is split (the halves of a
+    biased code are themselves unsigned), and the bias is removed digitally at
+    the end exactly as in the direct datapath.
+    """
+    batch_shape = x_codes.shape[:-1]
+    K = x_codes.shape[-1]
+    x = x_codes.reshape(-1, K).astype(jnp.int32)
+    w = w_codes.astype(jnp.int32) + spec.weight_bias  # biased unsigned
+    acc = _accumulate_unsigned(x, w, spec, spec.input_bits, spec.weight_bits, levels)
+    if spec.signed_weights:
+        x_sum = jnp.sum(x, axis=-1)[:, None]
+        b = limb_from_int_shifted(x_sum, spec.weight_bits - 1)
+        acc = limb_sub(acc, (jnp.broadcast_to(b[0], acc[0].shape), jnp.broadcast_to(b[1], acc[1].shape)))
+    y = requantize_exact_limbs(acc, spec, signed_out=spec.signed_weights)
+    return y.reshape(batch_shape + (w_codes.shape[-1],))
+
+
+# ---------------------------------------------------------------------------
+# ADC-work accounting (paper Fig 9 mapping / Fig 13 comparison)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KaratsubaCost:
+    """Conversion-slot accounting for one 128-wide column group.
+
+    ``adc_slots``: (#ADC conversions) summed over the schedule — the paper's
+    "ADC use".  ``iterations``: pipeline latency in 100 ns crossbar cycles.
+    ``crossbars``: crossbars occupied per 128x128 weight tile.
+    """
+
+    adc_slots: int
+    iterations: int
+    crossbars: int
+
+    @property
+    def adc_reduction_vs_baseline(self) -> float:
+        base = DEFAULT_SPEC.n_iters * DEFAULT_SPEC.n_slices
+        return 1.0 - self.adc_slots / base
+
+
+def karatsuba_cost(levels: int, spec: CrossbarSpec = DEFAULT_SPEC) -> KaratsubaCost:
+    """Analytic ADC-slot cost of `levels` of divide & conquer (paper numbers).
+
+    level 0: 8 slices x 16 iters = 128 slots, 16 iters, 8 crossbars.
+    level 1: A,B (4 slices x 8 iters each, parallel) + C (5 x 9)
+             = 64 + 45 = 109 slots (-15%), 17 iters, 13 crossbars (8 mats x 2,
+               3 unused right crossbars — Fig 9).
+    level 2: paper: 8 ADCs busy 4 iters + 6 ADCs busy 10 iters = 92 slots
+             (-28%), 14 iters, 20 crossbars.
+    """
+    if levels == 0:
+        return KaratsubaCost(spec.n_iters * spec.n_slices, spec.n_iters, spec.n_slices)
+    if levels == 1:
+        a = _cost_unsigned(8, 8)  # slices x iters for 8b x 8b
+        c = _cost_unsigned(9, 9)
+        slots = 2 * a[0] + c[0]
+        iters = max(a[1], a[1]) + c[1]  # A,B parallel then C
+        return KaratsubaCost(slots, iters, 13)
+    if levels == 2:
+        # Paper §III.C: "8 ADCs busy in the first 4 iterations, 6 ADCs in the
+        # next 10 iterations" => 8*4 + 6*10 = 92 slots, 14 iterations,
+        # 20 crossbars per IMA.
+        return KaratsubaCost(92, 14, 20)
+    raise ValueError("levels must be 0, 1, or 2")
+
+
+def _cost_unsigned(in_bits: int, w_bits: int) -> Tuple[int, int]:
+    slices = -(-w_bits // DEFAULT_SPEC.cell_bits)
+    iters = -(-in_bits // DEFAULT_SPEC.dac_bits)
+    return slices * iters, iters
+
+
+def karatsuba_stats(
+    batch: int, k: int, n: int, spec: CrossbarSpec = DEFAULT_SPEC, levels: int = 1
+) -> ConversionStats:
+    """ADC work for one (batch, k) x (k, n) VMM under Karatsuba."""
+    cost = karatsuba_cost(levels, spec)
+    groups = -(-k // spec.rows)
+    convs = batch * n * groups * cost.adc_slots
+    return ConversionStats(
+        conversions=convs,
+        bit_decisions=convs * spec.adc_bits,
+        iterations=cost.iterations,
+    )

@@ -1,0 +1,202 @@
+"""Strassen's divide & conquer for crossbar matrix-matrix multiply (§III.A.2).
+
+When a conv layer performs a large matrix-matrix product (im2col'd patches x
+kernels), a 2x2 blocking lets 7 sub-products replace 8 (Fig 4); Newton maps
+the seven products P0..P6 onto 7 of a tile's 8 IMAs (Fig 8), freeing the 8th.
+
+Operand-side notes faithful to the hardware:
+
+* **Weight-side combinations** (e.g. W11 + W22) are precomputed when the
+  crossbars are programmed — free at inference time, but they widen the cell
+  codes by one bit (17-bit signed), i.e. one extra slice.
+* **Input-side combinations** (e.g. X11 + X21, X11 - X12 in the dual form)
+  are computed digitally on the fly by adders on the input HTree.  Negative
+  sums are handled by offset encoding with digital correction
+  (``crossbar.signed_vmm_limbs``) — the input-side analogue of ISAAC's
+  weight bias.
+
+We use the Winograd variant below (the classic 7-product scheme) with
+X = input matrix (rows = im2col'd vectors) and W = weight matrix:
+
+    P1 = (X11 + X22)(W11 + W22)   P5 = (X11 + X12) W22
+    P2 = (X21 + X22) W11          P6 = (X21 - X11)(W11 + W12)
+    P3 = X11 (W12 - W22)          P7 = (X12 - X22)(W21 + W22)
+    P4 = X22 (W21 - W11)
+    Y11 = P1 + P4 - P5 + P7       Y12 = P3 + P5
+    Y21 = P2 + P4                 Y22 = P1 - P2 + P3 + P6
+
+Recombination is exact limb arithmetic, so ``strassen_matmul`` is
+bit-identical to the direct datapath (property-tested).  ``strassen_cost``
+reproduces the paper's accounting: 7/8 of the ADC conversions per recursion
+level, at the price of one extra weight slice for the combined operands.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core.crossbar import (
+    ConversionStats,
+    CrossbarSpec,
+    DEFAULT_SPEC,
+    limb_add,
+    limb_normalize,
+    limb_sub,
+    requantize_exact_limbs,
+    signed_vmm_limbs,
+)
+
+
+def _pad_even(a: jnp.ndarray) -> jnp.ndarray:
+    pr = a.shape[0] % 2
+    pc = a.shape[1] % 2
+    if pr or pc:
+        a = jnp.pad(a, ((0, pr), (0, pc)))
+    return a
+
+
+def _blocks(a: jnp.ndarray):
+    m, n = a.shape
+    return (
+        a[: m // 2, : n // 2],
+        a[: m // 2, n // 2 :],
+        a[m // 2 :, : n // 2],
+        a[m // 2 :, n // 2 :],
+    )
+
+
+def strassen_matmul(
+    x_codes: jnp.ndarray,
+    w_codes: jnp.ndarray,
+    spec: CrossbarSpec = DEFAULT_SPEC,
+    levels: int = 1,
+) -> jnp.ndarray:
+    """Strassen crossbar matmul — bit-identical to the direct datapath.
+
+    x_codes: (M, K) unsigned input codes; w_codes: (K, N) signed weight codes.
+    Returns (M, N) int32 output codes with the standard scaling stage applied.
+    """
+    M, N = x_codes.shape[0], w_codes.shape[1]
+    acc = _strassen_acc(
+        x_codes.astype(jnp.int32),
+        w_codes.astype(jnp.int32),
+        spec,
+        levels,
+        in_bits=spec.input_bits,
+        in_signed=False,
+        w_bits=spec.weight_bits,
+    )
+    y = requantize_exact_limbs(acc, spec, signed_out=spec.signed_weights)
+    return y[:M, :N]
+
+
+def _strassen_acc(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    spec: CrossbarSpec,
+    levels: int,
+    in_bits: int,
+    in_signed: bool,
+    w_bits: int,
+):
+    """Exact limb accumulator of x @ w with `levels` of Strassen recursion."""
+    if levels == 0 or min(x.shape + w.shape) < 2:
+        sub = spec.replace(input_bits=in_bits, weight_bits=w_bits, signed_weights=True)
+        acc, _ = signed_vmm_limbs(x, w, sub, signed_inputs=in_signed)
+        return acc
+
+    m_orig, n_orig = x.shape[0], w.shape[1]
+    x = _pad_even(x)
+    w = _pad_even(w)
+    if x.shape[1] != w.shape[0]:  # K padded on one side only
+        k = max(x.shape[1], w.shape[0])
+        x = jnp.pad(x, ((0, 0), (0, k - x.shape[1])))
+        w = jnp.pad(w, ((0, k - w.shape[0]), (0, 0)))
+    X11, X12, X21, X22 = _blocks(x)
+    W11, W12, W21, W22 = _blocks(w)
+
+    ib, wb = in_bits + 1, w_bits + 1  # combined operands are one bit wider
+
+    def rec(xs, ws, xs_signed):
+        return _strassen_acc(xs, ws, spec, levels - 1, ib, xs_signed, wb)
+
+    P1 = rec(X11 + X22, W11 + W22, in_signed)
+    P2 = rec(X21 + X22, W11, in_signed)
+    P3 = rec(X11, W12 - W22, in_signed)
+    P4 = rec(X22, W21 - W11, in_signed)
+    P5 = rec(X11 + X12, W22, in_signed)
+    P6 = rec(X21 - X11, W11 + W12, True)
+    P7 = rec(X12 - X22, W21 + W22, True)
+
+    Y11 = limb_add(limb_sub(limb_add(P1, P4), P5), P7)
+    Y12 = limb_add(P3, P5)
+    Y21 = limb_add(P2, P4)
+    Y22 = limb_add(limb_sub(limb_add(P1, P3), P2), P6)
+
+    hi = jnp.block([[Y11[0], Y12[0]], [Y21[0], Y22[0]]])
+    lo = jnp.block([[Y11[1], Y12[1]], [Y21[1], Y22[1]]])
+    # Slice away padding so recursive callers reassemble clean blocks.
+    return limb_normalize(hi[:m_orig, :n_orig], lo[:m_orig, :n_orig])
+
+
+# ---------------------------------------------------------------------------
+# ADC-work accounting (Fig 8 / Fig 19)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StrassenCost:
+    adc_conversions: int  # per output tile, summed over the 7 products
+    imas_used: int  # of 8 in a tile (paper: frees 1 in 8)
+    extra_weight_slices: int  # widened combined operands
+
+
+def strassen_cost(
+    m: int,
+    k: int,
+    n: int,
+    spec: CrossbarSpec = DEFAULT_SPEC,
+    levels: int = 1,
+    widening: str = "paper",
+) -> StrassenCost:
+    """ADC conversions for an (m,k) x (k,n) matmul under Strassen.
+
+    Direct: m * n * ceil(k/rows) * T * S conversions.  One Strassen level
+    replaces 8 half-size products with 7.
+
+    ``widening`` selects the accounting:
+      * ``"paper"`` — sub-products run at the original 16b x 16b width (the
+        paper's implicit accounting behind its 4.5% energy gain: combined
+        operands reuse the 16-bit datapath, relying on headroom/saturation).
+        Conversion ratio = 7/8 per level.
+      * ``"exact"`` — combined operands widen by one bit per level (one extra
+        slice and one extra iteration), which our bit-exact implementation
+        actually requires.  This accounting shows Strassen is a net *loss*
+        in conversions (~ +5% for one level) unless width is held constant —
+        an analysis we surface in EXPERIMENTS.md.
+    """
+    T, S = spec.n_iters, spec.n_slices
+    if levels == 0:
+        groups = -(-k // spec.rows)
+        return StrassenCost(m * n * groups * T * S, 8, 0)
+    mh, kh, nh = -(-m // 2), -(-k // 2), -(-n // 2)
+    groups = -(-kh // spec.rows)
+    if widening == "paper":
+        per_product = mh * nh * groups * T * S
+        extra = 0
+    else:
+        per_product = mh * nh * groups * (T + levels) * (S + levels)
+        extra = levels
+    return StrassenCost(7 * per_product, 7, extra)
+
+
+def strassen_stats(
+    m: int, k: int, n: int, spec: CrossbarSpec = DEFAULT_SPEC, levels: int = 1
+) -> ConversionStats:
+    cost = strassen_cost(m, k, n, spec, levels)
+    return ConversionStats(
+        conversions=cost.adc_conversions,
+        bit_decisions=cost.adc_conversions * spec.adc_bits,
+        iterations=spec.n_iters + levels,
+    )

@@ -1,0 +1,7 @@
+from repro.data.pipeline import (  # noqa: F401
+    SyntheticLMDataset,
+    MemmapLMDataset,
+    EmbeddingStubDataset,
+    make_dataset,
+    prefetch,
+)

@@ -1,0 +1,74 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container / unit tests) the kernels run in interpret mode; on a
+real TPU they compile to Mosaic.  ``interpret`` is resolved automatically
+from the backend unless forced.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adc import ADCConfig, SAFE_ADAPTIVE
+from repro.core.crossbar import (
+    CrossbarSpec,
+    DEFAULT_SPEC,
+    QuantParams,
+    layer_scaled_spec,
+    quantize_input,
+    quantize_weight,
+)
+from repro.kernels.crossbar_vmm import crossbar_vmm_pallas
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def crossbar_vmm_op(
+    x_codes: jnp.ndarray,
+    w_codes: jnp.ndarray,
+    spec: CrossbarSpec = DEFAULT_SPEC,
+    adc_cfg: Optional[ADCConfig] = None,
+    fast: bool = False,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Bit-exact crossbar VMM on integer codes (Pallas)."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    return crossbar_vmm_pallas(
+        x_codes, w_codes, spec=spec, adc_cfg=adc_cfg, fast=fast, interpret=interpret
+    )
+
+
+def crossbar_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    spec: CrossbarSpec = DEFAULT_SPEC,
+    qp: Optional[QuantParams] = None,
+    adc_cfg: ADCConfig = SAFE_ADAPTIVE,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Float-in / float-out crossbar matmul with ISAAC W16A16 semantics.
+
+    Quantizes operands, runs the Pallas datapath (adaptive SAR schedule with
+    the provably-safe guard by default), dequantizes.  ``x`` must be
+    non-negative; ``qp`` scales must be provided for jit-stable use.
+    """
+    # Per-layer output scaling so the K-row accumulator fits the out window
+    spec = layer_scaled_spec(spec, x.shape[-1])
+    if qp is None:
+        # traced (jit-safe) dynamic quantization scales
+        x_scale = jnp.maximum(jnp.max(x), 1e-9) / ((1 << spec.input_bits) - 1)
+        w_scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-9) / (
+            (1 << (spec.weight_bits - 1)) - 1
+        )
+    else:
+        x_scale, w_scale = qp.x_scale, qp.w_scale
+    xq = quantize_input(x, spec, x_scale)
+    wq = quantize_weight(w, spec, w_scale)
+    yq = crossbar_vmm_op(xq, wq, spec, adc_cfg=adc_cfg, interpret=interpret)
+    return yq.astype(jnp.float32) * (x_scale * w_scale * (2.0 ** spec.drop_lsb))

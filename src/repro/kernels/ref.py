@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels (the bit-exact functional model
+from ``repro.core`` — itself validated against an int64 numpy reference)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adc as adc_mod
+from repro.core.crossbar import CrossbarSpec, DEFAULT_SPEC, crossbar_vmm
+
+
+def crossbar_vmm_ref(
+    x_codes: jnp.ndarray,
+    w_codes: jnp.ndarray,
+    spec: CrossbarSpec = DEFAULT_SPEC,
+    adc_cfg: Optional[adc_mod.ADCConfig] = None,
+) -> jnp.ndarray:
+    """Oracle for ``kernels.crossbar_vmm.crossbar_vmm_pallas``."""
+    transform = None
+    if adc_cfg is not None and adc_cfg.mode != "full":
+        transform = adc_mod.make_partial_transform(spec, adc_cfg)
+    return crossbar_vmm(x_codes, w_codes, spec, partial_transform=transform)
+
+
+def chunked_attention_ref(q, k, v, scale=None, causal=True):
+    """Oracle for the chunked/flash attention path: plain softmax attention.
+
+    q: (B, H, S, D); k, v: (B, Hkv, S, D) with H a multiple of Hkv.
+    """
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    if Hkv != H:
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if scale is None:
+        scale = D ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,314 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes and extract the roofline inputs.
+
+For each cell this script:
+  1. builds the production mesh (16x16 "data","model"; or 2x16x16 with "pod"),
+  2. constructs the step function for the shape kind:
+       train_4k    -> train_step (grads + optimizer update, remat'd scan)
+       prefill_32k -> prefill   (fills the KV/state caches)
+       decode_*    -> decode_step (one token against a full cache)
+  3. derives shardings for params / optimizer state / caches / batch from the
+     logical-axis trees (launch/sharding.py) — no arrays are materialized
+     (ShapeDtypeStruct end to end),
+  4. ``jit(...).lower(...).compile()`` and records
+     ``memory_analysis()`` (proves the layout fits),
+     ``cost_analysis()``   (FLOPs / bytes for the roofline),
+     collective byte counts parsed from the compiled HLO.
+
+``--stage-repeats`` compiles reduced-depth variants (e.g. 1,1 and 2,2) used
+by launch/roofline.py to undo XLA's count-while-body-once accounting.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-360m --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh pod --out-dir experiments/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ALL_ARCHS, SHAPES, get_config, shape_applicable
+from repro.configs.base import ModelConfig, ShapeSpec, StageSpec
+from repro.launch import sharding as shlib
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as model_lib
+from repro.models.layers import use_mesh
+from repro.optim import cosine_with_warmup, make_optimizer
+from repro.train.loop import make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def with_stage_repeats(cfg: ModelConfig, repeats) -> ModelConfig:
+    """Depth-reduced, *unrolled* variant for the cost extrapolation (XLA's
+    HloCostAnalysis counts a while body once, so the variants must place
+    every layer in the HLO)."""
+    stages = tuple(
+        StageSpec(kinds=s.kinds, repeats=r, moe=s.moe)
+        for s, r in zip(cfg.stages, repeats)
+    )
+    return dataclasses.replace(
+        cfg, stages=stages, n_layers=sum(s.n_layers for s in stages),
+        scan_layers=False,
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.frontend == "embed":
+            inputs = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        else:
+            inputs = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return {
+            "inputs": inputs,
+            "targets": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        if cfg.frontend == "embed":
+            return {"inputs": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)}
+        return {"inputs": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    # decode: one new token with a cache of seq_len
+    if cfg.frontend == "embed":
+        return {"inputs": jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16)}
+    return {"inputs": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-buffer bytes of every collective op in the compiled HLO.
+
+    ``-start`` variants are counted; their ``-done`` twins are skipped.
+    Returns bytes per collective kind plus 'total'.
+    """
+    out = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        head, _, rest = line.partition("=")
+        opm = re.search(r"\b([a-z0-9\-]+)\(", rest)
+        if not opm:
+            continue
+        op = opm.group(1)
+        if op.endswith("-start"):
+            op = op[: -len("-start")]
+        elif op.endswith("-done") or op.endswith("-update"):
+            continue
+        if op not in _COLLECTIVES:
+            continue
+        # result shape(s) live between '=' and the op name
+        result_part = rest[: opm.start(1)]
+        out[op] += _shape_bytes(result_part)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def build_step(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    """Returns (fn, example_args, in_shardings) ready for jit/lower."""
+    p_shapes, axes = model_lib.init_model(KEY, cfg, shape_only=True)
+    p_shard = shlib.param_shardings(p_shapes, axes, mesh, fsdp=cfg.fsdp)
+    specs = input_specs(cfg, shape)
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        opt = make_optimizer(cfg.optimizer, cosine_with_warmup(3e-4, 100, 10000))
+        step_fn = make_train_step(cfg, opt)
+        o_shapes = jax.eval_shape(opt.init, p_shapes)
+        o_shard = shlib.opt_state_shardings(cfg.optimizer, o_shapes, p_shard, mesh)
+        b_shard = shlib.batch_shardings(specs, mesh)
+        step_scalar = jax.ShapeDtypeStruct((), jnp.int32)
+        args = (p_shapes, o_shapes, step_scalar, specs)
+        in_sh = (p_shard, o_shard, None, b_shard)
+        # outputs: (params, opt, step, metrics); donation aliases params/opt
+        out_sh = (p_shard, o_shard, None, None)
+        return step_fn, args, in_sh, out_sh, (0, 1)
+
+    cache_shapes = jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, B, S, dtype=jnp.bfloat16)
+    )
+    c_axes = model_lib.cache_axes(cfg)
+    c_shard = shlib.cache_shardings(cache_shapes, c_axes, mesh)
+    b_shard = shlib.batch_shardings(specs, mesh)
+
+    if shape.kind == "prefill":
+        def fn(params, inputs, cache):
+            return model_lib.prefill(params, cfg, inputs, cache)
+
+        args = (p_shapes, specs["inputs"], cache_shapes)
+        in_sh = (p_shard, b_shard["inputs"], c_shard)
+        out_sh = (None, c_shard)  # (last_logits, cache)
+        return fn, args, in_sh, out_sh, (2,)
+
+    def fn(params, inputs, pos, cache):
+        return model_lib.decode_step(params, cfg, inputs, pos, cache)
+
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    args = (p_shapes, specs["inputs"], pos, cache_shapes)
+    in_sh = (p_shard, b_shard["inputs"], None, c_shard)
+    out_sh = (None, c_shard)
+    return fn, args, in_sh, out_sh, (3,)
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    mesh_kind: str,
+    stage_repeats: Optional[str] = None,
+    want_hlo: bool = True,
+) -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "stage_repeats": stage_repeats,
+        "status": "skipped",
+    }
+    if not shape_applicable(cfg, shape):
+        result["reason"] = (
+            "long_500k requires sub-quadratic attention; skipped for pure "
+            "full-attention archs (DESIGN.md §5)"
+        )
+        return result
+    if stage_repeats:
+        reps = [int(r) for r in stage_repeats.split(",")]
+        cfg = with_stage_repeats(cfg, reps)
+    if shape.kind == "decode" and cfg.layout_decode:
+        # serving layout: weights stationary (no FSDP gathers at decode)
+        cfg = dataclasses.replace(cfg, layout=cfg.layout_decode, fsdp=False)
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    from repro.models.layers import layout_overrides
+
+    with use_mesh(mesh, layout_overrides(cfg)), mesh:
+        # Donation is omitted: on the host backend it merely re-buckets the
+        # output buffers into "temp", obscuring comparisons.  Production jobs
+        # donate params/opt/caches, so reported peak = arguments + temp
+        # (outputs alias the donated arguments).
+        fn, args, in_sh, out_sh, _donate = build_step(cfg, shape, mesh)
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        mem_d = {}
+        for attr in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        ):
+            mem_d[attr] = int(getattr(mem, attr, 0) or 0)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        cost_d = {k: float(v) for k, v in cost.items() if np.isscalar(v)}
+        coll = collective_bytes(compiled.as_text()) if want_hlo else {}
+
+    result.update(
+        status="ok",
+        n_devices=int(np.prod(list(mesh.shape.values()))),
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        memory=mem_d,
+        flops=cost_d.get("flops", 0.0),
+        bytes_accessed=cost_d.get("bytes accessed", 0.0),
+        cost=cost_d,
+        collectives=coll,
+    )
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--stage-repeats", default=None, help="e.g. '1,1' for depth variants")
+    ap.add_argument("--all", action="store_true", help="run every (arch x shape)")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ALL_ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    for arch, shape in cells:
+        tag = f"{args.mesh}__{arch}__{shape}"
+        if args.stage_repeats:
+            tag += f"__reps{args.stage_repeats.replace(',', '-')}"
+        path = os.path.join(args.out_dir, tag + ".json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[dryrun] {tag}: exists, skipping")
+            continue
+        print(f"[dryrun] {tag}: start", flush=True)
+        try:
+            res = run_cell(arch, shape, args.mesh, args.stage_repeats)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            res = {
+                "arch": arch,
+                "shape": shape,
+                "mesh": args.mesh,
+                "stage_repeats": args.stage_repeats,
+                "status": "error",
+                "error": repr(e),
+                "traceback": traceback.format_exc()[-4000:],
+            }
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        print(
+            f"[dryrun] {tag}: {res['status']} "
+            f"(compile {res.get('compile_s', '-')}s, "
+            f"temp {res.get('memory', {}).get('temp_size_in_bytes', 0)/2**30:.2f} GiB)",
+            flush=True,
+        )
+
+
+if __name__ == "__main__":
+    main()

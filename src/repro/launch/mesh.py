@@ -1,0 +1,39 @@
+"""Device meshes.
+
+``make_production_mesh`` builds the deployment topology: a 16x16
+("data","model") pod, or 2x16x16 ("pod","data","model") for the two-pod
+configuration.  Defined as functions so importing this module never touches
+JAX device state (the dry-run sets the host-device-count flag first).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == need:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < need:
+        raise RuntimeError(
+            f"production mesh needs {need} devices, have {len(devices)} — "
+            "run under launch/dryrun.py (it forces 512 host devices)"
+        )
+    return Mesh(np.asarray(devices[:need]).reshape(shape), axes)
+
+
+def make_local_mesh(data: Optional[int] = None, model: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (tests, examples)."""
+    devices = jax.devices()
+    n = len(devices)
+    if data is None:
+        data = n // model
+    used = data * model
+    return Mesh(np.asarray(devices[:used]).reshape(data, model), ("data", "model"))

@@ -1,0 +1,215 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json and computes, per (arch x shape) on the
+single-pod mesh:
+
+  compute term    = HLO_FLOPs_corrected / peak_FLOPs          [s, per device]
+  memory term     = HLO_bytes_corrected / HBM_bw
+  collective term = collective_bytes_corrected / link_bw
+
+TPU v5e-class constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+cost_analysis numbers are per-device (SPMD program); XLA counts a while body
+once, so corrected totals are extrapolated from the depth-1/depth-2
+compiles: F_total = F(1) + sum_s (R_s - 1) * (F(1 with stage s at 2) - F(1)).
+
+MODEL_FLOPS uses the 6*N*D (train) / 2*N*D (inference) convention with
+N = active params; the ratio MODEL_FLOPS / HLO_FLOPs surfaces
+remat/attention/routing overheads (>1 is impossible; ~0.3 means 3x the
+minimal compute is being executed — see the per-cell notes).
+
+Usage:  PYTHONPATH=src python -m repro.launch.roofline \
+            [--dir experiments/dryrun] [--out experiments/roofline.json]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+from repro.configs import ALL_ARCHS, SHAPES, get_config, shape_applicable
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def _load(dirname: str) -> Dict[str, dict]:
+    out = {}
+    for path in glob.glob(os.path.join(dirname, "*.json")):
+        with open(path) as f:
+            out[os.path.basename(path)[: -len(".json")]] = json.load(f)
+    return out
+
+
+def _key(mesh, arch, shape, reps=None):
+    k = f"{mesh}__{arch}__{shape}"
+    if reps:
+        k += f"__reps{reps.replace(',', '-')}"
+    return k
+
+
+def model_flops_per_device(arch: str, shape_name: str, n_devices: int) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / n_devices
+
+
+def corrected_totals(data: Dict[str, dict], arch: str, shape: str) -> Optional[dict]:
+    """Undo while-loop count-once using the depth variants."""
+    cfg = get_config(arch)
+    full = data.get(_key("pod", arch, shape))
+    if not full or full.get("status") != "ok":
+        return None
+    reps_full = [s.repeats for s in cfg.stages]
+    n_stages = len(reps_full)
+    if n_stages == 1:
+        v1 = data.get(_key("pod", arch, shape, "1"))
+        v2 = data.get(_key("pod", arch, shape, "2"))
+        variants = [v1, v2]
+        if any(v is None or v.get("status") != "ok" for v in variants):
+            return dict(flops=full["flops"], bytes=full["bytes_accessed"],
+                        coll=full["collectives"]["total"], corrected=False)
+        bodies = {
+            "flops": [v2["flops"] - v1["flops"]],
+            "bytes": [v2["bytes_accessed"] - v1["bytes_accessed"]],
+            "coll": [v2["collectives"]["total"] - v1["collectives"]["total"]],
+        }
+        base = v1
+    else:
+        v11 = data.get(_key("pod", arch, shape, "1,1"))
+        v21 = data.get(_key("pod", arch, shape, "2,1"))
+        v12 = data.get(_key("pod", arch, shape, "1,2"))
+        variants = [v11, v21, v12]
+        if any(v is None or v.get("status") != "ok" for v in variants):
+            return dict(flops=full["flops"], bytes=full["bytes_accessed"],
+                        coll=full["collectives"]["total"], corrected=False)
+        bodies = {
+            "flops": [v21["flops"] - v11["flops"], v12["flops"] - v11["flops"]],
+            "bytes": [
+                v21["bytes_accessed"] - v11["bytes_accessed"],
+                v12["bytes_accessed"] - v11["bytes_accessed"],
+            ],
+            "coll": [
+                v21["collectives"]["total"] - v11["collectives"]["total"],
+                v12["collectives"]["total"] - v11["collectives"]["total"],
+            ],
+        }
+        base = v11
+
+    out = {}
+    for k, src in (("flops", "flops"), ("bytes", "bytes_accessed")):
+        total = base[src]
+        for body, r in zip(bodies[k], reps_full):
+            total += max(0.0, body) * (r - 1)
+        out[k] = total
+    total = base["collectives"]["total"]
+    for body, r in zip(bodies["coll"], reps_full):
+        total += max(0.0, body) * (r - 1)
+    out["coll"] = total
+    out["corrected"] = True
+    return out
+
+
+def analyze(dirname: str) -> dict:
+    data = _load(dirname)
+    cells = []
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        for shape_name, shape in SHAPES.items():
+            cell = {"arch": arch, "shape": shape_name}
+            if not shape_applicable(cfg, shape):
+                cell["status"] = "skipped (full attention @500k; DESIGN.md §5)"
+                cells.append(cell)
+                continue
+            full = data.get(_key("pod", arch, shape_name))
+            if not full or full.get("status") != "ok":
+                cell["status"] = (full or {}).get("status", "missing")
+                cell["error"] = (full or {}).get("error", "")[:200]
+                cells.append(cell)
+                continue
+            n_dev = full["n_devices"]
+            tot = corrected_totals(data, arch, shape_name)
+            t_compute = tot["flops"] / PEAK_FLOPS
+            t_memory = tot["bytes"] / HBM_BW
+            t_coll = tot["coll"] / LINK_BW
+            terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+            dominant = max(terms, key=terms.get)
+            mf = model_flops_per_device(arch, shape_name, n_dev)
+            mem = full["memory"]
+            hbm = (mem["argument_size_in_bytes"] + mem["temp_size_in_bytes"]) / 2**30
+            mp = data.get(_key("multipod", arch, shape_name), {})
+            cell.update(
+                status="ok",
+                corrected=tot["corrected"],
+                n_devices=n_dev,
+                compute_s=t_compute,
+                memory_s=t_memory,
+                collective_s=t_coll,
+                dominant=dominant,
+                step_time_bound_s=max(terms.values()),
+                roofline_fraction=t_compute / max(terms.values()),
+                model_flops_per_dev=mf,
+                hlo_flops_per_dev=tot["flops"],
+                useful_flops_ratio=min(1.0, mf / max(tot["flops"], 1.0)),
+                hbm_gib=hbm,
+                multipod_status=mp.get("status", "missing"),
+                note=_note(dominant, cfg, shape),
+            )
+            cells.append(cell)
+    return {"cells": cells}
+
+
+def _note(dominant: str, cfg, shape) -> str:
+    if dominant == "compute":
+        return "compute-bound: gains need less recompute (remat policy) or fewer wasted flops (causal-chunk skipping, MoE capacity)"
+    if dominant == "memory":
+        if shape.kind == "decode":
+            return "memory-bound (weight/cache streaming — inherent to batch-limited decode); gains need quantization or more batch"
+        return "memory-bound: fuse/reuse activations, larger per-step arithmetic intensity"
+    return "collective-bound: resharding traffic dominates; gains need sharding-axis changes or comm/compute overlap"
+
+
+def to_markdown(result: dict) -> str:
+    lines = [
+        "| arch | shape | dom. | compute s | memory s | collective s | roofline frac | useful/HLO | HBM GiB/dev | multipod |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in result["cells"]:
+        if c.get("status") != "ok":
+            lines.append(f"| {c['arch']} | {c['shape']} | — | — | — | — | — | — | — | {c['status'][:40]} |")
+            continue
+        lines.append(
+            "| {arch} | {shape} | {dominant} | {compute_s:.3e} | {memory_s:.3e} | "
+            "{collective_s:.3e} | {roofline_fraction:.2f} | {useful_flops_ratio:.2f} | "
+            "{hbm_gib:.1f} | {multipod_status} |".format(**c)
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--out", default="experiments/roofline.json")
+    args = ap.parse_args()
+    result = analyze(args.dir)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(to_markdown(result))
+    ok = [c for c in result["cells"] if c.get("status") == "ok"]
+    print(f"\n{len(ok)} ok cells; dominant terms:",
+          {d: sum(1 for c in ok if c['dominant'] == d) for d in ('compute', 'memory', 'collective')})
+
+
+if __name__ == "__main__":
+    main()

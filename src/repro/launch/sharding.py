@@ -1,0 +1,167 @@
+"""Sharding layout construction for params, optimizer state, caches, inputs.
+
+Everything is derived from the logical-axis trees collected at init
+(``models.layers.Init``) plus shape-aware rules for caches (batch-sharded
+when the batch divides the DP extent, sequence-sharded otherwise — the
+long_500k path) — so one code path serves the 1-device test mesh, the 16x16
+pod and the 2x16x16 multi-pod mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _resolve_axis, named_sharding_tree
+
+
+def dp_axes(mesh: Mesh):
+    """Batch axes under the active logical overrides (layers.use_mesh)."""
+    resolved = _resolve_axis("batch", mesh)
+    if resolved is None:
+        return ()
+    return resolved if isinstance(resolved, tuple) else (resolved,)
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)])) if dp_axes(mesh) else 1
+
+
+def model_size(mesh: Mesh) -> int:
+    return int(mesh.shape.get("model", 1))
+
+
+def param_shardings(params_shapes, axes_tree, mesh: Mesh, fsdp: bool = False):
+    """Base TP shardings from logical axes; with ``fsdp`` additionally shard
+    each large leaf's biggest unsharded dim over "data" (ZeRO-3; per-pod —
+    cross-pod per-layer all-gathers would swamp the pod links)."""
+    base = named_sharding_tree(params_shapes, axes_tree, mesh)
+    if not fsdp or "data" not in mesh.axis_names:
+        return base
+    dsize = int(mesh.shape["data"])
+
+    def add_fsdp(shape_struct, sh: NamedSharding):
+        shape = shape_struct.shape
+        if int(np.prod(shape)) < (1 << 22):  # < 4M elements: keep replicated
+            return sh
+        spec = list(sh.spec) + [None] * (len(shape) - len(sh.spec))
+        cands = sorted(
+            (d for d in range(len(shape)) if spec[d] is None and shape[d] % dsize == 0),
+            key=lambda d: -shape[d],
+        )
+        if cands:
+            spec[cands[0]] = "data"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(
+        add_fsdp, params_shapes, base, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+def opt_state_shardings(opt_name: str, state_shapes, param_shardings_tree, mesh: Mesh):
+    """Optimizer state mirrors its parameter's sharding.
+
+    adamw: m/v have the param's shape -> same sharding.  adafactor: vr drops
+    the last dim, vc the second-to-last -> drop that entry of the spec.
+    Scalars/vectors fall back to replicated when shapes do not divide.
+    """
+
+    def like(shape_struct, pshard: NamedSharding):
+        spec = list(pshard.spec) + [None] * 8
+        shape = shape_struct.shape
+        if len(shape) == len(pshard.spec):
+            take = list(pshard.spec)
+        elif len(shape) == len(pshard.spec) - 1:
+            take = list(pshard.spec)[:-1]  # vr: dropped last dim
+        else:
+            take = [None] * len(shape)
+        fixed = []
+        for dim, ax in zip(shape, take):
+            if ax is None:
+                fixed.append(None)
+                continue
+            size = int(np.prod([mesh.shape[a] for a in (ax if isinstance(ax, tuple) else (ax,))]))
+            fixed.append(ax if dim % size == 0 else None)
+        return NamedSharding(mesh, P(*fixed))
+
+    if opt_name == "adamw":
+        return {
+            "m": jax.tree.map(like, state_shapes["m"], param_shardings_tree),
+            "v": jax.tree.map(like, state_shapes["v"], param_shardings_tree),
+        }
+    if opt_name == "adafactor":
+
+        def acc_like(acc_shapes, pshard):
+            return {k: like(v, pshard) for k, v in acc_shapes.items()}
+
+        return {
+            "acc": jax.tree.map(
+                acc_like,
+                state_shapes["acc"],
+                param_shardings_tree,
+                is_leaf=lambda x: isinstance(x, dict) and ("v" in x or "vr" in x),
+            )
+        }
+    if opt_name == "sgd":
+        return {"mu": jax.tree.map(like, state_shapes["mu"], param_shardings_tree)}
+    raise ValueError(opt_name)
+
+
+def batch_shardings(batch_shapes, mesh: Mesh):
+    """Input batches: leading dim over the batch axes (largest dividing
+    prefix — e.g. global batch 32 on a 256-way pure-DP layout shards 32
+    ways and replicates the rest)."""
+    from repro.models.layers import dividing_entry
+
+    axes = dp_axes(mesh)
+
+    def one(s):
+        if axes and s.shape:
+            entry = dividing_entry(s.shape[0], axes, mesh)
+            if entry is not None:
+                return NamedSharding(mesh, P(entry, *([None] * (len(s.shape) - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_shardings(cache_shapes, cache_axes_tree, mesh: Mesh):
+    """Resolve the explicit cache logical axes (models.model.cache_axes).
+
+    cache_batch -> DP axes when the batch divides; cache_seq -> DP axes when
+    the batch was NOT shardable (long_500k); kv_heads/heads/d_inner ->
+    "model" when divisible.
+    """
+    from repro.models.layers import dividing_entry
+
+    dpx = dp_axes(mesh)
+    dp = dp_size(mesh)
+
+    def one(s, axes):
+        shape = s.shape
+        spec: list = [None] * len(shape)
+        batch_sharded = False
+        for d, (dim, ax) in enumerate(zip(shape, axes)):
+            if ax == "cache_batch" and dp > 1 and dim > 1:
+                entry = dividing_entry(dim, dpx, mesh)
+                if entry is not None:
+                    spec[d] = entry
+                    batch_sharded = True
+        for d, (dim, ax) in enumerate(zip(shape, axes)):
+            if ax == "cache_seq" and not batch_sharded and dp > 1 and dim % dp == 0:
+                spec[d] = dpx
+            elif ax in ("kv_heads", "heads", "d_inner"):
+                resolved = _resolve_axis(ax, mesh)
+                if resolved is not None:
+                    sz = int(np.prod([mesh.shape[a] for a in
+                                      (resolved if isinstance(resolved, tuple) else (resolved,))]))
+                    if sz > 1 and dim % sz == 0:
+                        spec[d] = resolved
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(
+        one, cache_shapes, cache_axes_tree, is_leaf=lambda x: isinstance(x, tuple)
+    )

@@ -1,0 +1,81 @@
+"""Training launcher.
+
+Runs real training (synthetic or memmap data) on whatever devices exist,
+with the same sharding machinery the production mesh uses.  Example — the
+(b) deliverable's end-to-end driver, ~100M-class model for a few hundred
+steps:
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+      --reduced --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Fault-tolerance in action: re-running the same command resumes from the
+latest checkpoint (deterministic data => identical continuation); NaN steps
+are skipped; straggler steps are flagged.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import reduced as reduced_cfg
+from repro.data import make_dataset
+from repro.launch import sharding as shlib
+from repro.launch.mesh import make_local_mesh
+from repro.models import model as model_lib
+from repro.models.layers import use_mesh
+from repro.optim import cosine_with_warmup, make_optimizer
+from repro.train import TrainLoop, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", help="smoke-size config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--data", default=None, help="memmap token file (int32)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_cfg(cfg)
+    mesh = make_local_mesh(model=args.model_parallel)
+    print(f"[train] arch={cfg.name} params={cfg.param_count()/1e6:.1f}M mesh={dict(mesh.shape)}")
+
+    with use_mesh(mesh), mesh:
+        params, axes = model_lib.init_model(jax.random.PRNGKey(args.seed), cfg)
+        p_shard = shlib.param_shardings(
+            jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params),
+            axes, mesh, fsdp=cfg.fsdp,
+        )
+        params = jax.tree.map(jax.device_put, params, p_shard)
+
+        opt = make_optimizer(
+            cfg.optimizer, cosine_with_warmup(args.lr, args.steps // 10 + 1, args.steps)
+        )
+        opt_state = opt.init(params)
+        step_fn = jax.jit(make_train_step(cfg, opt, microbatches=args.microbatches),
+                          donate_argnums=(0, 1))
+
+        ds = make_dataset(cfg, args.seq, args.batch, seed=args.seed, path=args.data)
+        loop = TrainLoop(
+            cfg, step_fn, ds,
+            ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, log_every=10,
+        )
+        params, opt_state, start = loop.maybe_resume(params, opt_state)
+        params, opt_state = loop.run(params, opt_state, args.steps, start_step=start)
+    print("[train] done")
+
+
+if __name__ == "__main__":
+    main()

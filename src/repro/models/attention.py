@@ -1,0 +1,339 @@
+"""Attention variants: GQA (dense + q-chunked), sliding-window local,
+softcapped (gemma2), and absorbed multi-head latent attention (MLA,
+deepseek-v2) — with KV caches for prefill/decode serving.
+
+Memory strategy: training/prefill attention scans over query chunks
+(``Q_CHUNK``), bounding the live score tensor to (B, qc, H, S) regardless of
+sequence length; GQA grouping is kept inside the einsum so KV heads are
+never materialized repeated.  MLA uses the *absorbed* form — scores are
+computed directly against the latent cache, so per-head K/V are never
+materialized (this is what makes deepseek-v2 prefill_32k fit).
+
+Cache sharding: ``shard_cache`` shards the batch dim over ("pod","data")
+when it divides, otherwise (long_500k, batch=1) shards the cache *sequence*
+dim — decode attention then reduces over a sharded axis and XLA inserts the
+softmax-stable all-reduces.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (
+    Init,
+    apply_rope,
+    crossbar_linear,
+    current_mesh,
+    pspec,
+    shard,
+    softcap,
+)
+
+Q_CHUNK = 256  # bounds live scores at (B, 256, H, S); see EXPERIMENTS.md §Perf
+NEG_INF = -2.3819763e38  # most-negative bf16-representable-ish
+
+
+def shard_cache(x: jnp.ndarray) -> jnp.ndarray:
+    """Shard (B, S, ...) caches: batch over ("pod","data") when divisible,
+    else sequence (long-context SP)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    from repro.models.layers import _resolve_axis, dividing_entry
+
+    resolved = _resolve_axis("batch", mesh)
+    dp_axes = () if resolved is None else (
+        resolved if isinstance(resolved, tuple) else (resolved,)
+    )
+    dp = int(np.prod([mesh.shape[a] for a in dp_axes])) if dp_axes else 1
+    rest = [None] * (x.ndim - 2)
+    b_entry = dividing_entry(x.shape[0], dp_axes, mesh) if dp > 1 and x.shape[0] > 1 else None
+    if b_entry is not None:
+        spec = P(b_entry, None, *rest)
+    elif dp > 1 and x.shape[1] % dp == 0:
+        spec = P(None, dp_axes, *rest)
+    else:
+        spec = P(None, None, *rest)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_attention(ini: Init, cfg: ModelConfig):
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.kv_lora_rank:
+        ini.param("wq", (d, h * (dh + cfg.qk_rope_dim)), ("embed", "heads"))
+        ini.param("w_kv_down", (d, cfg.kv_lora_rank + cfg.qk_rope_dim), ("embed", None))
+        ini.param("w_uk", (cfg.kv_lora_rank, h, dh), (None, "heads", None))
+        ini.param("w_uv", (cfg.kv_lora_rank, h, dh), (None, "heads", None))
+        ini.param("wo", (h * dh, d), ("heads", "embed"))
+    else:
+        ini.param("wq", (d, h * dh), ("embed", "heads"))
+        ini.param("wk", (d, kv * dh), ("embed", "kv_heads"))
+        ini.param("wv", (d, kv * dh), ("embed", "kv_heads"))
+        ini.param("wo", (h * dh, d), ("heads", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# GQA core
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k):
+    """q: (B, qc, G, R, dh); k: (B, S, G, dh) -> (B, qc, G, R, S)."""
+    return jnp.einsum("bqgrd,bsgd->bqgrs", q, k, preferred_element_type=jnp.float32)
+
+
+def _gqa_out(p, v):
+    """p: (B, qc, G, R, S); v: (B, S, G, dh) -> (B, qc, G, R, dh)."""
+    return jnp.einsum("bqgrs,bsgd->bqgrd", p, v.astype(p.dtype))
+
+
+def _mask(pos_q, pos_k, window: int):
+    m = pos_k[None, :] <= pos_q[:, None]
+    if window:
+        m &= pos_k[None, :] > (pos_q[:, None] - window)
+    return m
+
+
+def gqa_attention(
+    q: jnp.ndarray,  # (B, S, H, dh)
+    k: jnp.ndarray,  # (B, Sk, KV, dh)
+    v: jnp.ndarray,
+    *,
+    scale: float,
+    window: int = 0,
+    attn_cap: float = 0.0,
+    q_offset: int = 0,
+    chunk: int = Q_CHUNK,
+) -> jnp.ndarray:
+    B, S, H, dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G, R = KV, H // KV
+    qg = q.reshape(B, S, G, R, dh)
+    pos_k = jnp.arange(Sk)
+
+    def block(q_blk, start):
+        pos_q = q_offset + start + jnp.arange(q_blk.shape[1])
+        s = _gqa_scores(q_blk, k) * scale
+        if attn_cap:
+            s = softcap(s, attn_cap)
+        m = _mask(pos_q, pos_k, window)
+        s = jnp.where(m[None, :, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return _gqa_out(p, v)
+
+    if S <= chunk:
+        out = block(qg, 0)
+    else:
+        nc = S // chunk
+        assert S % chunk == 0, (S, chunk)
+        qc = qg.reshape(B, nc, chunk, G, R, dh).transpose(1, 0, 2, 3, 4, 5)
+
+        # checkpoint each chunk: without this the scan's backward saves every
+        # chunk's (B, qc, H, S) score tensor simultaneously (flash-attention
+        # memory discipline, rematerialized per chunk)
+        def body(_, inp):
+            q_blk, idx = inp
+            return None, jax.checkpoint(block)(q_blk, idx * chunk)
+
+        _, outs = jax.lax.scan(body, None, (qc, jnp.arange(nc)))
+        out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, G, R, dh)
+    return out.reshape(B, S, H, dh).astype(q.dtype)
+
+
+def decode_attention(q, k, v, pos, *, scale, window=0, attn_cap=0.0):
+    """Single-position decode: q (B, 1, H, dh) against full cache (B, S, KV, dh).
+
+    ``pos`` is the index of the newest token — scalar, or (B,) for
+    continuous batching (each slot at its own position); cache entries
+    beyond a slot's position are masked.
+    """
+    B, _, H, dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G, R = KV, H // KV
+    qg = q.reshape(B, 1, G, R, dh)
+    s = _gqa_scores(qg, k) * scale  # (B,1,G,R,S)
+    if attn_cap:
+        s = softcap(s, attn_cap)
+    pos_k = jnp.arange(Sk)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))  # scalar or per-slot
+    m = pos_k[None, :] <= pos_b[:, None]
+    if window:
+        m &= pos_k[None, :] > (pos_b[:, None] - window)
+    s = jnp.where(m[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = _gqa_out(p, v)
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+def _cache_write(cache: jnp.ndarray, new: jnp.ndarray, pos) -> jnp.ndarray:
+    """Write one decode step into the cache at ``pos`` (scalar, or (B,) for
+    per-slot positions in continuous batching)."""
+    new = new.astype(cache.dtype)
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        start = (0, pos) + (0,) * (cache.ndim - 2)
+        return jax.lax.dynamic_update_slice(cache, new, start)
+    b = jnp.arange(cache.shape[0])
+    return cache.at[b, pos].set(new[:, 0])
+
+
+# ---------------------------------------------------------------------------
+# Attention block (pre-norm handled by caller); returns (y, new_cache)
+# ---------------------------------------------------------------------------
+
+def attention_block(
+    params,
+    x: jnp.ndarray,  # (B, S, D)
+    cfg: ModelConfig,
+    kind: str,  # attn | attn_local | attn_global
+    positions: jnp.ndarray,  # (S,) absolute positions
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    decode_pos: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    if cfg.kv_lora_rank:
+        return _mla_block(params, x, cfg, positions, cache, decode_pos)
+    B, S, D = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    window = cfg.sliding_window if kind == "attn_local" else 0
+    scale = cfg.attn_scale if cfg.attn_scale else dh**-0.5
+
+    q = crossbar_linear(x, params["wq"]).reshape(B, S, H, dh)
+    k = crossbar_linear(x, params["wk"]).reshape(B, S, KV, dh)
+    v = crossbar_linear(x, params["wv"]).reshape(B, S, KV, dh)
+    q = shard(q, "batch", None, "heads", None)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is None:
+        out = gqa_attention(q, k, v, scale=scale, window=window, attn_cap=cfg.attn_softcap)
+    elif decode_pos is None:
+        # prefill: attend within the prompt and return the filled cache
+        out = gqa_attention(q, k, v, scale=scale, window=window, attn_cap=cfg.attn_softcap)
+        kc = shard_cache(jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)))
+        vc = shard_cache(jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)))
+        new_cache = {"k": kc, "v": vc}
+    else:
+        kc = shard_cache(_cache_write(cache["k"], k, decode_pos))
+        vc = shard_cache(_cache_write(cache["v"], v, decode_pos))
+        out = decode_attention(
+            q, kc, vc, decode_pos, scale=scale, window=window, attn_cap=cfg.attn_softcap
+        )
+        new_cache = {"k": kc, "v": vc}
+
+    y = crossbar_linear(out.reshape(B, S, H * dh), params["wo"])
+    return shard(y, "batch", None, None), new_cache
+
+
+def init_attention_cache(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+    if cfg.kv_lora_rank:
+        return {
+            "latent": jnp.zeros((batch, seq, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, seq, cfg.qk_rope_dim), dtype),
+        }
+    return {
+        "k": jnp.zeros((batch, seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2) — absorbed form
+# ---------------------------------------------------------------------------
+
+def _mla_block(params, x, cfg: ModelConfig, positions, cache, decode_pos):
+    B, S, D = x.shape
+    H, dh, rope_d, lora = cfg.n_heads, cfg.head_dim, cfg.qk_rope_dim, cfg.kv_lora_rank
+    scale = (dh + rope_d) ** -0.5
+
+    q = crossbar_linear(x, params["wq"]).reshape(B, S, H, dh + rope_d)
+    q = shard(q, "batch", None, "heads", None)
+    q_nope, q_rope = q[..., :dh], q[..., dh:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kvd = crossbar_linear(x, params["w_kv_down"])  # (B, S, lora + rope)
+    latent, k_rope = kvd[..., :lora], kvd[..., lora:]
+    k_rope = apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+
+    if cache is not None:
+        lc_dtype = cache["latent"].dtype
+        if decode_pos is None:
+            latent_c = jax.lax.dynamic_update_slice(
+                cache["latent"], latent.astype(lc_dtype), (0, 0, 0)
+            )
+            rope_c = jax.lax.dynamic_update_slice(
+                cache["k_rope"], k_rope.astype(lc_dtype), (0, 0, 0)
+            )
+        else:
+            latent_c = _cache_write(cache["latent"], latent, decode_pos)
+            rope_c = _cache_write(cache["k_rope"], k_rope, decode_pos)
+        latent_c = shard_cache(latent_c)
+        rope_c = shard_cache(rope_c)
+        new_cache = {"latent": latent_c, "k_rope": rope_c}
+        latent_k, rope_k = latent_c, rope_c
+        Sk = latent_c.shape[1]
+    else:
+        new_cache = None
+        latent_k, rope_k = latent, k_rope
+        Sk = S
+
+    # Absorb W_uk into the query: q_abs (B, S, H, lora)
+    q_abs = jnp.einsum("bshd,lhd->bshl", q_nope, params["w_uk"])
+
+    pos_k = jnp.arange(Sk)
+
+    def block(q_abs_blk, q_rope_blk, start, single_pos=None):
+        # bf16 operands + f32 accumulation: no f32 copy of the latent cache
+        # (halves decode cache-read bytes; MXU-native on TPU)
+        s = jnp.einsum(
+            "bqhl,bsl->bqhs", q_abs_blk.astype(latent_k.dtype), latent_k,
+            preferred_element_type=jnp.float32,
+        )
+        s = s + jnp.einsum(
+            "bqhr,bsr->bqhs", q_rope_blk.astype(rope_k.dtype), rope_k,
+            preferred_element_type=jnp.float32,
+        )
+        s = s * scale
+        if single_pos is None:
+            pos_q = start + jnp.arange(q_abs_blk.shape[1])
+            m = pos_k[None, :] <= pos_q[:, None]
+            s = jnp.where(m[None, :, None, :], s, NEG_INF)
+        else:
+            pos_b = jnp.broadcast_to(jnp.asarray(single_pos), (B,))
+            m = pos_k[None, :] <= pos_b[:, None]
+            s = jnp.where(m[:, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        # attend over the latent, then up-project per head
+        ctx = jnp.einsum(
+            "bqhs,bsl->bqhl", p.astype(latent_k.dtype), latent_k,
+            preferred_element_type=jnp.float32,
+        )
+        return jnp.einsum("bqhl,lhd->bqhd", ctx, params["w_uv"].astype(jnp.float32))
+
+    if decode_pos is not None:
+        out = block(q_abs, q_rope, 0, single_pos=decode_pos)
+    elif S <= Q_CHUNK:
+        out = block(q_abs, q_rope, 0)
+    else:
+        nc = S // Q_CHUNK
+        assert S % Q_CHUNK == 0
+        qa = q_abs.reshape(B, nc, Q_CHUNK, H, lora).transpose(1, 0, 2, 3, 4)
+        qr = q_rope.reshape(B, nc, Q_CHUNK, H, rope_d).transpose(1, 0, 2, 3, 4)
+
+        def body(_, inp):
+            qa_b, qr_b, idx = inp
+            return None, jax.checkpoint(block)(qa_b, qr_b, idx * Q_CHUNK)
+
+        _, outs = jax.lax.scan(body, None, (qa, qr, jnp.arange(nc)))
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+
+    y = crossbar_linear(out.reshape(B, S, H * dh).astype(x.dtype), params["wo"])
+    return shard(y, "batch", None, None), new_cache

@@ -1,0 +1,361 @@
+"""Core layers: parameter system, sharding helpers, norms, MLPs, RoPE,
+embeddings — pure functional JAX (no flax), pytree params.
+
+Parameter/sharding system
+-------------------------
+``Init`` collects parameters and their *logical axes* simultaneously; logical
+axes map to mesh axes via ``LOGICAL_RULES`` ("vocab"/"heads"/"mlp"/"experts"
+-> "model"; "batch" -> ("pod","data"); everything else replicated).  The
+active mesh is held in a context (``use_mesh``) so the same model code runs
+on a single CPU device (tests), the 16x16 production mesh, and the 2x16x16
+multi-pod mesh without modification.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Mesh context + logical axis rules
+# ---------------------------------------------------------------------------
+
+_CTX = threading.local()
+
+LOGICAL_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "d_inner": "model",
+    "seq_shard": ("pod", "data"),  # long-context cache sequence sharding
+    "act_seq": "model",  # sequence-parallel residual stream between blocks
+    # expert-TP decode layout (weights-stationary serving; see moe.py):
+    "moe_dm": None,  # wi contraction dim; "model" under expert_tp
+    "moe_ff": None,  # wo contraction dim; "model" under expert_tp
+}
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_CTX, "mesh", None)
+
+
+def current_overrides() -> Dict[str, Any]:
+    return getattr(_CTX, "overrides", {})
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], overrides: Optional[Dict[str, Any]] = None):
+    """Install the active mesh and optional per-config logical-rule overrides.
+
+    Overrides support per-architecture layouts, e.g. a 350M model on a fixed
+    (data, model) mesh is fastest as pure DP: {"batch": ("pod", "data",
+    "model"), "vocab": None, "d_inner": None, ...} treats the model axis as
+    extra data parallelism (EXPERIMENTS.md §Perf, xlstm hillclimb).
+    """
+    prev = getattr(_CTX, "mesh", None)
+    prev_ov = getattr(_CTX, "overrides", {})
+    _CTX.mesh = mesh
+    _CTX.overrides = dict(overrides or {})
+    try:
+        yield
+    finally:
+        _CTX.mesh = prev
+        _CTX.overrides = prev_ov
+
+
+def layout_overrides(cfg) -> Dict[str, Any]:
+    """Per-config logical-rule overrides (see ModelConfig.layout)."""
+    if getattr(cfg, "layout", "") == "pure_dp":
+        return {
+            "batch": ("pod", "data", "model"),
+            "seq_shard": ("pod", "data", "model"),
+            "vocab": None,
+            "heads": None,
+            "kv_heads": None,
+            "mlp": None,
+            "d_inner": None,
+            "experts": None,
+            "act_seq": None,
+        }
+    if getattr(cfg, "layout", "") == "expert_tp":
+        # Weights-stationary MoE serving: experts sharded over "data",
+        # expert FFN contraction dims TP-sharded over "model" — no FSDP
+        # weight gathers at decode (the paper's in-situ principle at
+        # cluster scale; EXPERIMENTS.md §Perf, deepseek decode).
+        return {"experts": "data", "moe_dm": "model", "moe_ff": "model"}
+    return {}
+
+
+def _resolve_axis(logical: Optional[str], mesh: Mesh):
+    if logical is None:
+        return None
+    ov = current_overrides()
+    rule = ov[logical] if logical in ov else LOGICAL_RULES.get(logical)
+    if rule is None:
+        return None
+    if isinstance(rule, tuple):
+        present = tuple(a for a in rule if a in mesh.axis_names)
+        return present if present else None
+    return rule if rule in mesh.axis_names else None
+
+
+def pspec(axes: Sequence[Optional[str]], mesh: Optional[Mesh] = None) -> P:
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return P()
+    return P(*[_resolve_axis(a, mesh) for a in axes])
+
+
+def dividing_entry(dim: int, ax, mesh: Mesh):
+    """Largest usable sharding for one dim: the full entry when it divides,
+    else the longest *prefix* of a tuple entry that divides (e.g. batch 32
+    on ("pod","data","model") -> ("pod","data")), else None."""
+    if ax is None:
+        return None
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    for end in range(len(axes), 0, -1):
+        size = int(np.prod([mesh.shape[a] for a in axes[:end]]))
+        if size > 1 and dim % size == 0:
+            prefix = axes[:end]
+            return prefix if isinstance(ax, tuple) else prefix[0]
+    return None
+
+
+def shard(x: jnp.ndarray, *axes: Optional[str]) -> jnp.ndarray:
+    """Apply a sharding constraint by logical axes (no-op without a mesh;
+    non-dividing dims fall back to the largest dividing prefix)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = pspec(axes, mesh)
+    fixed = [dividing_entry(dim, ax, mesh) for dim, ax in zip(x.shape, spec)]
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*fixed)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization with collected PartitionSpecs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Init:
+    """Collects params and their logical-axis tuples in parallel trees.
+
+    With ``shape_only=True`` no arrays are materialized — params are
+    ShapeDtypeStructs.  The dry-run uses this to derive shardings for
+    trillion-parameter configs without allocating anything.
+    """
+
+    key: jax.Array
+    dtype: Any = jnp.float32
+    shape_only: bool = False
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    axes: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def _next_key(self):
+        if self.shape_only:
+            return self.key
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def param(
+        self,
+        name: str,
+        shape: Tuple[int, ...],
+        axes: Tuple[Optional[str], ...],
+        init: str = "normal",
+        scale: Optional[float] = None,
+    ):
+        assert len(shape) == len(axes), (name, shape, axes)
+        if self.shape_only:
+            v = jax.ShapeDtypeStruct(shape, self.dtype)
+        else:
+            k = self._next_key()
+            if init == "normal":
+                s = scale if scale is not None else (shape[0] ** -0.5 if shape else 1.0)
+                v = jax.random.normal(k, shape, self.dtype) * jnp.asarray(s, self.dtype)
+            elif init == "zeros":
+                v = jnp.zeros(shape, self.dtype)
+            elif init == "ones":
+                v = jnp.ones(shape, self.dtype)
+            else:
+                raise ValueError(init)
+        self.params[name] = v
+        self.axes[name] = axes
+        return v
+
+    def sub(self, name: str) -> "Init":
+        child = Init(key=self._next_key(), dtype=self.dtype, shape_only=self.shape_only)
+        self.params[name] = child.params
+        self.axes[name] = child.axes
+        return child
+
+
+def axes_to_pspecs(axes_tree, mesh: Mesh):
+    """Map a tree of logical-axis tuples to a tree of PartitionSpecs.
+
+    Dims that do not divide their mesh axes are replicated (e.g. smollm's 15
+    heads on a 16-way model axis).  Shapes are unknown here, so divisibility
+    is checked later against the actual arrays via ``named_sharding_tree``.
+    """
+    return jax.tree.map(
+        lambda a: pspec(a, mesh), axes_tree, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+def named_sharding_tree(params_shape_tree, axes_tree, mesh: Mesh):
+    """NamedShardings for every param, dropping non-dividing axis entries."""
+
+    def one(shape_struct, axes):
+        spec = pspec(axes, mesh)
+        shape = shape_struct.shape
+        fixed = []
+        for dim, ax in zip(shape, spec):
+            if ax is None:
+                fixed.append(None)
+                continue
+            size = int(
+                np.prod([mesh.shape[a] for a in (ax if isinstance(ax, tuple) else (ax,))])
+            )
+            fixed.append(ax if dim % size == 0 else None)
+        return NamedSharding(mesh, P(*fixed))
+
+    return jax.tree.map(
+        one, params_shape_tree, axes_tree, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / MLPs
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return cap * jnp.tanh(x / cap)
+
+
+def init_mlp(ini: Init, d_model: int, d_ff: int, kind: str):
+    if kind in ("swiglu", "geglu"):
+        ini.param("wi", (d_model, 2 * d_ff), ("embed", "mlp"))
+    else:
+        ini.param("wi", (d_model, d_ff), ("embed", "mlp"))
+    ini.param("wo", (d_ff, d_model), ("mlp", "embed"))
+
+
+def mlp(params, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    h = x @ params["wi"]
+    h = shard(h, "batch", None, "mlp")
+    if kind in ("swiglu", "geglu"):
+        u, g = jnp.split(h, 2, axis=-1)
+        act = jax.nn.silu(g) if kind == "swiglu" else jax.nn.gelu(g)
+        h = u * act
+    elif kind == "gelu":
+        h = jax.nn.gelu(h)
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(kind)
+    y = h @ params["wo"]
+    return shard(y, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D) with positions (..., S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def init_embed(ini: Init, vocab: int, d_model: int):
+    ini.param("tokens", (vocab, d_model), ("vocab", "embed"), scale=0.02)
+
+
+def embed(params, tokens: jnp.ndarray, scale: bool, d_model: int) -> jnp.ndarray:
+    x = params["tokens"][tokens]
+    x = shard(x, "batch", None, None)
+    if scale:
+        x = x * jnp.asarray(d_model**0.5, x.dtype)
+    return x
+
+
+def lm_head(table_or_w, x: jnp.ndarray, tied: bool, cap: float = 0.0) -> jnp.ndarray:
+    logits = x @ (table_or_w.T if tied else table_or_w)
+    logits = shard(logits, "batch", None, "vocab")
+    if cap:
+        logits = softcap(logits.astype(jnp.float32), cap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# CrossbarLinear — the paper's technique as a first-class serving feature
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CrossbarMode:
+    """When enabled, projections run through the Newton bit-sliced crossbar
+    datapath (Pallas kernel; interpret-mode on CPU) instead of XLA matmul."""
+
+    enabled: bool = False
+    fast: bool = True  # fused exact kernel (full-resolution ADC)
+
+
+_CROSSBAR = CrossbarMode()
+
+
+@contextlib.contextmanager
+def crossbar_mode(mode: CrossbarMode):
+    global _CROSSBAR
+    prev = _CROSSBAR
+    _CROSSBAR = mode
+    try:
+        yield
+    finally:
+        _CROSSBAR = prev
+
+
+def crossbar_linear(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """y = x @ w, optionally through the crossbar datapath (W16A16).
+
+    Activations are offset-encoded (crossbar inputs are unsigned; the offset
+    is corrected digitally — see ``core.crossbar.signed_vmm_limbs``)."""
+    if not _CROSSBAR.enabled:
+        return x @ w
+    from repro.kernels import ops as kops
+
+    shift = jnp.min(x)
+    xs = (x - shift).astype(jnp.float32)  # non-negative
+    y = kops.crossbar_matmul(xs, w.astype(jnp.float32))
+    corr = shift.astype(jnp.float32) * jnp.sum(w.astype(jnp.float32), axis=0)
+    return (y + corr).astype(x.dtype)

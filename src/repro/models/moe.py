@@ -1,0 +1,386 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Design (DESIGN.md §4): experts are sharded over the ``model`` mesh axis.  At
+the MoE boundary activations are model-replicated (as after any Megatron
+row-parallel matmul), so each model rank routes *locally*, computes its own
+experts on a capacity-bounded buffer, and the partial outputs are combined
+with one all-reduce over ``model`` — the same collective a dense Megatron
+FFN needs, and no all-to-all.  (The all-to-all dispatch alternative is
+evaluated in EXPERIMENTS.md §Perf.)
+
+Dispatch is sort-based (argsort over N*k expert assignments) rather than the
+GShard one-hot-cumsum, keeping transient memory O(N*k) instead of O(N*E) —
+at kimi-k2 scale (384 experts) that is the difference between 2 MB and 50 MB
+per layer per device.
+
+Shared experts (deepseek-v2) are dense MLPs applied to every token and use
+ordinary tensor parallelism outside this module.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Init, current_mesh, shard
+
+
+def init_moe(ini: Init, cfg: ModelConfig):
+    d, e, f = cfg.d_model, cfg.moe_experts, cfg.moe_d_ff
+    ini.param("router", (d, e), ("moe_dm", None), scale=0.02)
+    glu = cfg.mlp_kind in ("swiglu", "geglu")
+    # up ("wi") and gate ("wg") projections are separate parameters so the
+    # F dim can be TP-sharded (expert_tp layout) without the fused-GLU
+    # split-vs-shard hazard.
+    # expert_tp shards wi/wg on the D contraction ("moe_dm") and wo on the F
+    # contraction ("moe_ff") — distinct names so no tensor maps one mesh
+    # axis twice.
+    ini.param("wi", (e, d, f), ("experts", "moe_dm", None))
+    if glu:
+        ini.param("wg", (e, d, f), ("experts", "moe_dm", None))
+    ini.param("wo", (e, f, d), ("experts", "moe_ff", "embed"))
+    if cfg.moe_shared_experts:
+        # Under alltoall dispatch the shared expert runs on the
+        # sequence-sharded stream with *replicated* weights (they are small),
+        # so the MoE layer needs no activation gather at all; under
+        # allreduce dispatch it is a standard TP ("mlp"-sharded) MLP.
+        shard_ax = None if cfg.moe_dispatch == "alltoall" else "mlp"
+        fs = cfg.moe_d_ff * cfg.moe_shared_experts
+        ini.param("shared_wi", (d, fs), ("embed", shard_ax))
+        if glu:
+            ini.param("shared_wg", (d, fs), ("embed", shard_ax))
+        ini.param("shared_wo", (fs, d), (shard_ax, "embed"))
+
+
+def _act(u, g, kind: str):
+    if kind == "swiglu":
+        return u * jax.nn.silu(g)
+    if kind == "geglu":
+        return u * jax.nn.gelu(g)
+    if kind == "gelu":
+        return jax.nn.gelu(u)
+    return jnp.square(jax.nn.relu(u))
+
+
+def _expert_ffn(h: jnp.ndarray, wi, wg, wo, kind: str) -> jnp.ndarray:
+    """h: (E, C, D); wi/wg: (E, D, F); wo: (E, F, D)."""
+    u = jnp.einsum("ecd,edf->ecf", h, wi)
+    g = jnp.einsum("ecd,edf->ecf", h, wg) if wg is not None else None
+    a = _act(u, g, kind)
+    return jnp.einsum("ecf,efd->ecd", a, wo)
+
+
+def _dispatch_compute(
+    xf: jnp.ndarray,  # (N, D) tokens
+    top_idx: jnp.ndarray,  # (N, k) global expert ids
+    gates: jnp.ndarray,  # (N, k)
+    wi: jnp.ndarray,  # (E_loc, D, F)
+    wg,  # (E_loc, D, F) or None
+    wo: jnp.ndarray,  # (E_loc, F, D)
+    lo: jnp.ndarray,  # first global expert id owned locally
+    capacity: int,
+    mlp_kind: str,
+) -> jnp.ndarray:
+    """Capacity-bounded dispatch -> expert FFN -> weighted combine.
+
+    All (token, D)-sized gathers/scatters happen in *slot space* (E_loc * C
+    rows), never in assignment space (N * k rows) — at kimi-k2 scale that is
+    1.2 GB vs 14 GB of transients per layer.
+    """
+    N, k = top_idx.shape
+    E_loc = wi.shape[0]
+    n_slots = E_loc * capacity
+    flat_e_glob = top_idx.reshape(-1)
+    flat_gate = gates.reshape(-1)
+    e_loc = flat_e_glob - lo
+    is_local = (e_loc >= 0) & (e_loc < E_loc)
+    e_key = jnp.where(is_local, e_loc, E_loc)  # non-local -> overflow bucket
+    order = jnp.argsort(e_key, stable=True)
+    sorted_e = e_key[order]
+    counts = jnp.bincount(e_key, length=E_loc + 1)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(N * k, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
+    keep = (sorted_e < E_loc) & (pos < capacity)
+    slot = jnp.where(keep, sorted_e.astype(jnp.int32) * capacity + pos, n_slots)
+    token_of = (order // k).astype(jnp.int32)
+
+    # slot -> source token / gate (index arrays only; O(E*C + N*k) ints)
+    tok_slot = jnp.zeros((n_slots + 1,), jnp.int32).at[slot].set(token_of)
+    gate_slot = (
+        jnp.zeros((n_slots + 1,), flat_gate.dtype)
+        .at[slot]
+        .set(flat_gate[order] * keep.astype(flat_gate.dtype))
+    )
+    buf = xf[tok_slot[:n_slots]].reshape(E_loc, capacity, -1)
+    out = _expert_ffn(buf, wi, wg, wo, mlp_kind)
+    contrib = out.reshape(n_slots, -1) * gate_slot[:n_slots, None].astype(out.dtype)
+    y = jnp.zeros_like(xf).at[tok_slot[:n_slots]].add(contrib.astype(xf.dtype))
+    return y
+
+
+def _route(x: jnp.ndarray, router_w: jnp.ndarray, cfg: ModelConfig):
+    logits = (x @ router_w.astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.moe_top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    return idx, gates.astype(x.dtype), probs
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig, n_local_experts: int) -> int:
+    c = n_tokens * cfg.moe_top_k / max(1, cfg.moe_experts) * cfg.moe_capacity_factor
+    return max(8, int(math.ceil(c / 8) * 8))
+
+
+def _dispatch_indices(top_idx, gates, n_experts: int, capacity: int):
+    """Slot assignment shared by both EP dispatches.
+
+    Returns (tok_slot, gate_slot) with ``n_experts * capacity`` slots;
+    overflow assignments drop (capacity semantics, GShard)."""
+    N, k = top_idx.shape
+    n_slots = n_experts * capacity
+    flat_e = top_idx.reshape(-1)
+    flat_gate = gates.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=n_experts)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(N * k, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
+    keep = pos < capacity
+    slot = jnp.where(keep, sorted_e.astype(jnp.int32) * capacity + pos, n_slots)
+    token_of = (order // k).astype(jnp.int32)
+    tok_slot = jnp.zeros((n_slots + 1,), jnp.int32).at[slot].set(token_of)
+    gate_slot = (
+        jnp.zeros((n_slots + 1,), flat_gate.dtype)
+        .at[slot]
+        .set(flat_gate[order] * keep.astype(flat_gate.dtype))
+    )
+    return tok_slot[:n_slots], gate_slot[:n_slots]
+
+
+def _moe_alltoall(params, x, cfg: ModelConfig, mesh, batch_axes):
+    """GShard-style EP: tokens stay sequence-sharded over ``model``; the
+    dispatch all-to-all moves only routed token copies (N_loc * k * D),
+    not the full activation — ~8x less traffic than replicated-token EP at
+    kimi-k2 scale (EXPERIMENTS.md §Perf)."""
+    B, S, D = x.shape
+    E = cfg.moe_experts
+    n_ranks = int(mesh.shape["model"])
+    E_loc = E // n_ranks
+    dp = int(np.prod([mesh.shape[a] for a in batch_axes])) if batch_axes else 1
+    n_loc = (B // dp if B % dp == 0 else B) * (S // n_ranks)
+    cap = _capacity(n_loc, cfg, E_loc)
+    x_spec = (
+        P(batch_axes, "model", None) if B % dp == 0 else P(None, "model", None)
+    )
+
+    def body(xl, rw, wi_l, wg_l, wo_l):
+        Bl, Sl, _ = xl.shape
+        xf = xl.reshape(-1, D)
+        idx, gates, _ = _route(xl, rw, cfg)
+        tok_slot, gate_slot = _dispatch_indices(
+            idx.reshape(-1, cfg.moe_top_k), gates.reshape(-1, cfg.moe_top_k), E, cap
+        )
+        buf = xf[tok_slot]  # (E * cap, D): rows for every (expert, slot)
+        # dispatch: slice per destination rank, exchange
+        buf = buf.reshape(n_ranks, E_loc * cap, D)
+        buf = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=0, tiled=True)
+        # now (n_ranks * E_loc * cap, D) = this rank's experts, all sources
+        h = buf.reshape(n_ranks, E_loc, cap, D).transpose(1, 0, 2, 3)
+        h = h.reshape(E_loc, n_ranks * cap, D)
+        out = _expert_ffn(h, wi_l, wg_l, wo_l, cfg.mlp_kind)
+        out = out.reshape(E_loc, n_ranks, cap, D).transpose(1, 0, 2, 3)
+        out = out.reshape(n_ranks, E_loc * cap, D)
+        out = jax.lax.all_to_all(out, "model", split_axis=0, concat_axis=0, tiled=True)
+        contrib = out.reshape(E * cap, D) * gate_slot[:, None].astype(out.dtype)
+        y = jnp.zeros_like(xf).at[tok_slot].add(contrib.astype(xf.dtype))
+        return y.reshape(Bl, Sl, D)
+
+    wg = params.get("wg")
+    e_spec = P("model", None, None)
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(x_spec, P(None, None), e_spec, None if wg is None else e_spec, e_spec),
+        out_specs=x_spec,
+        check_rep=False,
+    )(x, params["router"], params["wi"], wg, params["wo"])
+
+
+def _moe_expert_tp(params, x, cfg: ModelConfig, mesh, batch_axes):
+    """Weights-stationary serving EP (layout="expert_tp"): experts sharded
+    over "data", expert FFN contraction dims TP-sharded over "model" — the
+    paper's in-situ principle at cluster scale: no weight ever moves; only
+    the (tiny, at decode) routed activations cross links, via one all-to-all
+    over "data" and psum-scatters over "model".  See EXPERIMENTS.md §Perf
+    (deepseek-v2 decode hillclimb)."""
+    B, S, D = x.shape
+    E = cfg.moe_experts
+    n_dr = int(mesh.shape["data"])
+    n_mr = int(mesh.shape["model"])
+    E_dp = E // n_dr
+    dp = int(np.prod([mesh.shape[a] for a in batch_axes])) if batch_axes else 1
+    n_loc = (B // dp if B % dp == 0 else B) * S
+    cap = _capacity(n_loc, cfg, E_dp)
+    # tokens: batch over data, D sharded over model (activations tiny)
+    x_spec = P(batch_axes, None, "model") if B % dp == 0 else P(None, None, "model")
+
+    def body(xl, rw_l, wi_l, wg_l, wo_l):
+        # xl: (B_loc, S, D/mr); rw_l: (D/mr, E); wi_l/wg_l: (E_dp, D/mr, F);
+        # wo_l: (E_dp, F/mr, D)
+        Bl, Sl, Dl = xl.shape
+        xf = xl.reshape(-1, Dl)
+        logits = jax.lax.psum(
+            (xf @ rw_l.astype(xf.dtype)).astype(jnp.float32), "model"
+        )
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, idx = jax.lax.top_k(probs, cfg.moe_top_k)
+        gates = (gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)).astype(xf.dtype)
+        tok_slot, gate_slot = _dispatch_indices(idx, gates, E, cap)
+        buf = xf[tok_slot]  # (E * cap, D/mr)
+        buf = buf.reshape(n_dr, E_dp * cap, Dl)
+        buf = jax.lax.all_to_all(buf, "data", split_axis=0, concat_axis=0, tiled=True)
+        h = buf.reshape(n_dr, E_dp, cap, Dl).transpose(1, 0, 2, 3).reshape(E_dp, n_dr * cap, Dl)
+        # expert matmuls: contraction over the model-sharded D, then psum-
+        # scatter onto the model-sharded F — weights never move
+        u = jnp.einsum("ecd,edf->ecf", h, wi_l)
+        u = jax.lax.psum_scatter(u, "model", scatter_dimension=2, tiled=True)
+        if wg_l is not None:
+            g = jnp.einsum("ecd,edf->ecf", h, wg_l)
+            g = jax.lax.psum_scatter(g, "model", scatter_dimension=2, tiled=True)
+        else:
+            g = None
+        a = _act(u, g, cfg.mlp_kind)  # (E_dp, slots, F/mr)
+        out = jnp.einsum("ecf,efd->ecd", a, wo_l)  # partial over F -> full D
+        out = jax.lax.psum_scatter(out, "model", scatter_dimension=2, tiled=True)
+        # back to sources
+        out = out.reshape(E_dp, n_dr, cap, Dl).transpose(1, 0, 2, 3).reshape(n_dr, E_dp * cap, Dl)
+        out = jax.lax.all_to_all(out, "data", split_axis=0, concat_axis=0, tiled=True)
+        contrib = out.reshape(E * cap, Dl) * gate_slot[:, None].astype(out.dtype)
+        y = jnp.zeros_like(xf).at[tok_slot].add(contrib.astype(xf.dtype))
+        return y.reshape(Bl, Sl, Dl)
+
+    wg = params.get("wg")
+    wspec_i = P("data", "model", None)
+    wspec_o = P("data", "model", None)
+    y = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            x_spec,
+            P("model", None),
+            wspec_i,
+            None if wg is None else wspec_i,
+            wspec_o,
+        ),
+        out_specs=x_spec,
+        check_rep=False,
+    )(x, params["router"], params["wi"], wg, params["wo"])
+    return y
+
+
+def moe_ffn(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """x: (B, S, D) -> (B, S, D).  Routed experts + optional shared expert."""
+    B, S, D = x.shape
+    mesh = current_mesh()
+    E = cfg.moe_experts
+    model_size = int(mesh.shape.get("model", 1)) if mesh is not None else 1
+    if mesh is not None:
+        from repro.models.layers import _resolve_axis
+
+        if _resolve_axis("experts", mesh) is None and cfg.layout != "expert_tp":
+            model_size = 1  # layout override: no EP
+
+    if (
+        cfg.layout == "expert_tp"
+        and mesh is not None
+        and "data" in mesh.axis_names
+        and model_size > 1
+        and E % int(mesh.shape["data"]) == 0
+        and D % model_size == 0
+        and cfg.moe_d_ff % model_size == 0
+    ):
+        batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        y = _moe_expert_tp(
+            params, shard(x, "batch", None, "moe_dm"), cfg, mesh, batch_axes
+        )
+        y = shard(y, "batch", None, "moe_dm")
+    elif (
+        cfg.moe_dispatch == "alltoall"
+        and mesh is not None
+        and model_size > 1
+        and E % model_size == 0
+        and S % model_size == 0
+    ):
+        batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        y = _moe_alltoall(params, shard(x, "batch", "act_seq", None), cfg, mesh, batch_axes)
+    elif mesh is None or model_size == 1 or E % model_size != 0:
+        idx, gates, _ = _route(x, params["router"], cfg)
+        cap = _capacity(B * S, cfg, E)
+        y = _dispatch_compute(
+            x.reshape(-1, D),
+            idx.reshape(-1, cfg.moe_top_k),
+            gates.reshape(-1, cfg.moe_top_k),
+            params["wi"],
+            params.get("wg"),
+            params["wo"],
+            jnp.int32(0),
+            cap,
+            cfg.mlp_kind,
+        ).reshape(B, S, D)
+    else:
+        batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        dp = int(np.prod([mesh.shape[a] for a in batch_axes]))
+        n_local = (B * S) // dp if B % dp == 0 else B * S
+        cap = _capacity(n_local, cfg, E // model_size)
+        x_spec = P(batch_axes, None, None) if B % dp == 0 else P(None, None, None)
+
+        def body(xl, rw, wi_l, wg_l, wo_l):
+            Bl, Sl, _ = xl.shape
+            idx, gates, _ = _route(xl, rw, cfg)
+            rank = jax.lax.axis_index("model")
+            lo = rank.astype(jnp.int32) * (E // model_size)
+            y = _dispatch_compute(
+                xl.reshape(-1, D),
+                idx.reshape(-1, cfg.moe_top_k),
+                gates.reshape(-1, cfg.moe_top_k),
+                wi_l,
+                wg_l,
+                wo_l,
+                lo,
+                cap,
+                cfg.mlp_kind,
+            ).reshape(Bl, Sl, D)
+            return jax.lax.psum(y, "model")
+
+        wg = params.get("wg")
+        e_spec = P("model", None, None)
+        y = shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(x_spec, P(None, None), e_spec, None if wg is None else e_spec, e_spec),
+            out_specs=x_spec,
+            check_rep=False,
+        )(x, params["router"], params["wi"], wg, params["wo"])
+
+    if cfg.moe_shared_experts:
+        if cfg.moe_dispatch == "alltoall":
+            # replicated weights, sequence-sharded tokens: zero comm
+            xs = shard(x, "batch", "act_seq", None)
+        else:
+            xs = x
+        u = xs @ params["shared_wi"]
+        g = xs @ params["shared_wg"] if "shared_wg" in params else None
+        if cfg.moe_dispatch != "alltoall":
+            u = shard(u, "batch", None, "mlp")
+            g = shard(g, "batch", None, "mlp") if g is not None else None
+        h = _act(u, g, cfg.mlp_kind)
+        y = y + h @ params["shared_wo"]
+    if cfg.moe_dispatch == "alltoall":
+        return shard(y, "batch", "act_seq", None)
+    return shard(y, "batch", None, None)

@@ -1,0 +1,150 @@
+"""Mamba (S6) block for the jamba hybrid — chunked selective scan.
+
+Training runs a chunked scan: an outer ``lax.scan`` over sequence chunks
+carries the (B, d_inner, d_state) state; within a chunk the linear
+recurrence h_t = a_t * h_{t-1} + b_t is evaluated with
+``lax.associative_scan``.  The (B, c, d_inner, d_state) intra-chunk tensor is
+the live buffer — d_inner is sharded over the ``model`` axis so it stays
+per-device small (DESIGN.md §4).  Decode is the O(1) recurrent step.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Init, shard
+
+CHUNK = 256
+
+
+def d_inner_of(cfg: ModelConfig) -> int:
+    return cfg.mamba_d_inner or 2 * cfg.d_model
+
+
+def dt_rank_of(cfg: ModelConfig) -> int:
+    return cfg.mamba_dt_rank or max(1, math.ceil(cfg.d_model / 16))
+
+
+def init_mamba(ini: Init, cfg: ModelConfig):
+    d = cfg.d_model
+    din, n, dtr = d_inner_of(cfg), cfg.mamba_d_state, dt_rank_of(cfg)
+    ini.param("in_proj", (d, 2 * din), ("embed", "d_inner"))
+    ini.param("conv_w", (cfg.mamba_d_conv, din), (None, "d_inner"), scale=0.5)
+    ini.param("conv_b", (din,), ("d_inner",), init="zeros")
+    ini.param("x_proj", (din, dtr + 2 * n), ("d_inner", None))
+    ini.param("dt_proj", (dtr, din), (None, "d_inner"))
+    ini.param("dt_bias", (din,), ("d_inner",), init="zeros")
+    ini.param("A_log", (din, n), ("d_inner", None), init="zeros")
+    ini.param("D_skip", (din,), ("d_inner",), init="ones")
+    ini.param("out_proj", (din, d), ("d_inner", "embed"))
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv via shifted adds. x: (B, S, din); w: (K, din)."""
+    K = w.shape[0]
+    y = x * w[K - 1]
+    for j in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, : x.shape[1]]
+        y = y + shifted * w[K - 1 - j]
+    return y + b
+
+
+def _ssm_chunked(a: jnp.ndarray, bx: jnp.ndarray, h0: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Linear recurrence over S via chunked associative scan.
+
+    a, bx: (B, S, din, n); h0: (B, din, n).  Returns (h_all, h_last).
+    """
+    B, S, din, n = a.shape
+    c = min(CHUNK, S)
+    nc = S // c
+    assert S % c == 0, (S, c)
+    a_c = a.reshape(B, nc, c, din, n).transpose(1, 0, 2, 3, 4)
+    b_c = bx.reshape(B, nc, c, din, n).transpose(1, 0, 2, 3, 4)
+
+    def chunk_step(h, inp):
+        ac, bc = inp  # (B, c, din, n)
+
+        def combine(x, y):
+            a1, b1 = x
+            a2, b2 = y
+            return a1 * a2, a2 * b1 + b2
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_all = b_cum + a_cum * h[:, None]  # (B, c, din, n)
+        return h_all[:, -1], h_all
+
+    # checkpoint per chunk: otherwise the scan backward keeps every chunk's
+    # (B, c, din, n) cumulative tensors live at once
+    h_last, h_chunks = jax.lax.scan(jax.checkpoint(chunk_step), h0, (a_c, b_c))
+    h_all = h_chunks.transpose(1, 0, 2, 3, 4).reshape(B, S, din, n)
+    return h_all, h_last
+
+
+def mamba_block(
+    params,
+    x: jnp.ndarray,  # (B, S, D)
+    cfg: ModelConfig,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    decode: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    B, S, D = x.shape
+    din, n, dtr = d_inner_of(cfg), cfg.mamba_d_state, dt_rank_of(cfg)
+    K = cfg.mamba_d_conv
+
+    xz = x @ params["in_proj"]
+    xz = shard(xz, "batch", None, "d_inner")
+    x_in, z = jnp.split(xz, 2, axis=-1)
+
+    new_cache = None
+    if decode:
+        assert cache is not None and S == 1
+        conv_state = cache["conv"]  # (B, K-1, din)
+        window = jnp.concatenate([conv_state, x_in], axis=1)  # (B, K, din)
+        xc = jnp.einsum("bkd,kd->bd", window, params["conv_w"])[:, None] + params["conv_b"]
+        new_conv = window[:, 1:]
+    else:
+        xc = _causal_conv(x_in, params["conv_w"], params["conv_b"])
+        new_conv = None
+        if cache is not None:
+            pad = jnp.zeros((B, max(0, K - 1 - S), din), x_in.dtype)
+            new_conv = jnp.concatenate([pad, x_in[:, -(K - 1):]], axis=1)
+    xc = jax.nn.silu(xc)
+
+    x_db = xc @ params["x_proj"]
+    dt, B_ssm, C_ssm = jnp.split(x_db, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_proj"] + params["dt_bias"])  # (B,S,din)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (din, n)
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A)  # (B,S,din,n)
+    bx = (
+        dt.astype(jnp.float32)[..., None]
+        * B_ssm.astype(jnp.float32)[:, :, None, :]
+        * xc.astype(jnp.float32)[..., None]
+    )
+
+    if decode:
+        h = a[:, 0] * cache["h"] + bx[:, 0]  # (B, din, n)
+        y = jnp.einsum("bdn,bn->bd", h, C_ssm.astype(jnp.float32)[:, 0])[:, None]
+        new_cache = {"h": h, "conv": new_conv}
+    else:
+        h0 = cache["h"] if cache is not None else jnp.zeros((B, din, n), jnp.float32)
+        h_all, h_last = _ssm_chunked(a, bx, h0)
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, C_ssm.astype(jnp.float32))
+        if cache is not None:
+            new_cache = {"h": h_last, "conv": new_conv}
+
+    y = (y + params["D_skip"].astype(jnp.float32) * xc.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    return shard(out, "batch", None, None), new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    din, n, K = d_inner_of(cfg), cfg.mamba_d_state, cfg.mamba_d_conv
+    return {
+        "h": jnp.zeros((batch, din, n), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, din), dtype),
+    }

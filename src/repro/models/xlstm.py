@@ -1,0 +1,233 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, strictly recurrent — that non-parallelizability is
+the architecture's documented trade-off and shows up honestly as a sequential
+scan in the HLO).
+
+mLSTM recurrence (per head):
+    C_t = f_t C_{t-1} + i_t k_t v_t^T      (dk x dv matrix memory)
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t^T q_t) / max(|n_t . q_t|, 1)
+
+Training uses the chunkwise form: within a chunk, contributions are computed
+attention-style with a causal decay matrix D_ts = exp(L_t - L_s + log i_s)
+(L = cumulative log f); across chunks the (B, H, dk, dv) state is carried by
+a ``lax.scan``.  Gates are computed in float32 with the input gate clipped
+for stability (the paper's m_t stabilizer is folded into the clip; see
+DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Init, shard
+
+CHUNK = 256
+IGATE_CLIP = 5.0
+
+
+def d_inner_of(cfg: ModelConfig) -> int:
+    return cfg.xlstm_d_inner or 2 * cfg.d_model
+
+
+def init_mlstm(ini: Init, cfg: ModelConfig):
+    d, din, H = cfg.d_model, d_inner_of(cfg), cfg.n_heads
+    ini.param("wqkv", (d, 3 * din), ("embed", "d_inner"))
+    ini.param("w_gates", (d, 2 * H), ("embed", None), scale=0.02)
+    ini.param("w_ogate", (d, din), ("embed", "d_inner"))
+    ini.param("out_proj", (din, d), ("d_inner", "embed"))
+
+
+def init_slstm(ini: Init, cfg: ModelConfig):
+    d, din, H = cfg.d_model, d_inner_of(cfg), cfg.n_heads
+    dh = din // H
+    ini.param("w_in", (d, 4 * din), ("embed", "d_inner"))  # z, i, f, o
+    ini.param("r_z", (H, dh, dh), (None, None, None), scale=dh**-0.5)
+    ini.param("r_i", (H, dh, dh), (None, None, None), scale=dh**-0.5)
+    ini.param("r_f", (H, dh, dh), (None, None, None), scale=dh**-0.5)
+    ini.param("r_o", (H, dh, dh), (None, None, None), scale=dh**-0.5)
+    ini.param("out_proj", (din, d), ("d_inner", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mlstm_chunk(q, k, v, log_f, log_i, C0, n0):
+    """One chunk. q,k,v: (B, c, H, dh); log_f, log_i: (B, c, H) f32.
+
+    Returns (y, C1, n1).
+    """
+    B, c, H, dh = q.shape
+    L = jnp.cumsum(log_f, axis=1)  # (B, c, H) cumulative log forget from chunk start
+    # inter-chunk: state contribution decayed by exp(L_t)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32) * (dh**-0.5)
+    vf = v.astype(jnp.float32)
+    decay_t = jnp.exp(L)  # (B, c, H)
+    y_inter = jnp.einsum("bchd,bhde->bche", qf, C0) * decay_t[..., None]
+    n_inter = jnp.einsum("bchd,bhd->bch", qf, n0) * decay_t
+
+    # intra-chunk causal decay matrix: D_ts = exp(L_t - L_s + log_i_s), s <= t
+    diff = L[:, :, None, :] - L[:, None, :, :] + log_i[:, None, :, :]  # (B,t,s,H)
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    D = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bthd,bshd->btsh", qf, kf) * D
+    y_intra = jnp.einsum("btsh,bshe->bthe", scores, vf)
+    # normalizer accumulates decay-weighted keys (no q): n_t = sum_s D_ts k_s
+    n_intra = jnp.einsum("btsh,bshd->bthd", D, kf)
+
+    # denominator: max(|n_t . q_t|, 1)
+    n_tot = n_intra + jnp.einsum("bhd,bth->bthd", n0, decay_t)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bthd,bthd->bth", n_tot, qf)), 1.0)
+    y = (y_inter + y_intra) / denom[..., None]
+
+    # state update to end of chunk
+    total_decay = jnp.exp(L[:, -1])  # (B, H)
+    w_s = jnp.exp(L[:, -1:, :] - L + log_i)  # (B, c, H): decay from s to end
+    C1 = total_decay[..., None, None] * C0 + jnp.einsum(
+        "bch,bchd,bche->bhde", w_s, kf, vf
+    )
+    n1 = total_decay[..., None] * n0 + jnp.einsum("bch,bchd->bhd", w_s, kf)
+    return y, C1, n1
+
+
+def mlstm_block(
+    params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    decode: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    B, S, D = x.shape
+    din, H = d_inner_of(cfg), cfg.n_heads
+    dh = din // H
+
+    qkv = x @ params["wqkv"]
+    qkv = shard(qkv, "batch", None, "d_inner")
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, H, dh)
+    v = v.reshape(B, S, H, dh)
+    gates = (x @ params["w_gates"]).astype(jnp.float32).reshape(B, S, 2, H)
+    log_i = jnp.minimum(gates[:, :, 0], IGATE_CLIP)  # log input gate
+    log_f = jax.nn.log_sigmoid(gates[:, :, 1])  # log forget gate
+    o = jax.nn.sigmoid(x @ params["w_ogate"])
+
+    if decode:
+        assert cache is not None and S == 1
+        C0, n0 = cache["C"], cache["n"]
+        f_t = jnp.exp(log_f[:, 0])[..., None, None]  # (B,H,1,1)
+        i_t = jnp.exp(log_i[:, 0])[..., None, None]
+        kf = k.astype(jnp.float32)[:, 0] * (dh**-0.5)
+        vf = v.astype(jnp.float32)[:, 0]
+        C1 = f_t * C0 + i_t * jnp.einsum("bhd,bhe->bhde", kf, vf)
+        n1 = f_t[..., 0] * n0 + i_t[..., 0] * kf
+        qf = q.astype(jnp.float32)[:, 0]
+        num = jnp.einsum("bhde,bhd->bhe", C1, qf)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n1, qf)), 1.0)
+        y = (num / den[..., None])[:, None]  # (B,1,H,dh)
+        new_cache = {"C": C1, "n": n1}
+    else:
+        c = min(CHUNK, S)
+        nc = S // c
+        assert S % c == 0
+        C0 = cache["C"] if cache is not None else jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = cache["n"] if cache is not None else jnp.zeros((B, H, dh), jnp.float32)
+
+        def step(carry, inp):
+            C_, n_ = carry
+            qc, kc, vc, lfc, lic = inp
+            # checkpoint: the (B, c, c, H) decay/score tensors are recomputed
+            # in backward instead of saved for every chunk at once
+            y, C1, n1 = jax.checkpoint(_mlstm_chunk)(qc, kc, vc, lfc, lic, C_, n_)
+            return (C1, n1), y
+
+        xs = (
+            q.reshape(B, nc, c, H, dh).transpose(1, 0, 2, 3, 4),
+            k.reshape(B, nc, c, H, dh).transpose(1, 0, 2, 3, 4),
+            v.reshape(B, nc, c, H, dh).transpose(1, 0, 2, 3, 4),
+            log_f.reshape(B, nc, c, H).transpose(1, 0, 2, 3),
+            log_i.reshape(B, nc, c, H).transpose(1, 0, 2, 3),
+        )
+        (C1, n1), ys = jax.lax.scan(step, (C0, n0), xs)
+        y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+        new_cache = {"C": C1, "n": n1} if cache is not None else None
+
+    y = (y.reshape(B, S, din).astype(x.dtype)) * o
+    out = y @ params["out_proj"]
+    return shard(out, "batch", None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_block(
+    params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    decode: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    B, S, D = x.shape
+    din, H = d_inner_of(cfg), cfg.n_heads
+    dh = din // H
+
+    pre = (x @ params["w_in"]).reshape(B, S, 4, H, dh)  # z, i, f, o pre-activations
+
+    if cache is not None:
+        c0, n0, h0 = cache["c"], cache["n"], cache["h"]
+    else:
+        c0 = jnp.zeros((B, H, dh), jnp.float32)
+        n0 = jnp.ones((B, H, dh), jnp.float32)
+        h0 = jnp.zeros((B, H, dh), jnp.float32)
+
+    rz, ri, rf, ro = params["r_z"], params["r_i"], params["r_f"], params["r_o"]
+
+    def step(carry, pre_t):
+        c_, n_, h_ = carry  # (B, H, dh) f32
+        hz = jnp.einsum("bhd,hde->bhe", h_, rz.astype(jnp.float32))
+        hi = jnp.einsum("bhd,hde->bhe", h_, ri.astype(jnp.float32))
+        hf = jnp.einsum("bhd,hde->bhe", h_, rf.astype(jnp.float32))
+        ho = jnp.einsum("bhd,hde->bhe", h_, ro.astype(jnp.float32))
+        pf = pre_t.astype(jnp.float32)
+        z = jnp.tanh(pf[:, 0] + hz)
+        i = jnp.exp(jnp.minimum(pf[:, 1] + hi, IGATE_CLIP))
+        f = jax.nn.sigmoid(pf[:, 2] + hf)
+        o = jax.nn.sigmoid(pf[:, 3] + ho)
+        c1 = f * c_ + i * z
+        n1 = f * n_ + i
+        h1 = o * c1 / jnp.maximum(n1, 1.0)
+        return (c1, n1, h1), h1
+
+    if decode:
+        assert S == 1
+        (c1, n1, h1), h_out = step((c0, n0, h0), pre[:, 0])
+        y = h_out[:, None].reshape(B, 1, din)
+        new_cache = {"c": c1, "n": n1, "h": h1}
+    else:
+        (c1, n1, h1), hs = jax.lax.scan(step, (c0, n0, h0), pre.transpose(1, 0, 2, 3, 4))
+        y = hs.transpose(1, 0, 2, 3).reshape(B, S, din)
+        new_cache = {"c": c1, "n": n1, "h": h1} if cache is not None else None
+
+    out = y.astype(x.dtype) @ params["out_proj"]
+    return shard(out, "batch", None, None), new_cache
+
+
+def init_xlstm_cache(cfg: ModelConfig, kind: str, batch: int):
+    din, H = d_inner_of(cfg), cfg.n_heads
+    dh = din // H
+    if kind == "mlstm":
+        return {
+            "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, H, dh), jnp.float32),
+        }
+    return {
+        "c": jnp.zeros((batch, H, dh), jnp.float32),
+        "n": jnp.ones((batch, H, dh), jnp.float32),
+        "h": jnp.zeros((batch, H, dh), jnp.float32),
+    }

@@ -1,0 +1,187 @@
+"""Optimizers in pure JAX (no optax): SGD-momentum, AdamW, and Adafactor.
+
+Adafactor (Shazeer & Stern) keeps *factored* second moments for >=2-D
+parameters — row and column accumulators instead of a full tensor — which is
+what makes optimizer state for the 1T-parameter kimi-k2 MoE fit on a 256-chip
+pod (EXPERIMENTS.md §Dry-run records the bytes).  Optimizer state mirrors the
+parameter PartitionSpecs, so states shard exactly like their parameters
+(ZeRO-style for the factored vectors).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+LAYERWISE_MIN_DIM = 3  # leaves stacked over layers get chunked updates
+
+
+def _maybe_layerwise(fn, *args):
+    """Apply an elementwise update per layer-slice for stacked leaves.
+
+    Optimizer math materializes several f32 copies of each leaf; for
+    layer-stacked MoE tensors (e.g. kimi-k2 wi: (60, 384, 7168, 4096)) that
+    is tens of GB of transients.  Scanning over the leading (layers) axis
+    bounds the f32 working set to one layer's slice.
+    """
+    p = args[0]
+    if p.ndim >= LAYERWISE_MIN_DIM and p.shape[0] <= 128 and p.size > (1 << 24):
+        return jax.lax.map(lambda xs: fn(*xs), args)
+    return fn(*args)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+def sgd(lr_fn, momentum: float = 0.9, clip_norm: float = 1.0) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        grads, _ = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(step)
+        mu = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state["mu"], grads
+        )
+        new_params = jax.tree.map(lambda p, m: (p - lr * m).astype(p.dtype), params, mu)
+        return new_params, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr_fn,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        grads, _ = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1**t
+        c2 = 1.0 - b2**t
+
+        def upd_inner(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m1 = b1 * m + (1 - b1) * gf
+            v1 = b2 * v + (1 - b2) * gf * gf
+            u = (m1 / c1) / (jnp.sqrt(v1 / c2) + eps)
+            p1 = p.astype(jnp.float32) - lr * (u + weight_decay * p.astype(jnp.float32))
+            return p1.astype(p.dtype), m1, v1
+
+        def upd(p, g, m, v):
+            return _maybe_layerwise(upd_inner, p, g, m, v)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor
+# ---------------------------------------------------------------------------
+
+def _is_factored(shape, min_size: int) -> bool:
+    """Factor over the last two dims (handles (E, D, F) MoE stacks per-expert)."""
+    return len(shape) >= 2 and shape[-1] >= min_size and shape[-2] >= min_size
+
+
+def adafactor(
+    lr_fn,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+    min_dim_size_to_factor: int = 128,
+) -> Optimizer:
+    def init(params):
+        def one(p):
+            if _is_factored(p.shape, min_dim_size_to_factor):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),  # mean over cols
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"acc": jax.tree.map(one, params)}
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+
+        def one_inner(p, g, vr_or_v, vc=None):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if vc is not None:
+                vr = beta * vr_or_v + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc1 = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+                # v_hat = outer(vr, vc) / mean(vr) (Shazeer & Stern eq. 4)
+                vr_n = vr / jnp.mean(vr, axis=-1, keepdims=True).clip(1e-30)
+                v_hat = vr_n[..., :, None] * vc1[..., None, :]
+                u = gf * jax.lax.rsqrt(v_hat.clip(eps))
+                new_acc = {"vr": vr, "vc": vc1}
+            else:
+                v = beta * vr_or_v + (1 - beta) * g2
+                u = gf * jax.lax.rsqrt(v.clip(eps))
+                new_acc = {"v": v}
+            # update clipping by RMS
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            p1 = p.astype(jnp.float32) - lr * u
+            if weight_decay:
+                p1 = p1 - lr * weight_decay * p.astype(jnp.float32)
+            return p1.astype(p.dtype), new_acc
+
+        def one(p, g, acc):
+            if "vr" in acc:
+                return _maybe_layerwise(one_inner, p, g, acc["vr"], acc["vc"])
+            return _maybe_layerwise(one_inner, p, g, acc["v"])
+
+        flat_p, tree = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_a = tree.flatten_up_to(state["acc"])
+        outs = [one(p, g, a) for p, g, a in zip(flat_p, flat_g, flat_a)]
+        new_params = tree.unflatten([o[0] for o in outs])
+        new_acc = tree.unflatten([o[1] for o in outs])
+        return new_params, {"acc": new_acc}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr_fn, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr_fn, **kw)
+    if name == "adafactor":
+        return adafactor(lr_fn, **kw)
+    if name == "sgd":
+        return sgd(lr_fn, **kw)
+    raise ValueError(name)

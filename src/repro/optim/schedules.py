@@ -1,0 +1,32 @@
+"""Learning-rate schedules (pure functions of the int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def f(step):
+        return jnp.asarray(lr, jnp.float32)
+
+    return f
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def f(step):
+        frac = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        return jnp.asarray(lr, jnp.float32) * frac
+
+    return f
+
+
+def cosine_with_warmup(lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1):
+    def f(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        prog = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.asarray(lr, jnp.float32) * warm * cos
+
+    return f

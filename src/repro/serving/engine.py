@@ -1,0 +1,166 @@
+"""Batched serving engine with continuous batching.
+
+Slot-based design (vLLM-lite, adapted to JAX static shapes):
+  * a fixed pool of ``max_batch`` cache slots, each holding one request's
+    KV/state cache at its own position;
+  * admission: a pending request is prefilled with a batch-1 prefill
+    (prompt padded to a bucket to bound recompilation) and its cache is
+    scattered into the slot pool;
+  * decode: one jitted ``decode_step`` advances *all* occupied slots each
+    tick with per-slot positions; finished slots are freed and refilled
+    without stalling the others.
+
+Sampling is greedy or temperature-based with a per-engine PRNG; generation
+is deterministic given (seed, admission order), which the tests assert.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32 tokens (or (S, D) embeddings)
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return -(-n // 2048) * 2048
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        max_batch: int = 4,
+        max_seq: int = 512,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.cache = model_lib.init_cache(cfg, max_batch, max_seq, dtype=jnp.float32)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.pos = np.zeros(max_batch, np.int32)  # position of next write
+        self.last_tok = np.zeros(max_batch, np.int32)
+        self.pending: List[Request] = []
+        self._rid = itertools.count()
+        self._decode = jax.jit(
+            lambda p, t, pos, c: model_lib.decode_step(p, self.cfg, t, pos, c)
+        )
+        self._prefills: Dict[int, object] = {}
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int = 16, eos_id: Optional[int] = None) -> int:
+        req = Request(next(self._rid), np.asarray(prompt), max_new_tokens, eos_id)
+        self.pending.append(req)
+        return req.rid
+
+    def _prefill_fn(self, bucket: int):
+        if bucket not in self._prefills:
+            def fn(params, tokens, cache):
+                return model_lib.prefill(params, self.cfg, tokens, cache)
+            self._prefills[bucket] = jax.jit(fn)
+        return self._prefills[bucket]
+
+    def _admit(self):
+        for slot in range(self.max_batch):
+            if self.slots[slot] is not None or not self.pending:
+                continue
+            req = self.pending.pop(0)
+            S = len(req.prompt)
+            # Recurrent archs (ssm/hybrid) must not process padding tokens —
+            # their state would absorb them — so they prefill exact lengths;
+            # attention caches tolerate padding (masked by position), so they
+            # use buckets + an idempotent catch-up re-issue of token S-1.
+            recurrent = self.cfg.family in ("ssm", "hybrid")
+            bucket = S if recurrent else min(_bucket(S), self.max_seq)
+            prompt = np.zeros((1, bucket), np.int32)
+            prompt[0, :S] = req.prompt[:bucket]
+            small_cache = model_lib.init_cache(self.cfg, 1, self.max_seq, dtype=jnp.float32)
+            logits, filled = self._prefill_fn(bucket)(self.params, jnp.asarray(prompt), small_cache)
+            self.cache = jax.tree.map(
+                lambda big, one: big.at[:, slot].set(one[:, 0]), self.cache, filled
+            )
+            if recurrent:
+                tok = int(self._sample(np.asarray(logits, np.float32))[0])
+                self.pos[slot] = S
+                self.last_tok[slot] = tok
+                req.generated.append(tok)
+            else:
+                self.pos[slot] = S - 1
+                self.last_tok[slot] = int(req.prompt[S - 1])
+            self.slots[slot] = req
+
+    # ------------------------------------------------------------------
+    def _sample(self, logits: np.ndarray) -> np.ndarray:
+        if self.temperature <= 0.0:
+            return np.argmax(logits, axis=-1).astype(np.int32)
+        self.key, sub = jax.random.split(self.key)
+        g = jax.random.gumbel(sub, logits.shape)
+        return np.asarray(
+            jnp.argmax(logits / self.temperature + g, axis=-1), np.int32
+        )
+
+    def step(self) -> int:
+        """Admit pending requests and advance every occupied slot one token.
+
+        Returns the number of active slots advanced."""
+        self._admit()
+        active = [i for i in range(self.max_batch) if self.slots[i] is not None]
+        if not active:
+            return 0
+        toks = jnp.asarray(self.last_tok[:, None])
+        pos = jnp.asarray(self.pos)
+        logits, self.cache = self._decode(self.params, toks, pos, self.cache)
+        nxt = self._sample(np.asarray(logits, np.float32))
+        for i in active:
+            req = self.slots[i]
+            self.pos[i] += 1
+            tok = int(nxt[i])
+            req.generated.append(tok)
+            self.last_tok[i] = tok
+            if (
+                len(req.generated) >= req.max_new_tokens
+                or (req.eos_id is not None and tok == req.eos_id)
+                or self.pos[i] >= self.max_seq - 1
+            ):
+                req.done = True
+                self.slots[i] = None
+        return len(active)
+
+    def run_until_done(self, max_ticks: int = 10_000) -> List[Request]:
+        finished: List[Request] = []
+        seen: Dict[int, Request] = {}
+        for _ in range(max_ticks):
+            for s in self.slots:
+                if s is not None:
+                    seen[s.rid] = s
+            if not self.pending and all(s is None for s in self.slots):
+                break
+            self.step()
+        for s in self.slots:
+            if s is not None:
+                seen[s.rid] = s
+        return sorted(seen.values(), key=lambda r: r.rid)

@@ -1,0 +1,2 @@
+from repro.train.loop import TrainLoop, make_train_step  # noqa: F401
+from repro.train.compression import ef_int8_psum, make_compression_state  # noqa: F401

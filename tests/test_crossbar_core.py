@@ -1,0 +1,164 @@
+"""Bit-exactness tests for the crossbar datapath, adaptive ADC, Karatsuba,
+and Strassen (paper §III) against an int64 numpy oracle."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import adc
+from repro.core import crossbar as cb
+from repro.core import karatsuba as ka
+from repro.core import strassen as stn
+
+
+SPEC_S = cb.DEFAULT_SPEC
+SPEC_U = cb.DEFAULT_SPEC.replace(signed_weights=False)
+
+
+def _rand(rng, B, K, N, signed):
+    x = rng.integers(0, 1 << 16, size=(B, K))
+    if signed:
+        w = rng.integers(-(1 << 15), 1 << 15, size=(K, N))
+    else:
+        w = rng.integers(0, 1 << 16, size=(K, N))
+    return x, w
+
+
+@pytest.mark.parametrize("shape", [(3, 128, 16), (2, 300, 8), (5, 17, 5), (1, 1024, 32)])
+@pytest.mark.parametrize("signed", [True, False])
+def test_crossbar_vmm_matches_oracle(shape, signed):
+    rng = np.random.default_rng(sum(shape) + signed)
+    B, K, N = shape
+    x, w = _rand(rng, B, K, N, signed)
+    spec = SPEC_S if signed else SPEC_U
+    y = np.asarray(cb.crossbar_vmm(jnp.asarray(x), jnp.asarray(w), spec))
+    ref = cb.exact_vmm_reference(x, w, spec)
+    np.testing.assert_array_equal(y, ref)
+
+
+def test_crossbar_width_constants_match_paper():
+    """§III: 9-bit column ADC, 39-bit accumulator for 16bx16b over 128 rows."""
+    assert SPEC_S.adc_bits == 9
+    assert SPEC_S.acc_bits == 39
+    assert SPEC_S.n_slices == 8
+    assert SPEC_S.n_iters == 16
+
+
+@given(
+    st.integers(1, 4),
+    st.integers(1, 200),
+    st.integers(1, 6),
+    st.integers(0, 2**32 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_crossbar_vmm_property(B, K, N, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, B, K, N, True)
+    y = np.asarray(cb.crossbar_vmm(jnp.asarray(x), jnp.asarray(w), SPEC_S))
+    ref = cb.exact_vmm_reference(x, w, SPEC_S)
+    np.testing.assert_array_equal(y, ref)
+
+
+# --- adaptive ADC (T2): the paper's "zero impact on accuracy" claim -------
+
+def test_adaptive_exact_guard_is_bit_exact_unsigned():
+    rng = np.random.default_rng(7)
+    for (B, K, N) in [(4, 128, 16), (2, 384, 8)]:
+        x, w = _rand(rng, B, K, N, False)
+        tr = adc.make_partial_transform(SPEC_U, adc.EXACT_ADAPTIVE)
+        y = np.asarray(cb.crossbar_vmm(jnp.asarray(x), jnp.asarray(w), SPEC_U, partial_transform=tr))
+        np.testing.assert_array_equal(y, cb.exact_vmm_reference(x, w, SPEC_U))
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=20, deadline=None)
+def test_adaptive_safe_guard_within_bound(seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, 4, 128, 16, False)
+    cfg = adc.SAFE_ADAPTIVE
+    tr = adc.make_partial_transform(SPEC_U, cfg)
+    y = np.asarray(cb.crossbar_vmm(jnp.asarray(x), jnp.asarray(w), SPEC_U, partial_transform=tr)).astype(np.int64)
+    ref = cb.exact_vmm_reference(x, w, SPEC_U)
+    bound = adc.lsb_error_bound(SPEC_U, cfg, 128)
+    assert bound < 1.0  # guard=4 keeps worst case under one output ULP
+    assert np.abs(y - ref).max() <= 1
+
+
+def test_adaptive_signed_lsb_rounding_is_exact_in_practice():
+    rng = np.random.default_rng(11)
+    x, w = _rand(rng, 8, 128, 32, True)
+    tr = adc.make_partial_transform(SPEC_S, adc.SAFE_ADAPTIVE)
+    y = np.asarray(cb.crossbar_vmm(jnp.asarray(x), jnp.asarray(w), SPEC_S, partial_transform=tr))
+    np.testing.assert_array_equal(y, cb.exact_vmm_reference(x, w, SPEC_S))
+
+
+def test_fig5_schedule_shape():
+    """Fig 5: relevant bits per (column-slice, iteration) fall off at both
+    ends; full mode resolves all 9 bits everywhere."""
+    full = adc.adaptive_schedule(SPEC_U, adc.FULL_ADC)
+    assert (full == 9).all()
+    sched = adc.adaptive_schedule(SPEC_U, adc.ADCConfig())
+    assert sched.mean() < 7.0  # substantial SAR-work reduction
+    assert sched[0, 0] <= 1  # lowest partial: below the output window
+    assert sched[-1, -1] <= 1  # highest partial: clamp-detect only
+    assert sched.max() == 9
+
+
+# --- Karatsuba (T3) --------------------------------------------------------
+
+@pytest.mark.parametrize("levels", [1, 2])
+@pytest.mark.parametrize("shape", [(3, 128, 16), (2, 300, 8)])
+def test_karatsuba_bit_exact(levels, shape):
+    rng = np.random.default_rng(levels * 100 + sum(shape))
+    B, K, N = shape
+    x, w = _rand(rng, B, K, N, True)
+    y = np.asarray(ka.karatsuba_vmm(jnp.asarray(x), jnp.asarray(w), SPEC_S, levels=levels))
+    np.testing.assert_array_equal(y, cb.exact_vmm_reference(x, w, SPEC_S))
+
+
+def test_karatsuba_cost_matches_paper():
+    c0, c1, c2 = ka.karatsuba_cost(0), ka.karatsuba_cost(1), ka.karatsuba_cost(2)
+    assert c0.adc_slots == 128 and c0.iterations == 16
+    # §III.A.1: A,B on 4 slices x 8 iters in parallel; C on 5 x 9 => -15%
+    assert c1.adc_slots == 109 and c1.iterations == 17
+    assert abs(c1.adc_reduction_vs_baseline - 0.148) < 0.01
+    # §III.C: two levels -> 28% fewer ADC slots, 14 iterations
+    assert c2.adc_slots == 92 and c2.iterations == 14
+    assert abs(c2.adc_reduction_vs_baseline - 0.281) < 0.01
+
+
+# --- Strassen (T4) ---------------------------------------------------------
+
+@pytest.mark.parametrize("levels", [1, 2])
+@pytest.mark.parametrize("shape", [(6, 128, 10), (5, 130, 9), (7, 63, 3)])
+def test_strassen_bit_exact(levels, shape):
+    rng = np.random.default_rng(levels * 10 + sum(shape))
+    M, K, N = shape
+    x = rng.integers(0, 1 << 16, size=(M, K))
+    w = rng.integers(-(1 << 15), 1 << 15, size=(K, N))
+    y = np.asarray(stn.strassen_matmul(jnp.asarray(x), jnp.asarray(w), SPEC_S, levels=levels))
+    np.testing.assert_array_equal(y, cb.exact_vmm_reference(x, w, SPEC_S))
+
+
+def test_strassen_cost_both_accountings():
+    paper = stn.strassen_cost(256, 256, 256, levels=1, widening="paper")
+    exact = stn.strassen_cost(256, 256, 256, levels=1, widening="exact")
+    base = stn.strassen_cost(256, 256, 256, levels=0)
+    assert paper.adc_conversions / base.adc_conversions == pytest.approx(7 / 8)
+    # honest accounting: operand widening makes Strassen a net conversion loss
+    assert exact.adc_conversions > base.adc_conversions
+    assert paper.imas_used == 7  # frees 1 IMA in 8 (Fig 8)
+
+
+# --- fixed point helpers ----------------------------------------------------
+
+@given(st.integers(0, 2**16 - 1))
+@settings(max_examples=50, deadline=None)
+def test_bitplane_roundtrip(v):
+    from repro.core import fixedpoint as fxp
+
+    arr = jnp.asarray([v])
+    assert int(fxp.from_bit_planes(fxp.bit_planes(arr, 16))[0]) == v
+    assert int(fxp.from_cell_slices(fxp.cell_slices(arr, 16, 2), 2)[0]) == v
+    lo, hi = fxp.split_halves(arr, 16)
+    assert int(lo[0]) + (int(hi[0]) << 8) == v

@@ -1,0 +1,153 @@
+"""Validation of the analytic hardware model against the paper's claims.
+
+The paper's evaluation is analytic (CACTI/Orion/ADC-survey constants, Table
+I); we rebuild it bottom-up from mechanisms.  Absolute anchors are asserted
+with wide bands (their exact spreadsheet constants are unpublished); the
+*relative* technique deltas — the paper's actual claims — are asserted
+tightly, with deviations documented in EXPERIMENTS.md §Repro-validation.
+"""
+import numpy as np
+import pytest
+
+from repro.core import arch, energy as en, mapper, workloads as wl
+
+
+@pytest.fixture(scope="module")
+def suite_results():
+    return en.evaluate_suite(wl.benchmark_suite())
+
+
+def test_table2_network_stats():
+    # paper: MSRA Prelu-net has 330M params, 5.5x Alexnet's (~60M)
+    msra_c = wl.msra("c")
+    assert 300e6 < msra_c.total_weights < 360e6
+    alex = wl.alexnet()
+    assert 55e6 < alex.total_weights < 70e6
+    assert 4.5 < msra_c.total_weights / alex.total_weights < 6.5
+    # resnet-34: ~3.6 GMACs, ~21M params
+    rn = wl.resnet34()
+    assert 15e6 < rn.total_weights < 30e6
+    assert 3e9 < rn.total_macs < 5e9
+
+
+def test_isaac_chip_anchors():
+    isaac = arch.ISAAC_CHIP
+    # 168 tiles x 12 IMAs x 8 crossbars of 128x128 @ 16 cycles => 41.3 TOPS
+    assert isaac.peak_gops() == pytest.approx(41300, rel=0.02)
+    # ADC dominates: Newton §V says ~49% of ISAAC chip power
+    pa = isaac.conv_tile.power_area()
+    share = pa["ima_adc"].power_w * isaac.tiles / isaac.total_power_w()
+    assert 0.42 < share < 0.58
+
+
+def test_isaac_pj_per_op_anchor(suite_results):
+    pj = np.mean([r["isaac"].pj_per_op for r in suite_results.values()])
+    # paper: 1.8 pJ/op (our Table-I Kull ADC at 3.1 mW lands higher; ISAAC's
+    # own table used ~2 mW for the same part — band covers both)
+    assert 1.4 < pj < 2.6
+
+
+def test_newton_vs_isaac_headline(suite_results):
+    h = en.headline(suite_results)
+    # paper: 77% power decrease, 51% energy decrease, 2.2x throughput/area.
+    # Mechanism-derived model bands (deviations documented):
+    assert 0.50 < h["power_decrease"] < 0.85
+    assert 0.35 < h["energy_decrease"] < 0.60
+    assert 1.8 < h["throughput_per_area_x"] < 2.5
+    # ordering of the claims must hold: power drops more than energy
+    assert h["power_decrease"] > h["energy_decrease"]
+
+
+def test_newton_pj_per_op_improvement(suite_results):
+    pj_i = np.mean([r["isaac"].pj_per_op for r in suite_results.values()])
+    pj_n = np.mean([r["newton (+strassen)"].pj_per_op for r in suite_results.values()])
+    # paper: 1.8 -> 0.85 pJ/op (ratio 0.47); we land within [0.4, 0.65]
+    assert 0.40 < pj_n / pj_i < 0.65
+    assert pj_n > arch.IDEAL_NEURON_PJ  # can't beat the ideal neuron
+
+
+def test_technique_stack_directions(suite_results):
+    """Each technique moves the metric the paper says it moves."""
+    labels = [l for l, _, _, _ in en.technique_stack()]
+
+    def mean(metric, lab):
+        return np.mean([getattr(suite_results[n][lab], metric) for n in suite_results])
+
+    # T1 compact HTree: large area-efficiency gain, power drops (Fig 11)
+    assert mean("ce", "+compact-htree") > 1.25 * mean("ce", "isaac")
+    assert mean("peak_power_w", "+compact-htree") < 0.95 * mean("peak_power_w", "isaac")
+    # T2 adaptive ADC: power drops ~15% (Fig 12)
+    r = mean("peak_power_w", "+adaptive-adc") / mean("peak_power_w", "+compact-htree")
+    assert 0.78 < r < 0.92
+    # T3 Karatsuba: energy down, area efficiency slightly down (Fig 13/14)
+    assert mean("energy_per_sample_j", "+karatsuba") < mean("energy_per_sample_j", "+adaptive-adc")
+    assert mean("ce", "+karatsuba") < mean("ce", "+adaptive-adc")
+    # buffers: area efficiency up ~6.5% (Fig 16)
+    r = mean("ce", "+small-buffers") / mean("ce", "+karatsuba")
+    assert 1.02 < r < 1.10
+    # FC tiles: big power reduction (Fig 17), area efficiency up (Fig 18)
+    r = mean("peak_power_w", "+fc-tiles") / mean("peak_power_w", "+small-buffers")
+    assert r < 0.80
+    assert mean("ce", "+fc-tiles") > mean("ce", "+small-buffers")
+    # Strassen: energy efficiency gain, modest (Fig 19)
+    r = mean("energy_per_sample_j", labels[-1]) / mean("energy_per_sample_j", "+fc-tiles")
+    assert 0.75 < r < 0.99
+
+
+def test_resnet_gains_least(suite_results):
+    """Paper §V: Resnet does not gain much from heterogeneous FC tiles."""
+    last, base = "newton (+strassen)", "isaac"
+    ratios = {
+        n: suite_results[n][last].peak_power_w / suite_results[n][base].peak_power_w
+        for n in suite_results
+    }
+    assert ratios["resnet-34"] == max(ratios.values())
+
+
+def test_fig10_underutilization_trend():
+    sizes = [(128, 128), (128, 256), (512, 256), (2048, 1024), (8192, 1024)]
+    uu = mapper.underutilization_sweep(wl.benchmark_suite(), sizes, arch.NEWTON_CHIP)
+    vals = list(uu.values())
+    # monotone-ish growth with IMA size; chosen point (128x256) is small
+    assert vals == sorted(vals)
+    assert uu["128x256"] < 0.12  # paper: ~9%
+    assert uu["8192x1024"] > 0.45  # paper: "quite significant"
+
+
+def test_buffer_requirement_band():
+    """Fig 15: Newton's spreading brings per-tile buffers well under 64 KB
+    (16 KB chosen for 256x256 images; 224x224 suite lands below that)."""
+    for net in wl.benchmark_suite():
+        m = mapper.map_network(net, arch.NEWTON_CHIP, policy="newton")
+        assert m.mean_tile_buffer_bytes < 32 * 1024
+    worst = max(
+        mapper.map_network(n, arch.ISAAC_CHIP, policy="isaac").worst_tile_buffer_bytes
+        for n in wl.benchmark_suite()
+    )
+    assert worst > 32 * 1024  # ISAAC's worst case motivates its 64 KB
+
+
+def test_fc_replication_keeps_throughput():
+    """T5: slowing FC ADCs must not lower pipeline throughput (paper Fig 17)."""
+    for net in (wl.resnet34(), wl.vgg("a")):
+        fast = mapper.map_network(net, arch.newton_chip(fc_tiles=False), policy="newton")
+        slow = mapper.map_network(net, arch.newton_chip(fc_tiles=True), policy="newton")
+        assert slow.throughput_samples_s == pytest.approx(fast.throughput_samples_s)
+
+
+def test_tpu_comparison_direction():
+    """Fig 24: the 8-bit Newton beats the TPU-1 model on throughput for the
+    large networks (the paper notes Alexnet/Resnet gain least because small
+    networks batch well on the TPU)."""
+    tpu = en.TPUModel()
+    chip8 = arch.newton_chip_8bit()
+    wins = {}
+    for net in (wl.msra("a"), wl.msra("c"), wl.vgg("d"), wl.alexnet()):
+        b = tpu.best_batch(net)
+        tpu_thpt = tpu.throughput(net, b)
+        newton = en.evaluate(net, chip8, policy="newton", strassen=True)
+        newton_thpt = newton.throughput_samples_s * (tpu.area_mm2 / newton.area_mm2)
+        wins[net.name] = newton_thpt / tpu_thpt
+    assert wins["msra-a"] > 1.0 and wins["msra-c"] > 1.0 and wins["vgg-d"] > 1.0
+    # weight-heavy nets (batch-1 on TPU) gain the most — paper's MSRA story
+    assert wins["msra-c"] > wins["alexnet"]

@@ -1,0 +1,264 @@
+"""Substrate tests: optimizers, schedules, data determinism, checkpointing
+(incl. elastic restore), the fault-tolerant train loop, serving engine."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint import CheckpointManager, latest_step, restore_checkpoint, save_checkpoint
+from repro.configs.base import reduced
+from repro.data import SyntheticLMDataset, MemmapLMDataset, prefetch
+from repro.models import model as M
+from repro.optim import (
+    adafactor,
+    adamw,
+    constant,
+    cosine_with_warmup,
+    global_norm,
+    make_optimizer,
+    sgd,
+)
+from repro.serving import ServingEngine
+from repro.train import TrainLoop, make_train_step
+from repro.train.loop import StragglerMonitor
+
+
+# --- optimizers -------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["sgd", "adamw", "adafactor"])
+def test_optimizer_converges_quadratic(name):
+    """Each optimizer minimizes a simple quadratic (sum-scaled so SGD's raw
+    gradients are O(w - target), not O(1/numel))."""
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(4, 130)).astype(np.float32))
+    params = {"w": jnp.zeros((4, 130))}
+    lr = {"sgd": 0.02, "adamw": 0.05, "adafactor": 0.3}[name]
+    opt = make_optimizer(name, constant(lr))
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    step = jnp.int32(0)
+    for i in range(300):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, step + i)
+    assert float(jnp.mean((params["w"] - target) ** 2)) < 0.05
+
+
+def test_adafactor_state_is_factored():
+    params = {"big": jnp.zeros((512, 256)), "small": jnp.zeros((8,))}
+    opt = adafactor(constant(1e-2))
+    st = opt.init(params)
+    assert "vr" in st["acc"]["big"] and st["acc"]["big"]["vr"].shape == (512,)
+    assert st["acc"]["big"]["vc"].shape == (256,)
+    assert "v" in st["acc"]["small"]
+    # factored state is ~(r+c)/(r*c) of adam's
+    adam_bytes = 2 * 512 * 256
+    fact_bytes = 512 + 256
+    assert fact_bytes < adam_bytes / 100
+
+
+def test_layerwise_update_matches_direct():
+    """The lax.map layer-chunked update must equal the unchunked math."""
+    from repro.optim import optimizers as O
+
+    rng = np.random.default_rng(1)
+    p = jnp.asarray(rng.normal(size=(6, 256, 300)).astype(np.float32))  # stacked
+    g = jnp.asarray(rng.normal(size=(6, 256, 300)).astype(np.float32))
+    opt = adamw(constant(1e-2))
+    st = opt.init({"w": p})
+    p1, st1 = opt.update({"w": g}, st, {"w": p}, jnp.int32(0))
+    # force the non-layerwise path by lowering the size threshold
+    old = O.LAYERWISE_MIN_DIM
+    O.LAYERWISE_MIN_DIM = 99  # disables layerwise
+    try:
+        p2, st2 = opt.update({"w": g}, opt.init({"w": p}), {"w": p}, jnp.int32(0))
+    finally:
+        O.LAYERWISE_MIN_DIM = old
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p2["w"]), rtol=1e-6)
+
+
+def test_cosine_schedule_shape():
+    f = cosine_with_warmup(1.0, 10, 100)
+    assert float(f(jnp.int32(0))) == 0.0
+    assert float(f(jnp.int32(10))) == pytest.approx(1.0, rel=1e-3)
+    assert float(f(jnp.int32(100))) == pytest.approx(0.1, rel=1e-2)
+
+
+# --- data -------------------------------------------------------------------
+
+def test_synthetic_data_deterministic_and_restart_safe():
+    ds1 = SyntheticLMDataset(1000, 32, 4, seed=7)
+    ds2 = SyntheticLMDataset(1000, 32, 4, seed=7)
+    b5a, b5b = ds1.batch_at(5), ds2.batch_at(5)
+    np.testing.assert_array_equal(b5a["inputs"], b5b["inputs"])
+    assert not np.array_equal(ds1.batch_at(6)["inputs"], b5a["inputs"])
+    # host sharding partitions the global batch
+    h0 = SyntheticLMDataset(1000, 32, 4, seed=7, process_index=0, process_count=2)
+    h1 = SyntheticLMDataset(1000, 32, 4, seed=7, process_index=1, process_count=2)
+    assert h0.local_batch == 2
+    assert not np.array_equal(h0.batch_at(0)["inputs"], h1.batch_at(0)["inputs"])
+
+
+def test_memmap_dataset(tmp_path):
+    path = tmp_path / "tokens.bin"
+    np.arange(10000, dtype=np.int32).tofile(path)
+    ds = MemmapLMDataset(str(path), seq_len=16, global_batch=2, process_index=0, process_count=1)
+    b = ds.batch_at(0)
+    assert b["inputs"].shape == (2, 16)
+    np.testing.assert_array_equal(b["targets"][:, :-1], b["inputs"][:, 1:])
+    np.testing.assert_array_equal(ds.batch_at(0)["inputs"], ds.batch_at(0)["inputs"])
+
+
+def test_prefetch_preserves_order():
+    out = list(prefetch(iter(range(10)), size=3))
+    assert out == list(range(10))
+
+
+# --- checkpointing ----------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_elastic(tmp_path):
+    tree = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4), "b": {"c": jnp.ones(5)}}
+    save_checkpoint(str(tmp_path), 7, tree, {"note": "x"})
+    assert latest_step(str(tmp_path)) == 7
+    restored, step, meta = restore_checkpoint(str(tmp_path), None, tree)
+    assert step == 7 and meta["note"] == "x"
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+    # elastic: restore onto an explicit different sharding (single device)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_local_mesh
+
+    mesh = make_local_mesh(model=1)
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+    restored2, _, _ = restore_checkpoint(str(tmp_path), None, tree, shardings=sh)
+    assert restored2["b"]["c"].sharding == sh["b"]["c"]
+
+
+def test_checkpoint_manager_async_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"w": jnp.zeros(3)}
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, tree)
+    mgr.wait()
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == [3, 4]
+
+
+# --- train loop fault tolerance ----------------------------------------------
+
+def test_nan_step_is_skipped():
+    cfg = reduced(configs.get_config("smollm-360m"))
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+    opt = make_optimizer("adamw", constant(1e-3))
+
+    def poisoned_loss(p, b):
+        return M.loss_fn(p, cfg, b) * jnp.where(b["targets"][0, 0] == 0, jnp.nan, 1.0)
+
+    step = make_train_step(cfg, opt, loss_fn=poisoned_loss)
+    batch = {
+        "inputs": jnp.zeros((2, 8), jnp.int32),
+        "targets": jnp.zeros((2, 8), jnp.int32),  # triggers the NaN
+    }
+    p2, o2, _, metrics = step(params, opt.init(params), jnp.int32(0), batch)
+    assert int(metrics["skipped"]) == 1
+    deltas = jax.tree.leaves(jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), params, p2))
+    assert max(deltas) == 0.0  # params untouched
+
+
+def test_microbatched_grad_accum_matches_full():
+    cfg = reduced(configs.get_config("smollm-360m"))
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+    opt = make_optimizer("sgd", constant(1e-2))
+    full = make_train_step(cfg, opt, microbatches=1)
+    micro = make_train_step(cfg, opt, microbatches=2)
+    key = jax.random.PRNGKey(3)
+    batch = {
+        "inputs": jax.random.randint(key, (4, 8), 0, cfg.vocab_size),
+        "targets": jax.random.randint(key, (4, 8), 0, cfg.vocab_size),
+    }
+    p1, _, _, m1 = full(params, opt.init(params), jnp.int32(0), batch)
+    p2, _, _, m2 = micro(params, opt.init(params), jnp.int32(0), batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    d = max(jax.tree.leaves(jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), p1, p2)))
+    assert d < 1e-5
+
+
+def test_train_resume_is_deterministic(tmp_path):
+    cfg = reduced(configs.get_config("smollm-360m"))
+    opt = make_optimizer("adamw", constant(1e-3))
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    ds = SyntheticLMDataset(cfg.vocab_size, 16, 2, seed=0)
+
+    def fresh():
+        p, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+        return p, opt.init(p)
+
+    # uninterrupted run: 6 steps
+    p, o = fresh()
+    loop = TrainLoop(cfg, step_fn, ds, ckpt_dir=None, log_every=100)
+    p_ref, _ = loop.run(p, o, 6)
+
+    # interrupted run: 3 steps + checkpoint, then resume for 3 more
+    p, o = fresh()
+    loop1 = TrainLoop(cfg, step_fn, ds, ckpt_dir=str(tmp_path), ckpt_every=3, log_every=100)
+    loop1.run(p, o, 3)
+    p2, o2 = fresh()
+    loop2 = TrainLoop(cfg, step_fn, ds, ckpt_dir=str(tmp_path), ckpt_every=100, log_every=100)
+    p2, o2, start = loop2.maybe_resume(p2, o2)
+    assert start == 3
+    p_resumed, _ = loop2.run(p2, o2, 6, start_step=start)
+    d = max(jax.tree.leaves(jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), p_ref, p_resumed)))
+    assert d < 1e-6
+
+
+def test_straggler_monitor_flags_outliers():
+    m = StragglerMonitor(threshold=3.0)
+    for _ in range(10):
+        assert not m.observe(0.1)
+    assert m.observe(1.0)  # 10x the EMA
+    assert m.flagged == 1
+
+
+# --- serving ------------------------------------------------------------------
+
+def test_serving_engine_matches_teacher_forcing():
+    cfg = reduced(configs.get_config("smollm-360m"))
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=128)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n) for n in (7, 13, 22)]
+    for p in prompts:
+        eng.submit(p, max_new_tokens=5)
+    reqs = eng.run_until_done()
+    assert len(reqs) == 3
+    for req, prompt in zip(reqs, prompts):
+        full = list(prompt)
+        ref = []
+        for _ in range(5):
+            logits = M.forward(params, cfg, jnp.asarray([full]))
+            nxt = int(jnp.argmax(logits[0, -1]))
+            ref.append(nxt)
+            full.append(nxt)
+        assert req.generated[:5] == ref
+
+
+def test_serving_engine_recurrent_prefix():
+    """Recurrent archs: small float reorders may flip late near-tie argmaxes
+    on random weights; assert the prefix matches."""
+    cfg = reduced(configs.get_config("jamba-v0.1-52b"))
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=128)
+    prompt = np.random.default_rng(0).integers(0, cfg.vocab_size, size=9)
+    eng.submit(prompt, max_new_tokens=4)
+    (req,) = eng.run_until_done()
+    full = list(prompt)
+    ref = []
+    for _ in range(4):
+        logits = M.forward(params, cfg, jnp.asarray([full]))
+        nxt = int(jnp.argmax(logits[0, -1]))
+        ref.append(nxt)
+        full.append(nxt)
+    assert req.generated[:2] == ref[:2]
