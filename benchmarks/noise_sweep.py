@@ -1,0 +1,151 @@
+"""Accuracy-vs-device-noise sweep: the paper's claims under real devices.
+
+Sweeps conductance-variation sigma and stuck-at fault rate through the noisy
+Pallas datapath (interpret mode on CPU) for full-resolution and
+SAFE_ADAPTIVE ADC configs, measuring output error against the ideal
+bit-exact datapath.  The zero-noise point is asserted bit-identical to
+``crossbar_vmm`` — the subsystem's end-to-end acceptance check.
+
+Run:  PYTHONPATH=src python -m benchmarks.noise_sweep [--out noise_sweep.json]
+
+Emits JSON:
+  {"meta": {...},
+   "variation_curve": [{"sigma": s, "adc": "full"|"safe_adaptive",
+                        "rmse_ulp": ..., "max_abs_ulp": ..., "rel_err": ...,
+                        "bit_exact_vs_ideal": bool}, ...],
+   "fault_curve":     [{"fault_rate": p, "adc": ..., ...}, ...]}
+
+Error units: output ULPs of the per-layer-scaled 16-bit output format
+(``layer_scaled_spec`` picks drop_lsb so the K-row accumulator fits the
+window — the deployment regime, where outputs are not clamp-saturated).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import adc
+from repro.core import crossbar as cb
+from repro.device import DeviceConfig, effective_cell_codes
+from repro.kernels import ops
+
+SIGMAS = [0.0, 0.02, 0.05, 0.1, 0.2, 0.4]
+FAULT_RATES = [0.0, 1e-3, 3e-3, 1e-2, 3e-2]
+ADC_CONFIGS = {"full": None, "safe_adaptive": adc.SAFE_ADAPTIVE}
+
+
+def _error_row(y: np.ndarray, y_ideal: np.ndarray) -> Dict[str, float]:
+    d = y.astype(np.int64) - y_ideal.astype(np.int64)
+    denom = max(1.0, float(np.abs(y_ideal).mean()))
+    return {
+        "rmse_ulp": float(np.sqrt(np.mean(d * d.astype(np.float64)))),
+        "max_abs_ulp": int(np.abs(d).max()),
+        "rel_err": float(np.abs(d).mean() / denom),
+        "bit_exact_vs_ideal": bool((d == 0).all()),
+    }
+
+
+def run_sweep(
+    batch: int = 8,
+    k: int = 256,
+    n: int = 64,
+    sigmas: Optional[List[float]] = None,
+    fault_rates: Optional[List[float]] = None,
+    seed: int = 0,
+    interpret: bool = True,
+) -> Dict:
+    sigmas = SIGMAS if sigmas is None else sigmas
+    fault_rates = FAULT_RATES if fault_rates is None else fault_rates
+    spec = cb.layer_scaled_spec(cb.DEFAULT_SPEC, k)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 1 << spec.input_bits, size=(batch, k)))
+    w = jnp.asarray(
+        rng.integers(-(1 << (spec.weight_bits - 1)), 1 << (spec.weight_bits - 1), size=(k, n))
+    )
+    wb = w.astype(jnp.int32) + spec.weight_bias
+    y_ideal = np.asarray(cb.crossbar_vmm(x, w, spec))
+
+    def measure(cfg: DeviceConfig, adc_name: str) -> Dict[str, float]:
+        g_eff = effective_cell_codes(wb, spec, cfg)
+        y = np.asarray(
+            ops.noisy_vmm_op(x, g_eff, spec, adc_cfg=ADC_CONFIGS[adc_name], interpret=interpret)
+        )
+        return _error_row(y, y_ideal)
+
+    variation_curve = []
+    for adc_name in ADC_CONFIGS:
+        for s in sigmas:
+            row = {"sigma": s, "adc": adc_name}
+            row.update(measure(DeviceConfig(sigma=s, seed=seed), adc_name))
+            variation_curve.append(row)
+            if s == 0.0 and adc_name == "full":
+                # acceptance: the zero-noise point through the noisy Pallas
+                # kernel must reproduce the ideal datapath bit-for-bit
+                assert row["bit_exact_vs_ideal"], "zero-noise point diverged from crossbar_vmm"
+
+    fault_curve = []
+    for adc_name in ADC_CONFIGS:
+        for p in fault_rates:
+            cfg = DeviceConfig(p_stuck_on=p / 2, p_stuck_off=p / 2, seed=seed)
+            row = {"fault_rate": p, "adc": adc_name}
+            row.update(measure(cfg, adc_name))
+            fault_curve.append(row)
+
+    return {
+        "meta": {
+            "batch": batch,
+            "k": k,
+            "n": n,
+            "spec": {"drop_lsb": spec.drop_lsb, "out_bits": spec.out_bits},
+            "seed": seed,
+        },
+        "variation_curve": variation_curve,
+        "fault_curve": fault_curve,
+    }
+
+
+def noise_sweep_bench() -> Dict[str, float]:
+    """Compact entry for benchmarks.run: headline numbers only."""
+    out = run_sweep(batch=4, k=128, n=32, sigmas=[0.0, 0.1], fault_rates=[0.0, 1e-2])
+    by = {(r["adc"], r["sigma"]): r for r in out["variation_curve"]}
+    return {
+        "zero_noise_bit_exact": float(by[("full", 0.0)]["bit_exact_vs_ideal"]),
+        "rmse_full_sigma0.1": by[("full", 0.1)]["rmse_ulp"],
+        "rmse_adaptive_sigma0.1": by[("safe_adaptive", 0.1)]["rmse_ulp"],
+    }
+
+
+ALL = [("noise_sweep", noise_sweep_bench)]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="noise_sweep.json")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--k", type=int, default=256)
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out = run_sweep(batch=args.batch, k=args.k, n=args.n, seed=args.seed)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}")
+    for row in out["variation_curve"]:
+        print(
+            f"  sigma={row['sigma']:<5} adc={row['adc']:<14} "
+            f"rmse={row['rmse_ulp']:<10.3f} max={row['max_abs_ulp']:<6} "
+            f"bit_exact={row['bit_exact_vs_ideal']}"
+        )
+    for row in out["fault_curve"]:
+        print(
+            f"  fault={row['fault_rate']:<6} adc={row['adc']:<14} "
+            f"rmse={row['rmse_ulp']:<10.3f} max={row['max_abs_ulp']:<6}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -13,14 +13,14 @@ import time
 
 def main() -> None:
     sys.path.insert(0, "src")
-    from benchmarks import kernel_bench, paper_figures
+    from benchmarks import kernel_bench, noise_sweep, paper_figures
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="substring filter")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
-    for name, fn in paper_figures.ALL + kernel_bench.ALL:
+    for name, fn in paper_figures.ALL + kernel_bench.ALL + noise_sweep.ALL:
         if args.only and args.only not in name:
             continue
         t0 = time.perf_counter()

@@ -1,0 +1,75 @@
+"""Inference through realistic memristor devices: the device/ subsystem demo.
+
+Three stages:
+  1. write-verify calibration of one projection's weight slab — how many
+     programming pulses it takes, what residual error is left, what faults do;
+  2. layer-level accuracy vs conductance-variation sigma, full vs adaptive
+     ADC — the curves ``benchmarks/noise_sweep.py`` produces in JSON form;
+  3. a full (reduced) LM forward pass with every projection on the noisy
+     crossbar datapath via ``CrossbarMode(device=...)``.
+
+Run:  PYTHONPATH=src python examples/noisy_inference.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.base import reduced
+from repro.core import adc
+from repro.core import crossbar as cb
+from repro.device import DeviceConfig, write_verify
+from repro.kernels import ops
+from repro.models import model as M
+from repro.models.layers import CrossbarMode, crossbar_mode
+
+rng = np.random.default_rng(0)
+K, N = 256, 64
+spec = cb.layer_scaled_spec(cb.DEFAULT_SPEC, K)
+w = jnp.asarray(rng.integers(-(1 << 15), 1 << 15, size=(K, N)))
+wb = w.astype(jnp.int32) + spec.weight_bias
+
+print("== 1. write-verify programming (sigma=0.2, 0.2% stuck cells) ==")
+cfg = DeviceConfig(sigma=0.2, p_stuck_on=1e-3, p_stuck_off=1e-3, write_verify_iters=8)
+_, rep = write_verify(wb, spec, cfg)
+print(f"pulses used {rep.iterations}; converged {100*rep.converged_frac:.2f}% "
+      f"(stuck {100*rep.stuck_frac:.2f}%)")
+print("mean |error| per pulse (cell codes): "
+      + " -> ".join(f"{e:.3f}" for e in rep.per_iter_mean_error))
+
+print("\n== 2. output error vs sigma, full vs SAFE_ADAPTIVE ADC ==")
+x = jnp.asarray(rng.integers(0, 1 << 16, size=(8, K)))
+y_ideal = np.asarray(cb.crossbar_vmm(x, w, spec), dtype=np.int64)
+print(f"{'sigma':>6s} {'full rmse':>10s} {'adaptive rmse':>14s}")
+for sigma in (0.0, 0.05, 0.1, 0.2):
+    dev = DeviceConfig(sigma=sigma, write_verify_iters=4)
+    from repro.device import effective_cell_codes
+
+    g_eff = effective_cell_codes(wb, spec, dev)
+    rmses = []
+    for acfg in (None, adc.SAFE_ADAPTIVE):
+        y = np.asarray(ops.noisy_vmm_op(x, g_eff, spec, adc_cfg=acfg), dtype=np.int64)
+        rmses.append(float(np.sqrt(np.mean((y - y_ideal) ** 2.0))))
+    tag = "  (bit-exact)" if sigma == 0.0 and rmses[0] == 0.0 else ""
+    print(f"{sigma:6.2f} {rmses[0]:10.3f} {rmses[1]:14.3f}{tag}")
+
+print("\n== 3. reduced LM forward on noisy crossbars ==")
+# Bit-sliced W16 is brutally noise-sensitive: an MSB-slice cell holds bits
+# 14-15, so conductance variation there perturbs the weight in proportion to
+# *full scale*, not the weight's own magnitude (Xiao et al. 2021).  Even
+# sigma=0.05 destroys the logits — which is what motivates the ROADMAP items
+# on noise-aware training and fault-aware mapping.
+cfg_lm = reduced(configs.get_config("smollm-360m"))
+params, _ = M.init_model(jax.random.PRNGKey(0), cfg_lm)
+tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg_lm.vocab_size)
+logits_f = M.forward(params, cfg_lm, tokens)
+for label, dev in (
+    ("ideal devices", None),
+    ("sigma=0.02 + write-verify", DeviceConfig(sigma=0.02, write_verify_iters=6)),
+    ("sigma=0.10 + write-verify", DeviceConfig(sigma=0.10, write_verify_iters=6)),
+):
+    with crossbar_mode(CrossbarMode(enabled=True, device=dev)):
+        logits_x = M.forward(params, cfg_lm, tokens)
+    rel = float(jnp.linalg.norm(logits_x - logits_f) / jnp.linalg.norm(logits_f))
+    agree = float(jnp.mean(jnp.argmax(logits_x, -1) == jnp.argmax(logits_f, -1)))
+    print(f"{label:26s} relative error {rel:.2e}; argmax agreement {100*agree:.1f}%")

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 test wrapper.
+#
+#   scripts/run_tests.sh            fast tier (default: slow marker excluded)
+#   scripts/run_tests.sh --all      everything, including @pytest.mark.slow
+#   scripts/run_tests.sh <args...>  extra args forwarded to pytest
+#
+# pytest exits 2 on collection errors, so a broken import fails the run.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--all" ]]; then
+  shift
+  # later -m overrides the "not slow" default from pytest.ini addopts
+  exec python -m pytest -q -m "" "$@"
+fi
+exec python -m pytest -q "$@"

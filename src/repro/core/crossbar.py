@@ -163,6 +163,24 @@ def limb_from_int_shifted(v: jnp.ndarray, shift: int) -> Tuple[jnp.ndarray, jnp.
 # Core datapath
 # ---------------------------------------------------------------------------
 
+def _grouped_planes(x_codes: jnp.ndarray, spec: CrossbarSpec):
+    """DAC view of a padded (B, Kp) input block: (T, B, G, R) planes.
+
+    regroup DAC bits: dac_bits=1 -> T = input_bits planes of 1 bit each;
+    otherwise dac_bits consecutive planes combine into one multi-bit level.
+    """
+    B, Kp = x_codes.shape
+    G = Kp // spec.rows
+    planes = fxp.bit_planes(x_codes, spec.input_bits)  # (T', B, Kp) with T'=input_bits
+    if spec.dac_bits != 1:
+        T = spec.n_iters
+        pw = (1 << jnp.arange(spec.dac_bits, dtype=jnp.int32)).reshape(1, -1, 1, 1)
+        planes = jnp.pad(planes, ((0, T * spec.dac_bits - planes.shape[0]), (0, 0), (0, 0)))
+        planes = planes.reshape(T, spec.dac_bits, B, Kp)
+        planes = jnp.sum(planes * pw, axis=1)
+    return planes.reshape(planes.shape[0], B, G, spec.rows)
+
+
 def _grouped(x_codes: jnp.ndarray, w_codes: jnp.ndarray, spec: CrossbarSpec):
     """Pad the contraction dim to a multiple of ``spec.rows`` and reshape.
 
@@ -175,16 +193,7 @@ def _grouped(x_codes: jnp.ndarray, w_codes: jnp.ndarray, spec: CrossbarSpec):
         x_codes = jnp.pad(x_codes, ((0, 0), (0, Kp - K)))
         w_codes = jnp.pad(w_codes, ((0, Kp - K), (0, 0)))
     G = Kp // spec.rows
-    planes = fxp.bit_planes(x_codes, spec.input_bits)  # (T', B, Kp) with T'=input_bits
-    # regroup DAC bits: dac_bits=1 -> T = input_bits planes of 1 bit each.
-    if spec.dac_bits != 1:
-        # combine dac_bits consecutive planes into one multi-bit DAC level
-        T = spec.n_iters
-        pw = (1 << jnp.arange(spec.dac_bits, dtype=jnp.int32)).reshape(1, -1, 1, 1)
-        planes = jnp.pad(planes, ((0, T * spec.dac_bits - planes.shape[0]), (0, 0), (0, 0)))
-        planes = planes.reshape(T, spec.dac_bits, B, Kp)
-        planes = jnp.sum(planes * pw, axis=1)
-    planes = planes.reshape(planes.shape[0], B, G, spec.rows)
+    planes = _grouped_planes(x_codes, spec)
     slices = fxp.cell_slices(w_codes, spec.weight_bits, spec.cell_bits)
     slices = slices.reshape(slices.shape[0], G, spec.rows, w_codes.shape[1])
     return planes, slices, G
@@ -198,6 +207,50 @@ def _column_partials(planes: jnp.ndarray, slices: jnp.ndarray) -> jnp.ndarray:
         slices.astype(jnp.float32),
         preferred_element_type=jnp.float32,
     ).astype(jnp.int32)
+
+
+def accumulate_partials(
+    partials: jnp.ndarray, spec: CrossbarSpec
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Shift-add (T, S, B, G, N) int32 partials into a (B, N) limb pair.
+
+    Shared by the ideal and device-perturbed datapaths: once the column
+    conversions exist as integers, the digital shift-and-add tree is the
+    same exact two-limb arithmetic either way.
+    """
+    T, S = partials.shape[0], partials.shape[1]
+    t_idx = jnp.arange(T, dtype=jnp.int32) * spec.dac_bits
+    s_idx = jnp.arange(S, dtype=jnp.int32) * spec.cell_bits
+    base = (t_idx[:, None] + s_idx[None, :]).reshape(T, S, 1, 1, 1)  # (T,S,1,1,1)
+
+    # Split each shifted partial into limbs without overflowing int32:
+    # if base < RADIX_BITS: p << base fits in base+adc_bits <= 19+9=28 bits.
+    # if base >= RADIX_BITS: contribution is entirely in the hi limb.
+    base_lo = jnp.minimum(base, RADIX_BITS - 1)
+    shifted = partials << base_lo  # safe
+    c_lo = jnp.where(base < RADIX_BITS, shifted & RADIX_MASK, 0)
+    c_hi = jnp.where(
+        base < RADIX_BITS,
+        shifted >> RADIX_BITS,
+        partials << jnp.maximum(base - RADIX_BITS, 0),
+    )
+    # Sum over (t, s) first: <= T*S*2^20 < 2^28 for the lo limb — safe.
+    lo_ts = jnp.sum(c_lo, axis=(0, 1))  # (B, G, N)
+    hi_ts = jnp.sum(c_hi, axis=(0, 1))
+    # Normalize per group, then reduce over groups.
+    hi_g, lo_g = limb_normalize(hi_ts, lo_ts)
+    hi = jnp.sum(hi_g, axis=1)
+    lo = jnp.sum(lo_g, axis=1)  # <= G * 2^20; G <= 2^10 keeps this < 2^31
+    return limb_normalize(hi, lo)
+
+
+def _apply_partial_transform(partials, spec, partial_transform):
+    flags = None
+    if partial_transform is not None:
+        partials, flags = partial_transform(partials, spec)
+        if flags is not None:
+            flags = jnp.any(flags, axis=(0, 1, 3))  # (B, N)
+    return partials, flags
 
 
 def crossbar_accumulate(
@@ -222,36 +275,45 @@ def crossbar_accumulate(
     """
     planes, slices, G = _grouped(x_codes, w_codes_biased, spec)
     partials = _column_partials(planes, slices)  # (T,S,B,G,N)
-    flags = None
-    if partial_transform is not None:
-        partials, flags = partial_transform(partials, spec)
-        if flags is not None:
-            flags = jnp.any(flags, axis=(0, 1, 3))  # (B, N)
+    partials, flags = _apply_partial_transform(partials, spec, partial_transform)
+    return accumulate_partials(partials, spec), flags
 
-    T, S = partials.shape[0], partials.shape[1]
-    t_idx = jnp.arange(T, dtype=jnp.int32) * spec.dac_bits
-    s_idx = jnp.arange(S, dtype=jnp.int32) * spec.cell_bits
-    base = (t_idx[:, None] + s_idx[None, :]).reshape(T, S, 1, 1, 1)  # (T,S,1,1,1)
 
-    # Split each shifted partial into limbs without overflowing int32:
-    # if base < RADIX_BITS: p << base fits in base+adc_bits <= 19+9=28 bits.
-    # if base >= RADIX_BITS: contribution is entirely in the hi limb.
-    base_lo = jnp.minimum(base, RADIX_BITS - 1)
-    shifted = partials << base_lo  # safe
-    c_lo = jnp.where(base < RADIX_BITS, shifted & RADIX_MASK, 0)
-    c_hi = jnp.where(
-        base < RADIX_BITS,
-        shifted >> RADIX_BITS,
-        partials << jnp.maximum(base - RADIX_BITS, 0),
+def noisy_crossbar_accumulate(
+    x_codes: jnp.ndarray,
+    g_eff: jnp.ndarray,
+    spec: CrossbarSpec,
+    partial_transform=None,
+) -> Tuple[Tuple[jnp.ndarray, jnp.ndarray], Optional[jnp.ndarray]]:
+    """Analog pipeline against *perturbed* per-slice cell values.
+
+    ``g_eff``: (S, K, N) float32 effective cell codes from
+    ``repro.device.models.effective_cell_codes`` — grid-quantized so the f32
+    column dot products below are exact (any summation order).  Each column
+    conversion is what a real ADC does to the analog bitline current: round
+    to the nearest integer code, saturating at ``partial_max``.  From there
+    the digital shift-add tree is identical to the ideal path, so a zero-
+    noise ``g_eff`` reproduces ``crossbar_accumulate`` bit-for-bit.
+    """
+    B, K = x_codes.shape
+    Kp = -(-K // spec.rows) * spec.rows
+    if Kp != K:
+        x_codes = jnp.pad(x_codes, ((0, 0), (0, Kp - K)))
+        g_eff = jnp.pad(g_eff, ((0, 0), (0, Kp - K), (0, 0)))
+    G = Kp // spec.rows
+    planes = _grouped_planes(x_codes, spec)
+    slices = g_eff.astype(jnp.float32).reshape(g_eff.shape[0], G, spec.rows, g_eff.shape[2])
+    raw = jnp.einsum(
+        "tbgr,sgrn->tsbgn",
+        planes.astype(jnp.float32),
+        slices,
+        preferred_element_type=jnp.float32,
     )
-    # Sum over (t, s) first: <= T*S*2^20 < 2^28 for the lo limb — safe.
-    lo_ts = jnp.sum(c_lo, axis=(0, 1))  # (B, G, N)
-    hi_ts = jnp.sum(c_hi, axis=(0, 1))
-    # Normalize per group, then reduce over groups.
-    hi_g, lo_g = limb_normalize(hi_ts, lo_ts)
-    hi = jnp.sum(hi_g, axis=1)
-    lo = jnp.sum(lo_g, axis=1)  # <= G * 2^20; G <= 2^10 keeps this < 2^31
-    return limb_normalize(hi, lo), flags
+    # ADC sampling of the analog column current: round-half-up, saturating.
+    partials = jnp.floor(raw + 0.5).astype(jnp.int32)
+    partials = jnp.clip(partials, 0, spec.partial_max)
+    partials, flags = _apply_partial_transform(partials, spec, partial_transform)
+    return accumulate_partials(partials, spec), flags
 
 
 def requantize_limbs(
@@ -352,12 +414,17 @@ def crossbar_vmm(
     w_codes: jnp.ndarray,
     spec: CrossbarSpec = DEFAULT_SPEC,
     partial_transform=None,
+    device=None,
 ) -> jnp.ndarray:
     """End-to-end crossbar VMM on integer codes.
 
     x_codes: (..., K) unsigned input codes.  w_codes: (K, N) **signed** codes
     if ``spec.signed_weights`` else unsigned.  Returns (..., N) int32 output
     codes (``out_bits`` wide, signed per spec).
+
+    ``device``: optional ``repro.device.models.DeviceConfig``; when set, the
+    weight slab is programmed through the device non-ideality pipeline and
+    the VMM runs against the perturbed cells (the ideal config is a no-op).
     """
     batch_shape = x_codes.shape[:-1]
     K = x_codes.shape[-1]
@@ -368,9 +435,37 @@ def crossbar_vmm(
     else:
         wb = w_codes.astype(jnp.int32)
         x_sum = None
-    acc, flags = crossbar_accumulate(xb, wb, spec, partial_transform)
+    if device is not None and not device.is_ideal:
+        from repro.device import models as dev_models  # deferred: device imports core
+
+        g_eff = dev_models.effective_cell_codes(wb, spec, device)
+        acc, flags = noisy_crossbar_accumulate(xb, g_eff, spec, partial_transform)
+    else:
+        acc, flags = crossbar_accumulate(xb, wb, spec, partial_transform)
     y = requantize_limbs(acc, spec, x_sum=x_sum, clamp_flags=flags)
     return y.reshape(batch_shape + (w_codes.shape[-1],))
+
+
+def noisy_crossbar_vmm(
+    x_codes: jnp.ndarray,
+    g_eff: jnp.ndarray,
+    spec: CrossbarSpec = DEFAULT_SPEC,
+    partial_transform=None,
+) -> jnp.ndarray:
+    """Crossbar VMM against precomputed effective cell codes.
+
+    Same contract as ``crossbar_vmm`` but the weights are already programmed:
+    ``g_eff`` is the (S, K, N) float32 effective-cell-code array (biased
+    representation).  This is the functional oracle for the batched Pallas
+    kernel ``kernels.noisy_vmm``.
+    """
+    batch_shape = x_codes.shape[:-1]
+    K = x_codes.shape[-1]
+    xb = x_codes.reshape(-1, K).astype(jnp.int32)
+    x_sum = jnp.sum(xb, axis=-1) if spec.signed_weights else None
+    acc, flags = noisy_crossbar_accumulate(xb, g_eff, spec, partial_transform)
+    y = requantize_limbs(acc, spec, x_sum=x_sum, clamp_flags=flags)
+    return y.reshape(batch_shape + (g_eff.shape[-1],))
 
 
 def signed_vmm_limbs(
@@ -466,6 +561,7 @@ def crossbar_matmul_f32(
     spec: CrossbarSpec = DEFAULT_SPEC,
     qp: Optional[QuantParams] = None,
     partial_transform=None,
+    device=None,
 ) -> jnp.ndarray:
     """Quantize float operands, run the crossbar pipeline, dequantize.
 
@@ -481,7 +577,7 @@ def crossbar_matmul_f32(
         x_scale, w_scale = qp.x_scale, qp.w_scale
     xq = quantize_input(x, spec, x_scale)
     wq = quantize_weight(w, spec, w_scale)
-    yq = crossbar_vmm(xq, wq, spec, partial_transform=partial_transform)
+    yq = crossbar_vmm(xq, wq, spec, partial_transform=partial_transform, device=device)
     return yq.astype(jnp.float32) * (x_scale * w_scale * (2.0 ** spec.drop_lsb))
 
 

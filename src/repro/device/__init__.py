@@ -1,0 +1,22 @@
+"""Device non-ideality subsystem: memristor fault/variation models, the
+write-verify programmer, and the read-time pipeline that turns ideal cell
+codes into the perturbed values the noisy datapath multiplies against.
+
+Entry points:
+  * ``DeviceConfig`` / ``IDEAL_DEVICE`` — the knobs (all-default == ideal).
+  * ``effective_cell_codes`` — (K, N) biased codes -> (S, K, N) effective.
+  * ``program.write_verify`` — calibration loop with convergence report.
+  * ``core.crossbar.crossbar_vmm(..., device=cfg)`` and
+    ``kernels.ops.noisy_vmm_op`` — functional / Pallas inference paths.
+"""
+from repro.device.models import (  # noqa: F401
+    DeviceConfig,
+    GEFF_FRAC_BITS,
+    IDEAL_DEVICE,
+    effective_cell_codes,
+    fault_masks,
+    programmed_conductance,
+    read_effective_codes,
+    target_cell_codes,
+)
+from repro.device.program import ProgramReport, write_verify  # noqa: F401

@@ -1,0 +1,261 @@
+"""Memristor device non-ideality models for the Newton crossbar datapath.
+
+Composable, seeded models of everything between "the mapper assigns cell code
+``c``" and "the column ADC samples a current":
+
+* **conductance quantization** — a cell stores one of ``2**cell_bits`` levels
+  spread linearly over the device rails ``[g_off_s, g_on_s]`` (the AG2048
+  metal-oxide device range, 3.16 uS .. 316 uS),
+* **programming variation** — each write lands lognormally distributed around
+  the target conductance (``sigma`` on ``ln G``),
+* **drift** — programmed conductance decays as the power law
+  ``G(t) = G0 * (1 + t/t0)**-nu`` (PCM/ReRAM retention),
+* **stuck-at faults** — a seeded per-cell map pins faulty cells to the
+  ``g_on_s`` / ``g_off_s`` rails regardless of writes,
+* **IR drop** — wordline/bitline wire resistance attenuates each cell's
+  contribution.  This follows the AG2048 ``LineResistanceCrossbar`` model
+  reduced to its first-order series-resistance form (``g_eff = g / (1 + g *
+  R_series)`` with ``R_series`` the wire path through column ``j`` and row
+  ``i`` of the 128-row group) so it stays a closed-form jnp expression
+  instead of a nodal solve.
+
+All randomness flows from ``DeviceConfig.seed`` through stage-tagged
+``jax.random.fold_in`` keys, so fault maps and programming noise are
+reproducible functions of (config, weight-slab shape).  The all-default
+``DeviceConfig()`` is the identity: effective cell codes equal the ideal
+slices bit-for-bit (tests/test_device.py pins this down).
+
+Effective cell values are returned in *code units* on a ``2**-GEFF_FRAC_BITS``
+grid.  The grid is what makes the noisy Pallas kernel verifiable: every
+column partial is a multiple of the grid step and bounded by
+``spec.partial_max``, so float32 summation is exact in any order and the
+kernel matches the jnp reference bit-for-bit, not just allclose
+(see ``kernels/noisy_vmm.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixedpoint as fxp
+from repro.core.crossbar import CrossbarSpec
+
+# Fractional bits of the effective-cell-code grid.  Exactness of f32 column
+# sums needs partial_max * 2**GEFF_FRAC_BITS < 2**24 (float32 integer range):
+# 384 * 256 = 98304 for the default spec, with ample headroom for variants.
+GEFF_FRAC_BITS = 8
+
+_STAGES = {"faults": 0, "program": 1}
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceConfig:
+    """Programmed-conductance non-ideality knobs (all default to ideal)."""
+
+    sigma: float = 0.0  # lognormal programming variation of ln(G)
+    p_stuck_on: float = 0.0  # fraction of cells pinned at g_on_s
+    p_stuck_off: float = 0.0  # fraction of cells pinned at g_off_s
+    drift_nu: float = 0.0  # power-law drift exponent
+    t_drift_s: float = 0.0  # time since programming (seconds)
+    t0_s: float = 1.0  # drift reference time
+    r_line_ohm: float = 0.0  # wire resistance per cell segment
+    g_on_s: float = 316e-6  # device rails (siemens); AG2048 static memristor
+    g_off_s: float = 3.16e-6
+    write_verify_iters: int = 1  # programming pulses (1 = open-loop write)
+    write_verify_tol: float = 0.25  # verify tolerance, cell-code units
+    seed: int = 0
+
+    def replace(self, **kw) -> "DeviceConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def is_ideal(self) -> bool:
+        return (
+            self.sigma == 0.0
+            and self.p_stuck_on == 0.0
+            and self.p_stuck_off == 0.0
+            and (self.drift_nu == 0.0 or self.t_drift_s == 0.0)
+            and self.r_line_ohm == 0.0
+        )
+
+
+IDEAL_DEVICE = DeviceConfig()
+
+
+def _stage_key(cfg: DeviceConfig, stage: str, tag: Optional[jnp.ndarray] = None) -> jax.Array:
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), _STAGES[stage])
+    if tag is not None:
+        key = jax.random.fold_in(key, tag)
+    return key
+
+
+def _slab_tag(w_codes_biased: jnp.ndarray) -> jnp.ndarray:
+    """Content-derived uint32 tag mixed into the stage keys per weight slab.
+
+    Without it, every same-shape slab in a model (e.g. all q/k/v/o
+    projections) would draw identical fault maps and noise fields from the
+    shared ``DeviceConfig``, making layer errors add coherently instead of
+    independently.  A position-weighted wrapping sum keeps the pipeline a
+    deterministic function of (config, weights) while decorrelating slabs.
+    """
+    w = w_codes_biased.astype(jnp.uint32).ravel()
+    mix = jnp.arange(w.size, dtype=jnp.uint32) * jnp.uint32(2654435761) + jnp.uint32(1)
+    return jnp.sum(w * mix, dtype=jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Conductance <-> cell-code mapping (level quantization)
+# ---------------------------------------------------------------------------
+
+def code_step_siemens(spec: CrossbarSpec, cfg: DeviceConfig) -> float:
+    """Conductance per cell-code LSB: rails split into 2**cell_bits levels."""
+    return (cfg.g_on_s - cfg.g_off_s) / ((1 << spec.cell_bits) - 1)
+
+
+def conductance_of_codes(codes: jnp.ndarray, spec: CrossbarSpec, cfg: DeviceConfig) -> jnp.ndarray:
+    return cfg.g_off_s + codes.astype(jnp.float32) * code_step_siemens(spec, cfg)
+
+
+def codes_of_conductance(g: jnp.ndarray, spec: CrossbarSpec, cfg: DeviceConfig) -> jnp.ndarray:
+    return (g - cfg.g_off_s) / code_step_siemens(spec, cfg)
+
+
+def quantize_code_grid(codes: jnp.ndarray) -> jnp.ndarray:
+    """Snap effective codes to the 2**-GEFF_FRAC_BITS grid (see module doc)."""
+    scale = float(1 << GEFF_FRAC_BITS)
+    return jnp.round(codes * scale) / scale
+
+
+# ---------------------------------------------------------------------------
+# Stochastic / deterministic perturbation stages
+# ---------------------------------------------------------------------------
+
+def fault_masks(
+    cfg: DeviceConfig, shape: Tuple[int, ...], tag: Optional[jnp.ndarray] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Disjoint (stuck_on, stuck_off) bool maps — a pure function of
+    (cfg, shape) plus the optional per-slab ``tag`` (see ``_slab_tag``)."""
+    u = jax.random.uniform(_stage_key(cfg, "faults", tag), shape)
+    stuck_off = u < cfg.p_stuck_off
+    stuck_on = (u >= cfg.p_stuck_off) & (u < cfg.p_stuck_off + cfg.p_stuck_on)
+    return stuck_on, stuck_off
+
+
+def apply_faults(
+    g: jnp.ndarray, masks: Tuple[jnp.ndarray, jnp.ndarray], cfg: DeviceConfig
+) -> jnp.ndarray:
+    stuck_on, stuck_off = masks
+    return jnp.where(stuck_on, cfg.g_on_s, jnp.where(stuck_off, cfg.g_off_s, g))
+
+
+def program_variation(g: jnp.ndarray, cfg: DeviceConfig, key: jax.Array) -> jnp.ndarray:
+    """One write pulse: lands lognormally around the target (median-preserving)."""
+    if cfg.sigma == 0.0:
+        return g
+    z = jax.random.normal(key, g.shape, jnp.float32)
+    return g * jnp.exp(cfg.sigma * z)
+
+
+def apply_drift(g: jnp.ndarray, cfg: DeviceConfig) -> jnp.ndarray:
+    """Power-law retention loss; identity at t=0 or nu=0."""
+    if cfg.drift_nu == 0.0 or cfg.t_drift_s == 0.0:
+        return g
+    factor = (1.0 + cfg.t_drift_s / cfg.t0_s) ** (-cfg.drift_nu)
+    return g * factor
+
+
+def ir_drop_conductance(g: jnp.ndarray, spec: CrossbarSpec, cfg: DeviceConfig) -> jnp.ndarray:
+    """First-order line-resistance attenuation (AG2048 model, closed form).
+
+    A cell at (row ``i`` of its 128-row group, column ``j``) sees series wire
+    resistance ``(j + 1) * r`` along the wordline from the driver plus
+    ``(rows - i) * r`` along the bitline down to the ADC; its effective
+    conductance is the series combination ``g / (1 + g * R_series)``.  Cells
+    far from driver and ADC attenuate most — the classic IR-drop corner.
+
+    ``g``: (S, K, N) conductances; K is the contraction dim (wordlines, row
+    ``i = k mod rows`` within its group), N the bitlines.
+    """
+    if cfg.r_line_ohm == 0.0:
+        return g
+    S, K, N = g.shape
+    i = (jnp.arange(K, dtype=jnp.int32) % spec.rows).astype(jnp.float32)
+    j = jnp.arange(N, dtype=jnp.float32)
+    r_series = ((j[None, :] + 1.0) + (spec.rows - i[:, None])) * cfg.r_line_ohm
+    return g / (1.0 + g * r_series[None, :, :])
+
+
+# ---------------------------------------------------------------------------
+# Programming + read pipeline
+# ---------------------------------------------------------------------------
+
+def target_cell_codes(w_codes_biased: jnp.ndarray, spec: CrossbarSpec) -> jnp.ndarray:
+    """(K, N) biased weight codes -> (S, K, N) ideal per-slice cell codes."""
+    return fxp.cell_slices(w_codes_biased, spec.weight_bits, spec.cell_bits)
+
+
+def programmed_conductance(
+    w_codes_biased: jnp.ndarray, spec: CrossbarSpec, cfg: DeviceConfig
+) -> jnp.ndarray:
+    """Program a weight slab into cell conductances (trace-safe).
+
+    With ``write_verify_iters <= 1`` this is an open-loop write (one noisy
+    pulse); otherwise a fixed-iteration write-verify loop re-pulses cells
+    whose read-back code is more than ``write_verify_tol`` from target.
+    Stuck cells ignore every pulse.  ``program.write_verify`` wraps this with
+    host-side convergence reporting.
+    """
+    target = target_cell_codes(w_codes_biased, spec)
+    target_g = conductance_of_codes(target, spec, cfg)
+    tag = _slab_tag(w_codes_biased)
+    masks = fault_masks(cfg, target.shape, tag)
+    key = _stage_key(cfg, "program", tag)
+    iters = max(1, cfg.write_verify_iters)
+    g = apply_faults(program_variation(target_g, cfg, jax.random.fold_in(key, 0)), masks, cfg)
+    if iters > 1:
+        done = (
+            jnp.abs(codes_of_conductance(g, spec, cfg) - target) <= cfg.write_verify_tol
+        )
+        for i in range(1, iters):
+            attempt = apply_faults(
+                program_variation(target_g, cfg, jax.random.fold_in(key, i)), masks, cfg
+            )
+            g = jnp.where(done, g, attempt)
+            done = (
+                jnp.abs(codes_of_conductance(g, spec, cfg) - target) <= cfg.write_verify_tol
+            )
+    return g
+
+
+def read_effective_codes(
+    g: jnp.ndarray, spec: CrossbarSpec, cfg: DeviceConfig
+) -> jnp.ndarray:
+    """Read-time view of programmed conductances, in grid-quantized code units.
+
+    Applies drift and IR drop, converts back through the level map, clips to
+    the physical rails [0, 2**cell_bits - 1] and snaps to the verification
+    grid.  (S, K, N) in, (S, K, N) float32 out.
+    """
+    g = apply_drift(g, cfg)
+    g = ir_drop_conductance(g, spec, cfg)
+    codes = codes_of_conductance(g, spec, cfg)
+    codes = jnp.clip(codes, 0.0, float((1 << spec.cell_bits) - 1))
+    return quantize_code_grid(codes)
+
+
+def effective_cell_codes(
+    w_codes_biased: jnp.ndarray, spec: CrossbarSpec, cfg: DeviceConfig
+) -> jnp.ndarray:
+    """Full program+read pipeline: (K, N) biased codes -> (S, K, N) effective.
+
+    The one call sites need: what the analog datapath actually multiplies
+    against, given this device config.  Deterministic in (cfg, shape); the
+    ideal config returns the exact integer slices.
+    """
+    if cfg.is_ideal:
+        return target_cell_codes(w_codes_biased, spec).astype(jnp.float32)
+    g = programmed_conductance(w_codes_biased, spec, cfg)
+    return read_effective_codes(g, spec, cfg)

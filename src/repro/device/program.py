@@ -1,0 +1,93 @@
+"""Write-verify programming of a weight slab into noisy memristor cells.
+
+Real crossbar deployments do not open-loop write a conductance and hope: the
+programmer pulses a cell, reads it back, and re-pulses until the read-back
+code is within tolerance of the target (or a pulse budget is exhausted —
+stuck cells never converge).  ``models.programmed_conductance`` implements
+the trace-safe fixed-iteration loop used inside jitted inference; this
+module wraps the same per-pulse keys with host-side diagnostics so
+calibration quality is observable: per-iteration error, converged fraction,
+and the residual programming error the inference path will see.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.crossbar import CrossbarSpec, DEFAULT_SPEC
+from repro.device import models as dm
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramReport:
+    """Host-side summary of one write-verify calibration run.
+
+    Errors are in cell-code units (1.0 == one conductance level); a mean
+    well under ``write_verify_tol`` with high ``converged_frac`` means the
+    residual inference error is dominated by read-time effects (drift, IR
+    drop) and hard faults rather than programming noise.
+    """
+
+    iterations: int
+    converged_frac: float
+    mean_abs_error: float
+    max_abs_error: float
+    stuck_frac: float
+    per_iter_mean_error: Tuple[float, ...]
+
+
+def write_verify(
+    w_codes_biased: jnp.ndarray,
+    spec: CrossbarSpec = DEFAULT_SPEC,
+    cfg: dm.DeviceConfig = dm.IDEAL_DEVICE,
+) -> Tuple[jnp.ndarray, ProgramReport]:
+    """Program ``(K, N)`` biased weight codes; return conductances + report.
+
+    Uses the same stage keys as ``models.programmed_conductance`` (pulse
+    ``i`` draws ``fold_in(program_key, i)``), so the returned conductance
+    array is bit-identical to what the jitted inference path programs — the
+    report is pure added observability.  Early-stops once every non-stuck
+    cell verifies, which is why this variant is host-only.
+    """
+    target = dm.target_cell_codes(w_codes_biased, spec)
+    target_g = dm.conductance_of_codes(target, spec, cfg)
+    tag = dm._slab_tag(w_codes_biased)
+    masks = dm.fault_masks(cfg, target.shape, tag)
+    stuck = masks[0] | masks[1]
+    key = dm._stage_key(cfg, "program", tag)
+    iters = max(1, cfg.write_verify_iters)
+
+    g = dm.apply_faults(
+        dm.program_variation(target_g, cfg, jax.random.fold_in(key, 0)), masks, cfg
+    )
+    per_iter = []
+    done = None
+    used = iters
+    for i in range(iters):
+        if i > 0:
+            attempt = dm.apply_faults(
+                dm.program_variation(target_g, cfg, jax.random.fold_in(key, i)), masks, cfg
+            )
+            g = jnp.where(done, g, attempt)
+        err = jnp.abs(dm.codes_of_conductance(g, spec, cfg) - target)
+        done = err <= cfg.write_verify_tol
+        per_iter.append(float(jnp.mean(err)))
+        if bool(jnp.all(done | stuck)):
+            used = i + 1
+            break
+
+    err = np.asarray(jnp.abs(dm.codes_of_conductance(g, spec, cfg) - target))
+    done_np = np.asarray(done)
+    report = ProgramReport(
+        iterations=used,
+        converged_frac=float(done_np.mean()),
+        mean_abs_error=float(err.mean()),
+        max_abs_error=float(err.max()),
+        stuck_frac=float(np.asarray(stuck).mean()),
+        per_iter_mean_error=tuple(per_iter),
+    )
+    return g, report

@@ -22,6 +22,7 @@ from repro.core.crossbar import (
     quantize_weight,
 )
 from repro.kernels.crossbar_vmm import crossbar_vmm_pallas
+from repro.kernels.noisy_vmm import noisy_vmm_pallas
 
 
 def _auto_interpret() -> bool:
@@ -44,6 +45,19 @@ def crossbar_vmm_op(
     )
 
 
+def noisy_vmm_op(
+    x_codes: jnp.ndarray,
+    g_eff: jnp.ndarray,
+    spec: CrossbarSpec = DEFAULT_SPEC,
+    adc_cfg: Optional[ADCConfig] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Device-perturbed crossbar VMM on integer codes + effective cells."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    return noisy_vmm_pallas(x_codes, g_eff, spec=spec, adc_cfg=adc_cfg, interpret=interpret)
+
+
 def crossbar_matmul(
     x: jnp.ndarray,
     w: jnp.ndarray,
@@ -51,12 +65,22 @@ def crossbar_matmul(
     qp: Optional[QuantParams] = None,
     adc_cfg: ADCConfig = SAFE_ADAPTIVE,
     interpret: Optional[bool] = None,
+    device=None,
+    fast: bool = False,
 ) -> jnp.ndarray:
     """Float-in / float-out crossbar matmul with ISAAC W16A16 semantics.
 
     Quantizes operands, runs the Pallas datapath (adaptive SAR schedule with
     the provably-safe guard by default), dequantizes.  ``x`` must be
     non-negative; ``qp`` scales must be provided for jit-stable use.
+
+    ``device``: optional ``repro.device.DeviceConfig``; when set (and not
+    ideal), the quantized weights are programmed through the non-ideality
+    pipeline and the VMM runs on the noisy Pallas kernel instead (``fast``
+    does not apply there — the noisy kernel has a single path).
+
+    ``fast``: use the fused exact kernel, which models full-resolution ADCs
+    (``adc_cfg`` is ignored).
     """
     # Per-layer output scaling so the K-row accumulator fits the out window
     spec = layer_scaled_spec(spec, x.shape[-1])
@@ -70,5 +94,15 @@ def crossbar_matmul(
         x_scale, w_scale = qp.x_scale, qp.w_scale
     xq = quantize_input(x, spec, x_scale)
     wq = quantize_weight(w, spec, w_scale)
-    yq = crossbar_vmm_op(xq, wq, spec, adc_cfg=adc_cfg, interpret=interpret)
+    if device is not None and not device.is_ideal:
+        from repro.device import models as dev_models
+
+        g_eff = dev_models.effective_cell_codes(
+            wq + spec.weight_bias, spec, device
+        )
+        yq = noisy_vmm_op(xq, g_eff, spec, adc_cfg=adc_cfg, interpret=interpret)
+    elif fast:
+        yq = crossbar_vmm_op(xq, wq, spec, adc_cfg=None, fast=True, interpret=interpret)
+    else:
+        yq = crossbar_vmm_op(xq, wq, spec, adc_cfg=adc_cfg, interpret=interpret)
     return yq.astype(jnp.float32) * (x_scale * w_scale * (2.0 ** spec.drop_lsb))

@@ -8,7 +8,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import adc as adc_mod
-from repro.core.crossbar import CrossbarSpec, DEFAULT_SPEC, crossbar_vmm
+from repro.core.crossbar import (
+    CrossbarSpec,
+    DEFAULT_SPEC,
+    crossbar_vmm,
+    noisy_crossbar_vmm,
+)
+
+
+def _adc_transform(spec: CrossbarSpec, adc_cfg: Optional[adc_mod.ADCConfig]):
+    if adc_cfg is not None and adc_cfg.mode != "full":
+        return adc_mod.make_partial_transform(spec, adc_cfg)
+    return None
 
 
 def crossbar_vmm_ref(
@@ -18,10 +29,22 @@ def crossbar_vmm_ref(
     adc_cfg: Optional[adc_mod.ADCConfig] = None,
 ) -> jnp.ndarray:
     """Oracle for ``kernels.crossbar_vmm.crossbar_vmm_pallas``."""
-    transform = None
-    if adc_cfg is not None and adc_cfg.mode != "full":
-        transform = adc_mod.make_partial_transform(spec, adc_cfg)
-    return crossbar_vmm(x_codes, w_codes, spec, partial_transform=transform)
+    return crossbar_vmm(
+        x_codes, w_codes, spec, partial_transform=_adc_transform(spec, adc_cfg)
+    )
+
+
+def noisy_vmm_ref(
+    x_codes: jnp.ndarray,
+    g_eff: jnp.ndarray,
+    spec: CrossbarSpec = DEFAULT_SPEC,
+    adc_cfg: Optional[adc_mod.ADCConfig] = None,
+) -> jnp.ndarray:
+    """Oracle for ``kernels.noisy_vmm.noisy_vmm_pallas``: the dense perturbed
+    reference — same ADC rounding/saturation, pure-jnp shift-add."""
+    return noisy_crossbar_vmm(
+        x_codes, g_eff, spec, partial_transform=_adc_transform(spec, adc_cfg)
+    )
 
 
 def chunked_attention_ref(q, k, v, scale=None, causal=True):

@@ -325,10 +325,16 @@ def lm_head(table_or_w, x: jnp.ndarray, tied: bool, cap: float = 0.0) -> jnp.nda
 @dataclasses.dataclass(frozen=True)
 class CrossbarMode:
     """When enabled, projections run through the Newton bit-sliced crossbar
-    datapath (Pallas kernel; interpret-mode on CPU) instead of XLA matmul."""
+    datapath (Pallas kernel; interpret-mode on CPU) instead of XLA matmul.
+
+    ``device`` (a ``repro.device.DeviceConfig``) additionally routes the
+    matmul through the memristor non-ideality pipeline — stuck cells,
+    programming variation, drift, IR drop — so end-to-end model accuracy
+    under realistic devices is one context manager away."""
 
     enabled: bool = False
     fast: bool = True  # fused exact kernel (full-resolution ADC)
+    device: Optional[Any] = None  # repro.device.DeviceConfig
 
 
 _CROSSBAR = CrossbarMode()
@@ -356,6 +362,8 @@ def crossbar_linear(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
 
     shift = jnp.min(x)
     xs = (x - shift).astype(jnp.float32)  # non-negative
-    y = kops.crossbar_matmul(xs, w.astype(jnp.float32))
+    y = kops.crossbar_matmul(
+        xs, w.astype(jnp.float32), device=_CROSSBAR.device, fast=_CROSSBAR.fast
+    )
     corr = shift.astype(jnp.float32) * jnp.sum(w.astype(jnp.float32), axis=0)
     return (y + corr).astype(x.dtype)

@@ -3,7 +3,7 @@ and Strassen (paper §III) against an int64 numpy oracle."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import integers, sweep
 
 from repro.core import adc
 from repro.core import crossbar as cb
@@ -44,13 +44,14 @@ def test_crossbar_width_constants_match_paper():
     assert SPEC_S.n_iters == 16
 
 
-@given(
-    st.integers(1, 4),
-    st.integers(1, 200),
-    st.integers(1, 6),
-    st.integers(0, 2**32 - 1),
+@pytest.mark.slow
+@sweep(
+    integers(1, 4),
+    integers(1, 200),
+    integers(1, 6),
+    integers(0, 2**32 - 1),
+    examples=25,
 )
-@settings(max_examples=25, deadline=None)
 def test_crossbar_vmm_property(B, K, N, seed):
     rng = np.random.default_rng(seed)
     x, w = _rand(rng, B, K, N, True)
@@ -70,8 +71,7 @@ def test_adaptive_exact_guard_is_bit_exact_unsigned():
         np.testing.assert_array_equal(y, cb.exact_vmm_reference(x, w, SPEC_U))
 
 
-@given(st.integers(0, 2**32 - 1))
-@settings(max_examples=20, deadline=None)
+@sweep(integers(0, 2**32 - 1), examples=20)
 def test_adaptive_safe_guard_within_bound(seed):
     rng = np.random.default_rng(seed)
     x, w = _rand(rng, 4, 128, 16, False)
@@ -152,8 +152,7 @@ def test_strassen_cost_both_accountings():
 
 # --- fixed point helpers ----------------------------------------------------
 
-@given(st.integers(0, 2**16 - 1))
-@settings(max_examples=50, deadline=None)
+@sweep(integers(0, 2**16 - 1), examples=50)
 def test_bitplane_roundtrip(v):
     from repro.core import fixedpoint as fxp
 

@@ -1,0 +1,201 @@
+"""Device non-ideality subsystem: seeded determinism, zero-noise bit-exact
+reduction to the ideal datapath, noisy-kernel interpret-mode equivalence to
+the dense perturbed reference, and write-verify convergence."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from _propcheck import integers, sweep
+
+from repro.core import adc
+from repro.core import crossbar as cb
+from repro.device import (
+    DeviceConfig,
+    IDEAL_DEVICE,
+    effective_cell_codes,
+    fault_masks,
+    write_verify,
+)
+from repro.device.models import (
+    GEFF_FRAC_BITS,
+    apply_drift,
+    ir_drop_conductance,
+    read_effective_codes,
+    target_cell_codes,
+)
+from repro.kernels import ops, ref
+
+SPEC = cb.DEFAULT_SPEC
+
+
+def _codes(rng, B, K, N):
+    x = jnp.asarray(rng.integers(0, 1 << 16, size=(B, K)))
+    w = jnp.asarray(rng.integers(-(1 << 15), 1 << 15, size=(K, N)))
+    return x, w
+
+
+def _biased(w):
+    return w.astype(jnp.int32) + SPEC.weight_bias
+
+
+NOISY = DeviceConfig(sigma=0.05, p_stuck_on=2e-3, p_stuck_off=2e-3, r_line_ohm=1.0, seed=7)
+
+
+# --- zero-noise identity ----------------------------------------------------
+
+def test_zero_noise_reduces_to_ideal_bit_exact():
+    rng = np.random.default_rng(0)
+    x, w = _codes(rng, 4, 300, 24)
+    y_ideal = cb.crossbar_vmm(x, w, SPEC)
+    y_dev = cb.crossbar_vmm(x, w, SPEC, device=IDEAL_DEVICE)
+    np.testing.assert_array_equal(np.asarray(y_dev), np.asarray(y_ideal))
+    # and through the explicit g_eff + Pallas path
+    g0 = effective_cell_codes(_biased(w), SPEC, IDEAL_DEVICE)
+    np.testing.assert_array_equal(
+        np.asarray(target_cell_codes(_biased(w), SPEC)), np.asarray(g0)
+    )
+    y_k = ops.noisy_vmm_op(x, g0, SPEC, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_k), np.asarray(y_ideal))
+
+
+def test_explicitly_zeroed_config_is_ideal():
+    cfg = DeviceConfig(sigma=0.0, drift_nu=0.5, t_drift_s=0.0)  # nu without t: ideal
+    assert cfg.is_ideal
+    assert not NOISY.is_ideal
+
+
+# --- seeded determinism -----------------------------------------------------
+
+def test_fault_maps_deterministic_and_disjoint():
+    cfg = DeviceConfig(p_stuck_on=0.01, p_stuck_off=0.02, seed=5)
+    on1, off1 = fault_masks(cfg, (8, 128, 16))
+    on2, off2 = fault_masks(cfg, (8, 128, 16))
+    np.testing.assert_array_equal(np.asarray(on1), np.asarray(on2))
+    np.testing.assert_array_equal(np.asarray(off1), np.asarray(off2))
+    assert not bool(jnp.any(on1 & off1))
+    # rates in the right ballpark over 16k cells
+    assert abs(float(jnp.mean(on1)) - 0.01) < 0.005
+    assert abs(float(jnp.mean(off1)) - 0.02) < 0.007
+    on3, _ = fault_masks(cfg.replace(seed=6), (8, 128, 16))
+    assert bool(jnp.any(on1 != on3))
+
+
+def test_effective_codes_deterministic_and_on_grid():
+    rng = np.random.default_rng(1)
+    _, w = _codes(rng, 1, 200, 16)
+    g1 = effective_cell_codes(_biased(w), SPEC, NOISY)
+    g2 = effective_cell_codes(_biased(w), SPEC, NOISY)
+    np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
+    scaled = np.asarray(g1) * (1 << GEFF_FRAC_BITS)
+    np.testing.assert_array_equal(scaled, np.round(scaled))  # on the grid
+    assert float(jnp.min(g1)) >= 0.0
+    assert float(jnp.max(g1)) <= (1 << SPEC.cell_bits) - 1
+
+
+# --- kernel vs dense perturbed reference ------------------------------------
+
+@pytest.mark.parametrize("adc_cfg", [None, adc.SAFE_ADAPTIVE], ids=["full", "adaptive"])
+def test_noisy_kernel_matches_dense_reference(adc_cfg):
+    rng = np.random.default_rng(2)
+    x, w = _codes(rng, 3, 300, 40)
+    g = effective_cell_codes(_biased(w), SPEC, NOISY)
+    y_k = ops.noisy_vmm_op(x, g, SPEC, adc_cfg=adc_cfg, interpret=True)
+    y_r = ref.noisy_vmm_ref(x, g, SPEC, adc_cfg=adc_cfg)
+    np.testing.assert_array_equal(np.asarray(y_k), np.asarray(y_r))
+
+
+@pytest.mark.slow
+@sweep(integers(1, 6), integers(1, 260), integers(1, 32), integers(0, 2**32 - 1), examples=6)
+def test_noisy_kernel_property(B, K, N, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _codes(rng, B, K, N)
+    cfg = DeviceConfig(sigma=0.1, p_stuck_on=5e-3, seed=seed % 97)
+    g = effective_cell_codes(_biased(w), SPEC, cfg)
+    y_k = ops.noisy_vmm_op(x, g, SPEC, interpret=True)
+    y_r = ref.noisy_vmm_ref(x, g, SPEC)
+    np.testing.assert_array_equal(np.asarray(y_k), np.asarray(y_r))
+
+
+def test_noisy_kernel_unsigned_msb_clamp_path():
+    spec_u = SPEC.replace(signed_weights=False)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(0, 1 << 16, size=(4, 384)))
+    w = jnp.asarray(rng.integers(0, 1 << 16, size=(384, 32)))
+    g = effective_cell_codes(w.astype(jnp.int32), spec_u, DeviceConfig(sigma=0.05, seed=3))
+    y_k = ops.noisy_vmm_op(x, g, spec_u, adc_cfg=adc.SAFE_ADAPTIVE, interpret=True)
+    y_r = ref.noisy_vmm_ref(x, g, spec_u, adc_cfg=adc.SAFE_ADAPTIVE)
+    np.testing.assert_array_equal(np.asarray(y_k), np.asarray(y_r))
+
+
+# --- write-verify calibration -----------------------------------------------
+
+def test_write_verify_converges():
+    rng = np.random.default_rng(4)
+    _, w = _codes(rng, 1, 256, 32)
+    cfg = DeviceConfig(sigma=0.2, write_verify_iters=8, seed=11)
+    g, rep = write_verify(_biased(w), SPEC, cfg)
+    # error shrinks monotonically and beats the open-loop write
+    errs = rep.per_iter_mean_error
+    assert all(b <= a for a, b in zip(errs, errs[1:]))
+    assert errs[-1] < errs[0]
+    assert rep.converged_frac > 0.95
+    # the programmed slab matches what the inference path programs
+    from repro.device.models import programmed_conductance
+
+    g_inf = programmed_conductance(_biased(w), SPEC, cfg)
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(g_inf))
+
+
+def test_write_verify_stuck_cells_never_converge():
+    rng = np.random.default_rng(5)
+    _, w = _codes(rng, 1, 128, 16)
+    cfg = DeviceConfig(sigma=0.1, p_stuck_on=0.05, write_verify_iters=6, seed=2)
+    _, rep = write_verify(_biased(w), SPEC, cfg)
+    assert rep.stuck_frac > 0.0
+    # converged fraction is capped roughly by the non-stuck share whose
+    # target isn't already at the stuck rail
+    assert rep.converged_frac < 1.0
+    assert rep.max_abs_error >= 1.0  # a stuck-on cell on a low target
+
+
+def test_write_verify_reduces_output_error():
+    rng = np.random.default_rng(6)
+    x, w = _codes(rng, 4, 256, 16)
+    spec = cb.layer_scaled_spec(SPEC, 256)
+    y_ideal = np.asarray(cb.crossbar_vmm(x, w, spec), dtype=np.int64)
+    errs = {}
+    for iters in (1, 8):
+        cfg = DeviceConfig(sigma=0.3, write_verify_iters=iters, seed=13)
+        y = np.asarray(cb.crossbar_vmm(x, w, spec, device=cfg), dtype=np.int64)
+        errs[iters] = np.abs(y - y_ideal).mean()
+    assert errs[8] < errs[1]
+
+
+# --- read-time physics ------------------------------------------------------
+
+def test_drift_and_ir_drop_monotone():
+    g = jnp.full((SPEC.n_slices, 128, 8), 200e-6, jnp.float32)
+    cfg_d = DeviceConfig(drift_nu=0.1, t_drift_s=1e4)
+    assert float(jnp.max(apply_drift(g, cfg_d))) < 200e-6
+    cfg_r1 = DeviceConfig(r_line_ohm=1.0)
+    cfg_r2 = DeviceConfig(r_line_ohm=2.0)
+    g1 = ir_drop_conductance(g, SPEC, cfg_r1)
+    g2 = ir_drop_conductance(g, SPEC, cfg_r2)
+    assert bool(jnp.all(g1 <= g))
+    assert bool(jnp.all(g2 <= g1))
+    # far column attenuates more than near column
+    assert float(g1[0, 0, -1]) < float(g1[0, 0, 0])
+
+
+def test_read_effective_codes_clips_to_rails():
+    cfg = DeviceConfig(sigma=1.5, seed=9)  # absurd sigma: must still clip
+    rng = np.random.default_rng(7)
+    _, w = _codes(rng, 1, 128, 8)
+    g = effective_cell_codes(_biased(w), SPEC, cfg)
+    assert float(jnp.min(g)) >= 0.0
+    assert float(jnp.max(g)) <= (1 << SPEC.cell_bits) - 1
+    # read path alone also respects the grid
+    from repro.device.models import programmed_conductance
+
+    codes = read_effective_codes(programmed_conductance(_biased(w), SPEC, cfg), SPEC, cfg)
+    scaled = np.asarray(codes) * (1 << GEFF_FRAC_BITS)
+    np.testing.assert_array_equal(scaled, np.round(scaled))

@@ -65,6 +65,7 @@ def test_dp_tp_loss_matches_single_device():
     assert abs(res["single"] - res["sharded"]) < 2e-3 * max(1.0, abs(res["single"]))
 
 
+@pytest.mark.slow
 def test_moe_ep_matches_single_device():
     """shard_map EP == single device, once the two *policy* differences are
     held fixed: capacity is per-shard in EP (GShard semantics — uncap it),
@@ -131,6 +132,7 @@ def test_compressed_allreduce_error_feedback():
     assert res["drift_rel"] < 0.02
 
 
+@pytest.mark.slow
 def test_mini_dryrun_both_meshes():
     res = _run("""
         import json, numpy as np, jax, jax.numpy as jnp, dataclasses as dc

@@ -3,7 +3,7 @@ across shape/dtype/ADC-config sweeps (bit-identical, not just allclose)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import integers, sweep
 
 from repro.core import adc
 from repro.core.crossbar import CrossbarSpec, DEFAULT_SPEC
@@ -23,7 +23,14 @@ def _data(rng, B, K, N, signed=True):
 
 @pytest.mark.parametrize(
     "shape",
-    [(1, 128, 8), (4, 128, 16), (3, 300, 40), (130, 257, 129), (2, 64, 256), (16, 1024, 64)],
+    [
+        (1, 128, 8),
+        (4, 128, 16),
+        (3, 300, 40),
+        pytest.param((130, 257, 129), marks=pytest.mark.slow),
+        (2, 64, 256),
+        pytest.param((16, 1024, 64), marks=pytest.mark.slow),
+    ],
 )
 def test_kernel_matches_ref_shapes(shape):
     rng = np.random.default_rng(sum(shape))
@@ -73,13 +80,14 @@ def test_kernel_spec_variants(spec):
     np.testing.assert_array_equal(np.asarray(y_k), np.asarray(y_r))
 
 
-@given(
-    st.integers(1, 8),
-    st.integers(1, 300),
-    st.integers(1, 40),
-    st.integers(0, 2**32 - 1),
+@pytest.mark.slow
+@sweep(
+    integers(1, 8),
+    integers(1, 300),
+    integers(1, 40),
+    integers(0, 2**32 - 1),
+    examples=10,
 )
-@settings(max_examples=10, deadline=None)
 def test_kernel_property(B, K, N, seed):
     rng = np.random.default_rng(seed)
     x, w = _data(rng, B, K, N)

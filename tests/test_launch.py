@@ -4,7 +4,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import integers, sampled_from, sweep
 
 from repro import configs
 from repro.configs.base import SHAPES, reduced
@@ -76,8 +76,7 @@ def test_model_flops_convention():
     assert f_dec == pytest.approx(2 * ds.active_param_count() * 128 / 256)
 
 
-@given(st.integers(1, 4096), st.sampled_from([(2,), (2, 4), (2, 4, 8)]))
-@settings(max_examples=40, deadline=None)
+@sweep(integers(1, 4096), sampled_from([(2,), (2, 4), (2, 4, 8)]), examples=40)
 def test_dividing_entry_prefix_property(dim, sizes):
     """dividing_entry returns the longest prefix whose product divides dim."""
     import os

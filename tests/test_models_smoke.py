@@ -18,6 +18,17 @@ from repro.train import make_train_step
 ARCHS = configs.ALL_ARCHS
 
 
+def _marked(archs, slow_set):
+    """Tag the heaviest reduced configs slow so tier-1 stays fast."""
+    return [
+        pytest.param(a, marks=pytest.mark.slow) if a in slow_set else a for a in archs
+    ]
+
+
+_SLOW_FORWARD = {"jamba-v0.1-52b"}
+_SLOW_TRAIN = {"xlstm-350m", "deepseek-v2-236b", "musicgen-large"}
+
+
 def _inputs(cfg, key, B, S):
     if cfg.frontend == "embed":
         return jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
@@ -29,7 +40,7 @@ def smoke(request):
     return {}
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _marked(ARCHS, _SLOW_FORWARD))
 def test_forward_shapes_and_finite(arch):
     cfg = reduced(configs.get_config(arch))
     key = jax.random.PRNGKey(0)
@@ -41,7 +52,7 @@ def test_forward_shapes_and_finite(arch):
     assert bool(jnp.isfinite(logits).all())
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _marked(ARCHS, _SLOW_TRAIN))
 def test_one_train_step(arch):
     cfg = reduced(configs.get_config(arch))
     key = jax.random.PRNGKey(1)
@@ -61,7 +72,10 @@ def test_one_train_step(arch):
     assert max(delta) > 0
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+_SLOW_DECODE = {"kimi-k2-1t-a32b", "deepseek-v2-236b"}
+
+
+@pytest.mark.parametrize("arch", _marked(ARCHS, _SLOW_DECODE))
 def test_decode_matches_teacher_forcing(arch):
     cfg = reduced(configs.get_config(arch))
     key = jax.random.PRNGKey(2)
@@ -149,6 +163,7 @@ def test_param_counts_match_published():
     assert ds.active_param_count() / 1e9 < 30  # ~21B active
 
 
+@pytest.mark.slow
 def test_moe_capacity_drops_are_bounded():
     """With capacity factor 1.25 and balanced-ish routing, outputs stay
     close to the infinite-capacity reference."""

@@ -168,6 +168,7 @@ def test_nan_step_is_skipped():
     assert max(deltas) == 0.0  # params untouched
 
 
+@pytest.mark.slow
 def test_microbatched_grad_accum_matches_full():
     cfg = reduced(configs.get_config("smollm-360m"))
     params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
