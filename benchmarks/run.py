@@ -2,23 +2,96 @@
 micro-benchmarks.  Prints ``name,us_per_call,derived`` CSV rows.
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--only fig21]
+
+Kernel-tier results (names starting with ``kernel_``) are additionally
+persisted to ``BENCH_kernels.json`` at the repo root so the perf trajectory
+is tracked across PRs; ``--check`` compares the fresh run against the
+committed file first and **fails (exit 1) on a >20% regression** of any
+headline number before overwriting it.  ``scripts/run_tests.sh --bench``
+wraps ``--only kernel --check``.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+
+# Headline metrics gated by --check: (bench name, key, direction).
+# "higher" must not drop below (1 - tol) x old; "lower" must not exceed
+# (1 + tol) x old.  Raw *_us wall clocks are recorded but not gated (they
+# are CPU-interpret-mode numbers and machine-dependent); the gated set is
+# counts and exactness flags, which are stable run-to-run.
+HEADLINE = [
+    ("kernel_programmed", "bit_exact", "higher"),
+    ("kernel_crossbar", "bit_exact", "higher"),
+    ("kernel_crossbar", "adc_conversions", "lower"),
+    ("kernel_zero_plane", "conversions_sparse", "lower"),
+    ("kernel_zero_plane", "bit_exact", "higher"),
+]
+REGRESSION_TOL = 0.20
+
+# Wall-clock-derived ratios are gated against fixed acceptance floors, not
+# the last committed value — a noisy-box run that wrote an unusually high
+# (or low) baseline must not make later honest runs fail (or let real
+# regressions pass).  speedup_x >= 5 is this repo's program-once bar.
+ABSOLUTE_FLOORS = {("kernel_programmed", "speedup_x"): 5.0}
+
+
+def check_regressions(old: dict, new: dict) -> list:
+    """Compare headline numbers; return a list of human-readable failures."""
+    failures = []
+    for (bench, key), floor in ABSOLUTE_FLOORS.items():
+        if bench in new and key in new[bench] and float(new[bench][key]) < floor:
+            failures.append(
+                f"{bench}.{key}: {float(new[bench][key]):.4g} < acceptance floor {floor}"
+            )
+    for bench, key, direction in HEADLINE:
+        if bench not in old or key not in old.get(bench, {}):
+            continue  # metric is new — nothing to regress against
+        if bench not in new:
+            continue  # bench filtered out of this run (--only): not gated
+        if key not in new[bench]:
+            failures.append(f"{bench}.{key}: missing from fresh run")
+            continue
+        o, n = float(old[bench][key]), float(new[bench][key])
+        if direction == "higher" and n < o * (1.0 - REGRESSION_TOL):
+            failures.append(
+                f"{bench}.{key}: {n:.4g} < {o:.4g} - {REGRESSION_TOL:.0%} (higher is better)"
+            )
+        elif direction == "lower" and n > o * (1.0 + REGRESSION_TOL):
+            failures.append(
+                f"{bench}.{key}: {n:.4g} > {o:.4g} + {REGRESSION_TOL:.0%} (lower is better)"
+            )
+    return failures
+
 
 def main() -> None:
-    sys.path.insert(0, "src")
+    sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
     from benchmarks import kernel_bench, noise_sweep, paper_figures
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="substring filter")
+    ap.add_argument(
+        "--json",
+        default=BENCH_JSON,
+        help=f"where to persist kernel-tier results (default {BENCH_JSON})",
+    )
+    ap.add_argument(
+        "--no-json", action="store_true", help="skip writing the kernel JSON"
+    )
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="fail on >20%% regression of headline numbers vs the existing JSON",
+    )
     args = ap.parse_args()
 
+    kernel_results = {}
     print("name,us_per_call,derived")
     for name, fn in paper_figures.ALL + kernel_bench.ALL + noise_sweep.ALL:
         if args.only and args.only not in name:
@@ -29,6 +102,40 @@ def main() -> None:
         compact = json.dumps({k: (round(v, 4) if isinstance(v, float) else v)
                               for k, v in derived.items()})
         print(f"{name},{dt_us:.0f},{compact}")
+        if name.startswith("kernel_"):
+            kernel_results[name] = {
+                k: (round(float(v), 6) if isinstance(v, float) else v)
+                for k, v in derived.items()
+            }
+
+    if not kernel_results or args.no_json:
+        return
+
+    old_kernels = {}
+    if os.path.exists(args.json):
+        with open(args.json) as f:
+            old = json.load(f)
+        old_kernels = old.get("kernels", old)
+
+    if args.check and old_kernels:
+        failures = check_regressions(old_kernels, kernel_results)
+        if failures:
+            print("PERF REGRESSION (>20% on headline numbers):", file=sys.stderr)
+            for f_ in failures:
+                print(f"  {f_}", file=sys.stderr)
+            print(f"  (kept existing {args.json})", file=sys.stderr)
+            sys.exit(1)
+        print("perf check passed: no headline regression > 20%")
+
+    # merge, don't replace: a filtered run (--only kernel_zero) must not
+    # drop the other benches' baselines and silently disarm their gates
+    merged = dict(old_kernels)
+    merged.update(kernel_results)
+    payload = {"schema": 1, "kernels": merged}
+    with open(args.json, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

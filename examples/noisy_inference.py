@@ -53,12 +53,18 @@ for sigma in (0.0, 0.05, 0.1, 0.2):
     tag = "  (bit-exact)" if sigma == 0.0 and rmses[0] == 0.0 else ""
     print(f"{sigma:6.2f} {rmses[0]:10.3f} {rmses[1]:14.3f}{tag}")
 
-print("\n== 3. reduced LM forward on noisy crossbars ==")
+print("\n== 3. reduced LM forward on noisy crossbars (programmed once) ==")
 # Bit-sliced W16 is brutally noise-sensitive: an MSB-slice cell holds bits
 # 14-15, so conductance variation there perturbs the weight in proportion to
 # *full scale*, not the weight's own magnitude (Xiao et al. 2021).  Even
 # sigma=0.05 destroys the logits — which is what motivates the ROADMAP items
 # on noise-aware training and fault-aware mapping.
+#
+# Each device config is compiled into programmed artifacts *once*
+# (``program_model``) and the forward serves steady-state from that fixed
+# chip — self-consistent noise across the run, no per-call reprogramming.
+from repro.device import program_model
+
 cfg_lm = reduced(configs.get_config("smollm-360m"))
 params, _ = M.init_model(jax.random.PRNGKey(0), cfg_lm)
 tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg_lm.vocab_size)
@@ -68,7 +74,8 @@ for label, dev in (
     ("sigma=0.02 + write-verify", DeviceConfig(sigma=0.02, write_verify_iters=6)),
     ("sigma=0.10 + write-verify", DeviceConfig(sigma=0.10, write_verify_iters=6)),
 ):
-    with crossbar_mode(CrossbarMode(enabled=True, device=dev)):
+    prog = program_model(params, device=dev)
+    with crossbar_mode(CrossbarMode(enabled=True, device=dev, programmed=prog)):
         logits_x = M.forward(params, cfg_lm, tokens)
     rel = float(jnp.linalg.norm(logits_x - logits_f) / jnp.linalg.norm(logits_f))
     agree = float(jnp.mean(jnp.argmax(logits_x, -1) == jnp.argmax(logits_f, -1)))

@@ -3,6 +3,9 @@
 #
 #   scripts/run_tests.sh            fast tier (default: slow marker excluded)
 #   scripts/run_tests.sh --all      everything, including @pytest.mark.slow
+#   scripts/run_tests.sh --bench    fast kernel-benchmark tier; fails on a
+#                                   >20% regression of the BENCH_kernels.json
+#                                   headline numbers, then refreshes the file
 #   scripts/run_tests.sh <args...>  extra args forwarded to pytest
 #
 # pytest exits 2 on collection errors, so a broken import fails the run.
@@ -14,5 +17,9 @@ if [[ "${1:-}" == "--all" ]]; then
   shift
   # later -m overrides the "not slow" default from pytest.ini addopts
   exec python -m pytest -q -m "" "$@"
+fi
+if [[ "${1:-}" == "--bench" ]]; then
+  shift
+  exec python -m benchmarks.run --only kernel --check "$@"
 fi
 exec python -m pytest -q "$@"

@@ -103,20 +103,36 @@ DEFAULT_SPEC = CrossbarSpec()
 class ConversionStats:
     """ADC work accounting — the paper's currency for energy.
 
-    ``conversions``: number of ADC samples (one per column x group x t x s
-    x input-vector).  ``bit_decisions``: total SAR bit tests performed, which
-    is what the adaptive scheme reduces.  Both are python ints / 0-d arrays.
+    ``conversions``: number of ADC samples actually taken (one per column x
+    group x t x s x input-vector, minus any skipped).  ``bit_decisions``:
+    total SAR bit tests performed, which is what the adaptive scheme
+    reduces.  ``skipped_conversions``: samples a zero-plane-aware ADC never
+    takes because the input bit-plane for the whole row block is zero
+    (kernel ``skip_zero_planes`` / Ibrayev et al. activity skipping);
+    ``conversions + skipped_conversions`` is the dense count.
+    ``iterations``: 100 ns crossbar cycles consumed.  All python ints.
+
+    ``a + b`` models *sequential* composition — two VMMs issued back-to-back
+    on the same datapath — so every field adds, including ``iterations``
+    (total cycles, hence a latency count, not a max).  Stats for VMMs that
+    run on disjoint crossbars in parallel should instead combine energy
+    fields with ``+`` and take ``max`` of ``iterations`` by hand.  (An
+    earlier revision documented ``iterations`` as a "max latency proxy"
+    while ``__add__`` summed ``max(x, 0)`` terms — i.e. it silently summed;
+    the sum semantic is now the documented one and is pinned by tests.)
     """
 
     conversions: int = 0
     bit_decisions: int = 0
-    iterations: int = 0  # 100ns crossbar cycles consumed (latency proxy)
+    iterations: int = 0  # total 100ns crossbar cycles (sequential latency)
+    skipped_conversions: int = 0
 
     def __add__(self, other: "ConversionStats") -> "ConversionStats":
         return ConversionStats(
             conversions=self.conversions + other.conversions,
             bit_decisions=self.bit_decisions + other.bit_decisions,
-            iterations=max(self.iterations, 0) + max(other.iterations, 0),
+            iterations=self.iterations + other.iterations,
+            skipped_conversions=self.skipped_conversions + other.skipped_conversions,
         )
 
 
@@ -517,17 +533,70 @@ def signed_vmm_limbs(
     return (hi, lo), flags
 
 
+def plane_activity(
+    x_codes: jnp.ndarray, spec: CrossbarSpec, block_m: int = 128
+) -> Tuple[int, int]:
+    """Row-weighted (active, total) input bit-plane counts for a VMM input.
+
+    Mirrors the Pallas kernels' ``skip_zero_planes`` granularity: the kernel
+    skips all S slice-dots of iteration ``t`` for a ``(bm, rows)`` input
+    block whose bit-plane is entirely zero, so every row in the block shares
+    the skip decision.  One "row-plane" here is (input row, iteration t, row
+    group g); each active row-plane costs ``n_cols * n_slices`` ADC
+    conversions.  Returns python ints with ``active <= total``;
+    ``total * n * n_slices`` is the dense conversion count.
+    """
+    x2 = x_codes.reshape(-1, x_codes.shape[-1]).astype(jnp.int32)
+    B, K = x2.shape
+    Kp = -(-K // spec.rows) * spec.rows
+    if Kp != K:
+        x2 = jnp.pad(x2, ((0, 0), (0, Kp - K)))
+    planes = _grouped_planes(x2, spec)  # (T, B, G, R)
+    nz = np.asarray(jnp.any(planes != 0, axis=3))  # (T, B, G)
+    T, _, G = nz.shape
+    bm = min(block_m, max(8, B))  # the kernel wrappers' block choice
+    active = 0
+    for start in range(0, B, bm):
+        rows = min(start + bm, B) - start
+        blk = nz[:, start : start + bm, :].any(axis=1)  # (T, G)
+        active += int(blk.sum()) * rows
+    return active, T * G * B
+
+
 def conversion_stats(
-    batch: int, k: int, n: int, spec: CrossbarSpec, bits_per_conversion: Optional[float] = None
+    batch: int,
+    k: int,
+    n: int,
+    spec: CrossbarSpec,
+    bits_per_conversion: Optional[float] = None,
+    x_codes: Optional[jnp.ndarray] = None,
+    block_m: int = 128,
 ) -> ConversionStats:
-    """ADC work for one VMM of shape (batch, k) x (k, n)."""
+    """ADC work for one VMM of shape (batch, k) x (k, n).
+
+    With ``x_codes`` (the actual unsigned input codes) the count becomes
+    activity-aware: conversions belonging to all-zero input bit-planes — the
+    ones ``skip_zero_planes`` kernels never issue and a zero-plane-aware ADC
+    never samples — move to ``skipped_conversions``.
+    """
     groups = -(-k // spec.rows)
     convs = batch * n * groups * spec.n_iters * spec.n_slices
+    skipped = 0
+    if x_codes is not None:
+        active, total = plane_activity(x_codes, spec, block_m=block_m)
+        if total != batch * spec.n_iters * groups:
+            raise ValueError(
+                f"x_codes {x_codes.shape} inconsistent with batch={batch}, k={k}"
+            )
+        active_convs = active * n * spec.n_slices
+        skipped = convs - active_convs
+        convs = active_convs
     bits = bits_per_conversion if bits_per_conversion is not None else spec.adc_bits
     return ConversionStats(
         conversions=convs,
         bit_decisions=int(round(convs * bits)),
         iterations=spec.n_iters,
+        skipped_conversions=skipped,
     )
 
 

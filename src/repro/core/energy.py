@@ -100,8 +100,19 @@ def evaluate(
     policy: str = "newton",
     strassen: bool = False,
     cal: Calibration = CAL,
+    activity: float = 1.0,
 ) -> EvalResult:
-    """Evaluate one network on one chip configuration."""
+    """Evaluate one network on one chip configuration.
+
+    ``activity``: row-weighted fraction of non-zero input bit-planes (see
+    ``core.crossbar.plane_activity``; 1.0 = dense worst case).  An all-zero
+    plane draws no bitline current, so a zero-plane-aware datapath (the
+    kernels' ``skip_zero_planes``, after Ibrayev et al.'s
+    pruning-for-ADC-efficiency observation) gates the ADC sample and the
+    DAC/crossbar drive for that cycle — scaling the ADC, crossbar and DAC
+    *energy* terms (peak power still provisions them).  Post-ReLU CNN/LM
+    activations typically measure 0.3-0.6.
+    """
     m = map_network(net, chip, policy=policy)
     ima = chip.conv_tile.ima
     spec = ima.xbar_spec
@@ -143,14 +154,15 @@ def evaluate(
             d_and_c *= 7.0 / 8.0  # Strassen applies to conv matmuls only
         conversions = (
             layer.pixels * col_convs * groups * spec.n_iters * spec.n_slices
-        ) * d_and_c
+        ) * d_and_c * activity
         e_adc += conversions * e_conv * bits_frac
-        # crossbar + DAC active energy: arrays light up for the VMM duration
+        # crossbar + DAC active energy: arrays light up for the VMM duration;
+        # zero input planes gate the drive for their cycles (activity term)
         xbar_vmms = layer.pixels * groups * -(-layer.cols // spec.cols) * spec.n_slices
         if strassen and layer.kind == "conv":
             xbar_vmms *= 7.0 / 8.0
-        e_xbar += xbar_vmms * CROSSBAR_128.power_w * ima.vmm_time_s
-        e_dac += xbar_vmms * (DAC_ARRAY_128.power_w / 128 * spec.rows) * ima.vmm_time_s
+        e_xbar += xbar_vmms * CROSSBAR_128.power_w * ima.vmm_time_s * activity
+        e_dac += xbar_vmms * (DAC_ARRAY_128.power_w / 128 * spec.rows) * ima.vmm_time_s * activity
         # buffers: read rows once per pixel; write cols once per pixel
         bytes_moved = layer.pixels * (layer.rows + layer.cols) * BYTES_PER_VAL
         e_edram += bytes_moved * cal.edram_pj_per_byte * 1e-12

@@ -8,6 +8,9 @@ Entry points:
   * ``program.write_verify`` — calibration loop with convergence report.
   * ``core.crossbar.crossbar_vmm(..., device=cfg)`` and
     ``kernels.ops.noisy_vmm_op`` — functional / Pallas inference paths.
+  * ``programmed.program_layer`` / ``program_model`` — program-once
+    compilation into frozen ``ProgrammedLinear`` artifacts; steady-state
+    serving via ``programmed_matmul`` / ``programmed_linear``.
 """
 from repro.device.models import (  # noqa: F401
     DeviceConfig,
@@ -20,3 +23,11 @@ from repro.device.models import (  # noqa: F401
     target_cell_codes,
 )
 from repro.device.program import ProgramReport, write_verify  # noqa: F401
+from repro.device.programmed import (  # noqa: F401
+    ProgrammedLinear,
+    ProgrammedModel,
+    program_layer,
+    program_model,
+    programmed_linear,
+    programmed_matmul,
+)

@@ -1,0 +1,477 @@
+"""Program-once crossbar compilation: frozen programmed-weight artifacts.
+
+Newton's core premise is that weights are programmed into crossbars *once*
+and then serve in-situ traffic indefinitely — programming (fault draw,
+write-verify pulses, IR-drop solve, quantization-scale reductions) is a
+deployment-time cost, not a per-call one.  The pre-existing hot path
+re-ran that whole pipeline inside every ``crossbar_matmul(device=...)``
+call; this module splits the stack into an explicit **programming time**
+vs **inference time**:
+
+* ``program_layer(w, spec, device, adc_cfg) -> ProgrammedLinear`` — compile
+  one float weight matrix into a frozen pytree artifact: quantized cell
+  codes, the device-perturbed effective cells (``g_eff``), the static
+  ``QuantParams``, the ``layer_scaled_spec``, the digital correction column
+  sums, and the write-verify ``ProgramReport`` metadata.
+* ``programmed_matmul(x, art)`` / ``programmed_linear(x, art)`` — the
+  steady-state forward: input quantization -> Pallas kernel -> dequantize.
+  No ``jnp.max(w)`` reductions, no ``effective_cell_codes``, no per-call
+  fault redraw.  Noisy runs become self-consistent: one fixed programmed
+  chip serves the whole inference run instead of a fresh noise draw per
+  layer call.
+* ``program_model(params, ...) -> ProgrammedModel`` — walk a parameter
+  pytree and compile every matmul-shaped leaf; ``ProgrammedModel.bind``
+  re-associates artifacts with (possibly traced) parameters inside ``jit``
+  so ``models.layers.crossbar_linear`` finds them transparently.
+
+Everything static (spec, scales, ADC config, report) rides in the pytree
+*aux* so a ``ProgrammedLinear`` can be passed through ``jax.jit`` or closed
+over as a constant; the arrays (``w_codes``, ``g_eff``, ``w_colsum``) are
+ordinary leaves.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adc import ADCConfig, SAFE_ADAPTIVE
+from repro.core.crossbar import (
+    CrossbarSpec,
+    DEFAULT_SPEC,
+    QuantParams,
+    layer_scaled_spec,
+    quantize_input,
+    quantize_weight,
+)
+from repro.device import models as dm
+from repro.device.program import ProgramReport, write_verify
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ProgrammedLinear:
+    """One weight matrix compiled onto (possibly noisy) crossbars.
+
+    Array leaves (all become scan/vmap-sliceable pytree children):
+      * ``w_codes``: (K, N) int32 signed quantized weight codes — the ideal
+        cells, consumed directly by the bit-slicing Pallas kernel.
+      * ``g_eff``: (S, K, N) float32 device-perturbed effective cell codes,
+        or None for ideal devices (then ``w_codes`` is the ground truth).
+      * ``w_colsum``: (N,) float32 column sums of the *float* weights — the
+        digital offset-correction term ``crossbar_linear`` needs (computed
+        at write time on real hardware, alongside the biased column sums
+        inside the kernels' requantize stage).
+      * ``w_scale``: 0-d float32 — the frozen weight quantization scale (the
+        ``max |w|`` reduction, paid once at programming time).
+      * ``x_scale``: 0-d float32 or None — frozen input scale; None keeps
+        input quantization dynamic (per-call ``max(x)``), exactly matching
+        the unprogrammed path.
+
+    A *stacked* artifact (from a ``(L, K, N)`` scan-stacked parameter leaf)
+    carries a leading layer axis on every array; ``jax.lax.scan`` /
+    ``tree.map(lambda a: a[i])`` slice it back to a servable per-layer
+    artifact (``models.model._run_stage`` does exactly this).
+
+    Static aux (hashable; part of the jit cache key): ``spec`` — the
+    layer-scaled ``CrossbarSpec`` (``drop_lsb`` already chosen for this K);
+    ``adc_cfg`` / ``fast`` — which kernel path serves this artifact;
+    ``report`` — optional write-verify ``ProgramReport`` (a tuple of them
+    for stacked artifacts).
+    """
+
+    w_codes: jnp.ndarray
+    g_eff: Optional[jnp.ndarray]
+    w_colsum: jnp.ndarray
+    w_scale: jnp.ndarray
+    x_scale: Optional[jnp.ndarray]
+    spec: CrossbarSpec
+    adc_cfg: Optional[ADCConfig] = None
+    fast: bool = True
+    report: Optional[Any] = None
+
+    @property
+    def noisy(self) -> bool:
+        return self.g_eff is not None
+
+    @property
+    def stacked(self) -> bool:
+        return self.w_codes.ndim == 3
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(self.w_codes.shape)
+
+    @property
+    def qp(self) -> QuantParams:
+        """Static view of the frozen quantization scales (introspection)."""
+        if self.stacked:
+            raise ValueError(
+                "stacked artifact holds per-layer scales: use art.layer(i).qp"
+            )
+        return QuantParams(
+            x_scale=(float(self.x_scale) if self.x_scale is not None else 0.0),
+            w_scale=float(self.w_scale),
+        )
+
+    def layer(self, i: int) -> "ProgrammedLinear":
+        """Slice one layer out of a stacked artifact."""
+        assert self.stacked, "layer() only applies to stacked artifacts"
+        return jax.tree.map(lambda a: a[i], self)
+
+    def tree_flatten(self):
+        children = (self.w_codes, self.g_eff, self.w_colsum, self.w_scale, self.x_scale)
+        aux = (self.spec, self.adc_cfg, self.fast, self.report)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+def program_layer(
+    w: jnp.ndarray,
+    spec: CrossbarSpec = DEFAULT_SPEC,
+    device: Optional[dm.DeviceConfig] = None,
+    adc_cfg: Optional[ADCConfig] = SAFE_ADAPTIVE,
+    *,
+    x_scale: Optional[float] = None,
+    w_scale: Optional[float] = None,
+    fast: bool = True,
+    with_report: bool = False,
+) -> ProgrammedLinear:
+    """Compile one (K, N) — or scan-stacked (L, K, N) — float weight matrix.
+
+    This is the *programming-time* entry point — it runs every expensive,
+    weight-only stage exactly once: the ``max |w|`` scale reduction, weight
+    quantization, the device fault draw + write-verify pulse loop + read
+    path (``effective_cell_codes``), and the correction column sums.  It is
+    deterministic in (w, spec, device): programming twice yields the same
+    chip, bit for bit, as the old program-every-call path drew per call.
+
+    ``x_scale=None`` keeps input quantization dynamic (per-call ``max(x)``),
+    matching the unprogrammed path exactly; pass a calibrated scale for
+    fully static serving.  ``with_report=True`` routes programming through
+    ``program.write_verify`` for convergence metadata (bit-identical cells).
+    """
+    w = jnp.asarray(w, jnp.float32)
+    if w.ndim == 3:  # scan-stacked (L, K, N): compile per layer, stack
+        parts = [
+            program_layer(
+                w[i], spec, device, adc_cfg, x_scale=x_scale, w_scale=w_scale,
+                fast=fast, with_report=with_report,
+            )
+            for i in range(w.shape[0])
+        ]
+        reports = tuple(p.report for p in parts)
+        # per-layer reports differ, which would make the tree structures
+        # unequal — strip them before stacking, reattach as a tuple
+        parts = [dataclasses.replace(p, report=None) for p in parts]
+        out = jax.tree.map(lambda *xs: jnp.stack(xs), *parts)
+        return dataclasses.replace(
+            out, report=(reports if any(r is not None for r in reports) else None)
+        )
+    spec = layer_scaled_spec(spec, w.shape[0])
+    if w_scale is None:
+        # kept as a 0-d array so the steady-state dequantize is op-for-op
+        # identical to the per-call path's traced scale
+        w_scale_a = jnp.maximum(jnp.max(jnp.abs(w)), 1e-9) / (
+            (1 << (spec.weight_bits - 1)) - 1
+        )
+    else:
+        w_scale_a = jnp.asarray(w_scale, jnp.float32)
+    wq = quantize_weight(w, spec, w_scale_a)
+    w_colsum = jnp.sum(w, axis=0)
+    g_eff = None
+    report = None
+    if device is not None and not device.is_ideal:
+        wb = wq + spec.weight_bias
+        if with_report:
+            g, report = write_verify(wb, spec, device)
+            g_eff = dm.read_effective_codes(g, spec, device)
+        else:
+            g_eff = dm.effective_cell_codes(wb, spec, device)
+    return ProgrammedLinear(
+        w_codes=wq, g_eff=g_eff, w_colsum=w_colsum,
+        w_scale=w_scale_a,
+        x_scale=(jnp.asarray(x_scale, jnp.float32) if x_scale is not None else None),
+        spec=spec, adc_cfg=adc_cfg, fast=fast, report=report,
+    )
+
+
+def programmed_matmul(
+    x: jnp.ndarray,
+    art: ProgrammedLinear,
+    interpret: Optional[bool] = None,
+    skip_zero_planes: bool = True,
+) -> jnp.ndarray:
+    """Steady-state float crossbar matmul against a programmed artifact.
+
+    The entire inference-time path: input quantization -> Pallas kernel ->
+    dequantize — no weight reductions, no fault redraw.  Bit-identical to
+    ``kernels.ops.crossbar_matmul(x, w, device=...)`` with the same
+    quantization scales, but the programming pipeline has been amortized
+    away, and repeated calls reuse the *same* programmed chip
+    (self-consistent noise) instead of redrawing it.  ``x`` must be
+    non-negative (see ``programmed_linear`` for the offset-encoded form).
+
+    Deliberately *not* wrapped in an extra jit: the elementwise stages
+    mirror ``crossbar_matmul`` op-for-op (XLA's scalar-chain reassociation
+    inside a fused jit can perturb the dequantize product by 1 ULP,
+    breaking the bit-identity guarantee vs the program-every-call path);
+    the heavy kernel call is jitted already, and under an outer jit
+    everything fuses anyway.
+    """
+    from repro.kernels.crossbar_vmm import crossbar_vmm_pallas
+    from repro.kernels.noisy_vmm import noisy_vmm_pallas
+
+    if art.stacked:
+        raise ValueError(
+            "stacked artifact: slice one layer first (art.layer(i), or let "
+            "models.model._run_stage scan over it)"
+        )
+    if interpret is None:
+        from repro.kernels.ops import _auto_interpret
+
+        interpret = _auto_interpret()
+    spec = art.spec
+    if art.x_scale is not None:
+        x_scale = art.x_scale
+    else:
+        x_scale = jnp.maximum(jnp.max(x), 1e-9) / ((1 << spec.input_bits) - 1)
+    xq = quantize_input(x, spec, x_scale)
+    if art.g_eff is not None:
+        yq = noisy_vmm_pallas(
+            xq, art.g_eff, spec, adc_cfg=art.adc_cfg, interpret=interpret,
+            skip_zero_planes=skip_zero_planes,
+        )
+    elif art.fast:
+        yq = crossbar_vmm_pallas(
+            xq, art.w_codes, spec, adc_cfg=None, fast=True, interpret=interpret,
+            skip_zero_planes=skip_zero_planes,
+        )
+    else:
+        yq = crossbar_vmm_pallas(
+            xq, art.w_codes, spec, adc_cfg=art.adc_cfg, interpret=interpret,
+            skip_zero_planes=skip_zero_planes,
+        )
+    return yq.astype(jnp.float32) * (x_scale * art.w_scale * (2.0 ** spec.drop_lsb))
+
+
+def programmed_linear(
+    x: jnp.ndarray,
+    art: ProgrammedLinear,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Signed-activation ``x @ w`` against a programmed artifact.
+
+    The offset-encoding dance of ``models.layers.crossbar_linear`` — shift
+    activations non-negative, run the unsigned datapath, correct digitally
+    with the weight column sums — except the column sums come precomputed
+    from the artifact (written once at programming time, as real hardware
+    does) instead of a per-call ``sum(w, axis=0)`` reduction.
+    """
+    shift = jnp.min(x)
+    xs = (x - shift).astype(jnp.float32)
+    y = programmed_matmul(xs, art, interpret=interpret)
+    return y + shift.astype(jnp.float32) * art.w_colsum
+
+
+# ---------------------------------------------------------------------------
+# Whole-model compilation + artifact lookup (eager and under jit)
+# ---------------------------------------------------------------------------
+
+_BIND = threading.local()  # .maps: list of {id(param leaf) -> ProgrammedLinear}
+
+
+def _id_map_of(params: Any, artifacts: Any) -> Dict[int, ProgrammedLinear]:
+    """Position-exact {id(param leaf) -> artifact}: flatten params, align the
+    artifact tree to the same structure (None where not compiled), zip."""
+    flat_p, treedef_p = jax.tree_util.tree_flatten(params)
+    flat_a = treedef_p.flatten_up_to(artifacts)
+    out: Dict[int, ProgrammedLinear] = {}
+    for leaf, art in zip(flat_p, flat_a):
+        if isinstance(art, ProgrammedLinear):
+            out[id(leaf)] = art
+    return out
+
+
+@contextlib.contextmanager
+def bind_artifacts(params: Any, artifacts: Any):
+    """Associate a (sub)tree of artifacts with congruent parameter leaves
+    for the dynamic scope.  Works eagerly and at ``jit``/``scan`` trace
+    time: the leaves may be tracers, and the map built here routes each
+    traced weight to its (closure-constant or traced) artifact — this is
+    how scan-stacked layers bind their per-iteration parameter slices to
+    the matching per-iteration artifact slices inside the scan body."""
+    if artifacts is None:
+        yield
+        return
+    m = _id_map_of(params, artifacts)
+    stack = getattr(_BIND, "maps", None)
+    if stack is None:
+        stack = _BIND.maps = []
+    stack.append(m)
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def active_artifact_for(w: jnp.ndarray) -> Optional[ProgrammedLinear]:
+    """Artifact bound to this exact parameter object, if any.
+
+    Consulted by ``crossbar_linear``.  Lookup is by object identity — the
+    leaf of the params pytree the model was compiled from (eager), or the
+    tracer standing for it inside a ``bind_artifacts`` scope (jit/scan).
+    A shape guard protects against id reuse after garbage collection; a
+    stacked artifact never serves a 2-D weight directly.
+    """
+    for m in reversed(getattr(_BIND, "maps", [])):
+        art = m.get(id(w))
+        if art is not None and not art.stacked and art.shape == tuple(w.shape):
+            return art
+    return None
+
+
+# The projection leaves models.attention routes through crossbar_linear —
+# the only call sites that can consume an artifact today.  (ffn wi/wo and
+# the LM head use plain XLA matmuls; widen this set when they are routed
+# through the crossbar, see ROADMAP.)
+_CROSSBAR_CONSUMERS = ("wq", "wk", "wv", "wo", "w_kv_down")
+
+
+def _path_names(path: Tuple[Any, ...]) -> Tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "name", ""))) for p in path)
+
+
+def _matmul_leaf(path: Tuple[Any, ...], leaf: Any) -> bool:
+    """Default predicate: which param leaves go onto crossbars.
+
+    Allowlist of the projection names ``crossbar_linear`` actually serves
+    (attention q/k/v/o and the MLA kv down-projection), as 2-D matrices or
+    3-D scan-stacked ``(L, K, N)``.  An allowlist — rather than excluding
+    known non-matmuls — keeps stacked per-layer *vectors* (ssm ``conv_b``,
+    ``D_skip``: ``(L, din)`` after stacking, indistinguishable from a small
+    weight matrix by shape alone) from being miscompiled into unusable
+    artifacts, and avoids paying write-verify programming + 8x ``g_eff``
+    memory for leaves no crossbar call site consumes.  Override with
+    ``leaf_filter`` for exotic layouts.
+    """
+    if not isinstance(leaf, jnp.ndarray) or leaf.ndim not in (2, 3):
+        return False
+    if not jnp.issubdtype(leaf.dtype, jnp.floating):
+        return False
+    names = _path_names(path)
+    return bool(names) and names[-1] in _CROSSBAR_CONSUMERS and "ffn" not in names
+
+
+def stacked_only(artifacts: Any) -> Any:
+    """Prune non-stacked artifacts from a stage subtree.
+
+    A stage's layer scan slices every artifact array on a leading layer
+    axis; a 2-D artifact (scalar ``w_scale``) inside a stacked-stage
+    subtree can never be sliced that way and would crash the scan — drop
+    it (the weight simply falls back to the per-call path).
+    """
+    return jax.tree_util.tree_map(
+        lambda a: a if isinstance(a, ProgrammedLinear) and a.stacked else None,
+        artifacts,
+        is_leaf=lambda x: isinstance(x, ProgrammedLinear),
+    )
+
+
+class ProgrammedModel:
+    """A pytree of ProgrammedLinear artifacts mirroring a params pytree.
+
+    Holds the compiled chips plus an identity map from the *build-time*
+    parameter leaves, so eager forwards resolve immediately; ``bind(params)``
+    pushes a temporary map for a different-but-congruent params tree — in
+    particular the tracers seen while ``jax.jit`` traces a forward pass.
+    """
+
+    def __init__(self, artifacts: Any, params: Optional[Any] = None):
+        self.artifacts = artifacts
+        self._build_map: Dict[int, ProgrammedLinear] = (
+            _id_map_of(params, artifacts) if params is not None else {}
+        )
+        self._keepalive = params  # ids stay valid while the model lives
+
+    def bind(self, params: Any):
+        """Associate artifacts with ``params``' leaves for the dynamic scope
+        (see ``bind_artifacts``); use around jitted forwards so traced
+        weights resolve to their artifacts."""
+        return bind_artifacts(params, self.artifacts)
+
+    def subtree(self, key: str) -> Any:
+        """Artifact subtree for one top-level params key (e.g. "stage0")."""
+        try:
+            return self.artifacts[key]
+        except (KeyError, TypeError, IndexError):
+            return None
+
+    def lookup(self, w: jnp.ndarray) -> Optional[ProgrammedLinear]:
+        art = active_artifact_for(w)
+        if art is not None:
+            return art
+        art = self._build_map.get(id(w))
+        if art is not None and not art.stacked and art.shape == tuple(w.shape):
+            return art
+        return None
+
+    @property
+    def n_compiled(self) -> int:
+        return sum(
+            1
+            for a in jax.tree_util.tree_leaves(
+                self.artifacts, is_leaf=lambda x: isinstance(x, ProgrammedLinear)
+            )
+            if isinstance(a, ProgrammedLinear)
+        )
+
+    def reports(self) -> Dict[str, ProgramReport]:
+        """Path -> write-verify report for every compiled leaf that has one."""
+        out: Dict[str, ProgramReport] = {}
+        flat, _ = jax.tree_util.tree_flatten_with_path(
+            self.artifacts, is_leaf=lambda x: isinstance(x, ProgrammedLinear)
+        )
+        for path, art in flat:
+            if isinstance(art, ProgrammedLinear) and art.report is not None:
+                out[jax.tree_util.keystr(path)] = art.report
+        return out
+
+
+def program_model(
+    params: Any,
+    spec: CrossbarSpec = DEFAULT_SPEC,
+    device: Optional[dm.DeviceConfig] = None,
+    adc_cfg: Optional[ADCConfig] = SAFE_ADAPTIVE,
+    *,
+    fast: bool = True,
+    with_report: bool = False,
+    leaf_filter: Optional[Callable[[Tuple[Any, ...], Any], bool]] = None,
+) -> ProgrammedModel:
+    """Walk a param pytree and compile every matmul-shaped leaf.
+
+    The whole-model programming pass: one ``program_layer`` per selected
+    leaf, so an inference run (or a serving engine) works against a single
+    fixed programmed chip.  ``leaf_filter(path, leaf) -> bool`` overrides
+    the default 2-D-float-non-embedding predicate.
+    """
+    pred = leaf_filter if leaf_filter is not None else _matmul_leaf
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    arts = [
+        program_layer(
+            leaf, spec, device, adc_cfg, fast=fast, with_report=with_report
+        )
+        if pred(path, leaf)
+        else None
+        for path, leaf in flat
+    ]
+    artifacts = jax.tree_util.tree_unflatten(treedef, arts)
+    return ProgrammedModel(artifacts, params=params)

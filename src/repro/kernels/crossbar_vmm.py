@@ -72,9 +72,17 @@ def _schedule_tables(spec: CrossbarSpec, cfg: Optional[ADCConfig]):
 
 def _vmm_kernel(
     x_ref, w_ref, xsum_ref, o_ref, acc_hi, acc_lo, flag_ref, *,
-    spec: CrossbarSpec, shifts, detects, n_k: int,
+    spec: CrossbarSpec, shifts, detects, n_k: int, skip_zero_planes: bool,
 ):
-    """One (bm, bn) output block; k-axis accumulates row groups."""
+    """One (bm, bn) output block; k-axis accumulates row groups.
+
+    With ``skip_zero_planes`` the T x S dot loop is predicated per iteration
+    ``t`` on the plane popcount: an all-zero input bit-plane produces only
+    zero partials (and zero ADC/flag effects — a rounded/clamped 0 is 0), so
+    a real adaptive ADC never samples it (Ibrayev et al.) and the kernel
+    skips all S dots for that plane.  Bit-identical to the dense loop; on
+    post-ReLU activations most high planes are dead, so the win is large.
+    """
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -89,36 +97,44 @@ def _vmm_kernel(
     cell_mask = (1 << spec.cell_bits) - 1
     dac_mask = (1 << spec.dac_bits) - 1
 
-    hi_acc = acc_hi[...]
-    lo_acc = acc_lo[...]
-    flags = flag_ref[...]
     for t in range(T):
-        plane = ((x >> (t * spec.dac_bits)) & dac_mask).astype(jnp.float32)
-        for s in range(S):
-            sl = ((w >> (s * spec.cell_bits)) & cell_mask).astype(jnp.float32)
-            # {0..dac_max} x {0..3} over 128 rows: exact in f32 (<= 2**9)
-            p = jax.lax.dot_general(
-                plane, sl, (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            ).astype(jnp.int32)
-            g = shifts[t][s]
-            if g > 0:  # SAR skips LSBs below the window: round-half-up
-                p = ((p + (1 << (g - 1))) >> g) << g
-            d = detects[t][s]
-            if d is not None:  # overflow-detect comparison -> clamp signal
-                flags = jnp.maximum(flags, ((p >> d) > 0).astype(jnp.int32))
-            base = spec.base_shift(t, s)
-            if base < RADIX_BITS:
-                sh = p << base  # <= 2**(19 + adc_bits) — safe
-                lo_acc = lo_acc + (sh & RADIX_MASK)
-                hi_acc = hi_acc + (sh >> RADIX_BITS)
-            else:
-                hi_acc = hi_acc + (p << (base - RADIX_BITS))
-    # normalize once per k-step so limbs stay far from overflow
-    carry = lo_acc >> RADIX_BITS
-    acc_hi[...] = hi_acc + carry
-    acc_lo[...] = lo_acc - (carry << RADIX_BITS)
-    flag_ref[...] = flags
+        plane_i = (x >> (t * spec.dac_bits)) & dac_mask
+
+        def _accum(plane_i=plane_i, t=t):
+            plane = plane_i.astype(jnp.float32)
+            hi_acc = acc_hi[...]
+            lo_acc = acc_lo[...]
+            flags = flag_ref[...]
+            for s in range(S):
+                sl = ((w >> (s * spec.cell_bits)) & cell_mask).astype(jnp.float32)
+                # {0..dac_max} x {0..3} over 128 rows: exact in f32 (<= 2**9)
+                p = jax.lax.dot_general(
+                    plane, sl, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                ).astype(jnp.int32)
+                g = shifts[t][s]
+                if g > 0:  # SAR skips LSBs below the window: round-half-up
+                    p = ((p + (1 << (g - 1))) >> g) << g
+                d = detects[t][s]
+                if d is not None:  # overflow-detect comparison -> clamp signal
+                    flags = jnp.maximum(flags, ((p >> d) > 0).astype(jnp.int32))
+                base = spec.base_shift(t, s)
+                if base < RADIX_BITS:
+                    sh = p << base  # <= 2**(19 + adc_bits) — safe
+                    lo_acc = lo_acc + (sh & RADIX_MASK)
+                    hi_acc = hi_acc + (sh >> RADIX_BITS)
+                else:
+                    hi_acc = hi_acc + (p << (base - RADIX_BITS))
+            # normalize per plane so limbs stay far from overflow
+            carry = lo_acc >> RADIX_BITS
+            acc_hi[...] = hi_acc + carry
+            acc_lo[...] = lo_acc - (carry << RADIX_BITS)
+            flag_ref[...] = flags
+
+        if skip_zero_planes:
+            pl.when(jnp.any(plane_i != 0))(_accum)
+        else:
+            _accum()
 
     @pl.when(k == n_k - 1)
     def _finalize():
@@ -167,8 +183,12 @@ def _requantize_block(o_ref, acc_hi, acc_lo, flag_ref, xsum_ref, spec: CrossbarS
 
 
 def _fast_kernel(x_ref, w_ref, xsum_ref, o_ref, acc_hi, acc_lo, flag_ref, *,
-                 spec: CrossbarSpec, n_k: int):
-    """Fused exact path: 2 activation halves x S slices = 16 dots/block."""
+                 spec: CrossbarSpec, n_k: int, skip_zero_planes: bool):
+    """Fused exact path: 2 activation halves x S slices = 16 dots/block.
+
+    ``skip_zero_planes`` predicates each activation half on its popcount —
+    small post-ReLU codes leave the high half all-zero, halving the dots.
+    """
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -183,29 +203,36 @@ def _fast_kernel(x_ref, w_ref, xsum_ref, o_ref, acc_hi, acc_lo, flag_ref, *,
     cell_mask = (1 << spec.cell_bits) - 1
     half = spec.input_bits // 2
     hmask = (1 << half) - 1
-    hi_acc = acc_hi[...]
-    lo_acc = acc_lo[...]
     for hx, xbits in ((0, (x & hmask)), (half, (x >> half) & hmask)):
-        xf = xbits.astype(jnp.float32)
-        for s in range(S):
-            sl = ((w >> (s * spec.cell_bits)) & cell_mask).astype(jnp.float32)
-            # 255 * 3 * 128 < 2**24: exact in f32
-            p = jax.lax.dot_general(
-                xf, sl, (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            ).astype(jnp.int32)
-            base = hx + s * spec.cell_bits
-            if base < RADIX_BITS:
-                # p < 2**17, so split before shifting to stay in int32:
-                # p * 2**base = (p >> k) * 2**20 + (p & (2**k - 1)) * 2**base
-                k_bits = RADIX_BITS - base
-                hi_acc = hi_acc + (p >> k_bits)
-                lo_acc = lo_acc + ((p & ((1 << k_bits) - 1)) << base)
-            else:
-                hi_acc = hi_acc + (p << (base - RADIX_BITS))
-    carry = lo_acc >> RADIX_BITS
-    acc_hi[...] = hi_acc + carry
-    acc_lo[...] = lo_acc - (carry << RADIX_BITS)
+
+        def _accum(xbits=xbits, hx=hx):
+            xf = xbits.astype(jnp.float32)
+            hi_acc = acc_hi[...]
+            lo_acc = acc_lo[...]
+            for s in range(S):
+                sl = ((w >> (s * spec.cell_bits)) & cell_mask).astype(jnp.float32)
+                # 255 * 3 * 128 < 2**24: exact in f32
+                p = jax.lax.dot_general(
+                    xf, sl, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                ).astype(jnp.int32)
+                base = hx + s * spec.cell_bits
+                if base < RADIX_BITS:
+                    # p < 2**17, so split before shifting to stay in int32:
+                    # p * 2**base = (p >> k) * 2**20 + (p & (2**k - 1)) * 2**base
+                    k_bits = RADIX_BITS - base
+                    hi_acc = hi_acc + (p >> k_bits)
+                    lo_acc = lo_acc + ((p & ((1 << k_bits) - 1)) << base)
+                else:
+                    hi_acc = hi_acc + (p << (base - RADIX_BITS))
+            carry = lo_acc >> RADIX_BITS
+            acc_hi[...] = hi_acc + carry
+            acc_lo[...] = lo_acc - (carry << RADIX_BITS)
+
+        if skip_zero_planes:
+            pl.when(jnp.any(xbits != 0))(_accum)
+        else:
+            _accum()
 
     @pl.when(k == n_k - 1)
     def _finalize():
@@ -224,7 +251,10 @@ def _pad_to(a: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("spec", "adc_cfg", "block_m", "block_n", "fast", "interpret"),
+    static_argnames=(
+        "spec", "adc_cfg", "block_m", "block_n", "fast", "interpret",
+        "skip_zero_planes",
+    ),
 )
 def crossbar_vmm_pallas(
     x_codes: jnp.ndarray,
@@ -235,12 +265,18 @@ def crossbar_vmm_pallas(
     block_n: int = DEFAULT_BN,
     fast: bool = False,
     interpret: bool = False,
+    skip_zero_planes: bool = True,
 ) -> jnp.ndarray:
     """Crossbar VMM on integer codes via the Pallas kernel.
 
     x_codes: (..., K) unsigned input codes; w_codes: (K, N) signed codes when
     ``spec.signed_weights``.  Returns (..., N) int32 output codes identical
     to ``repro.core.crossbar.crossbar_vmm``.
+
+    ``skip_zero_planes``: predicate each input bit-plane's dots on its
+    popcount (``@pl.when``); bit-identical either way, faster on sparse
+    inputs.  ``core.crossbar.plane_activity`` counts the skipped
+    conversions for the energy model.
     """
     batch_shape = x_codes.shape[:-1]
     K = x_codes.shape[-1]
@@ -266,10 +302,13 @@ def crossbar_vmm_pallas(
     if fast:
         if adc_cfg is not None and adc_cfg.mode != "full":
             raise ValueError("fast path models full-resolution ADCs only")
-        kernel = functools.partial(_fast_kernel, spec=spec, n_k=grid[2])
+        kernel = functools.partial(
+            _fast_kernel, spec=spec, n_k=grid[2], skip_zero_planes=skip_zero_planes
+        )
     else:
         kernel = functools.partial(
-            _vmm_kernel, spec=spec, shifts=shifts, detects=detects, n_k=grid[2]
+            _vmm_kernel, spec=spec, shifts=shifts, detects=detects, n_k=grid[2],
+            skip_zero_planes=skip_zero_planes,
         )
 
     out = pl.pallas_call(

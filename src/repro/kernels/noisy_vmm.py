@@ -44,9 +44,15 @@ from repro.kernels.crossbar_vmm import (
 
 def _noisy_kernel(
     x_ref, g_ref, xsum_ref, o_ref, acc_hi, acc_lo, flag_ref, *,
-    spec: CrossbarSpec, shifts, detects, n_k: int,
+    spec: CrossbarSpec, shifts, detects, n_k: int, skip_zero_planes: bool,
 ):
-    """One (bm, bn) output block against perturbed cells; k accumulates groups."""
+    """One (bm, bn) output block against perturbed cells; k accumulates groups.
+
+    ``skip_zero_planes``: as in ``crossbar_vmm._vmm_kernel`` — an all-zero
+    input bit-plane drives zero current into every bitline regardless of the
+    perturbed cell values (0 * g == 0, and the ADC's round/saturate of 0 is
+    0), so its S dots are skipped under a ``@pl.when`` popcount predicate.
+    """
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -60,37 +66,45 @@ def _noisy_kernel(
     T, S = spec.n_iters, spec.n_slices
     dac_mask = (1 << spec.dac_bits) - 1
 
-    hi_acc = acc_hi[...]
-    lo_acc = acc_lo[...]
-    flags = flag_ref[...]
     for t in range(T):
-        plane = ((x >> (t * spec.dac_bits)) & dac_mask).astype(jnp.float32)
-        for s in range(S):
-            # grid-quantized cells keep this dot exact in f32 (module doc)
-            raw = jax.lax.dot_general(
-                plane, g[s], (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            )
-            # ADC sampling: round-half-up to an integer code, saturating
-            p = jnp.floor(raw + 0.5).astype(jnp.int32)
-            p = jnp.clip(p, 0, spec.partial_max)
-            gsh = shifts[t][s]
-            if gsh > 0:  # SAR skips LSBs below the window: round-half-up
-                p = ((p + (1 << (gsh - 1))) >> gsh) << gsh
-            d = detects[t][s]
-            if d is not None:  # overflow-detect comparison -> clamp signal
-                flags = jnp.maximum(flags, ((p >> d) > 0).astype(jnp.int32))
-            base = spec.base_shift(t, s)
-            if base < RADIX_BITS:
-                sh = p << base  # <= 2**(19 + adc_bits) — safe
-                lo_acc = lo_acc + (sh & RADIX_MASK)
-                hi_acc = hi_acc + (sh >> RADIX_BITS)
-            else:
-                hi_acc = hi_acc + (p << (base - RADIX_BITS))
-    carry = lo_acc >> RADIX_BITS
-    acc_hi[...] = hi_acc + carry
-    acc_lo[...] = lo_acc - (carry << RADIX_BITS)
-    flag_ref[...] = flags
+        plane_i = (x >> (t * spec.dac_bits)) & dac_mask
+
+        def _accum(plane_i=plane_i, t=t):
+            plane = plane_i.astype(jnp.float32)
+            hi_acc = acc_hi[...]
+            lo_acc = acc_lo[...]
+            flags = flag_ref[...]
+            for s in range(S):
+                # grid-quantized cells keep this dot exact in f32 (module doc)
+                raw = jax.lax.dot_general(
+                    plane, g[s], (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                )
+                # ADC sampling: round-half-up to an integer code, saturating
+                p = jnp.floor(raw + 0.5).astype(jnp.int32)
+                p = jnp.clip(p, 0, spec.partial_max)
+                gsh = shifts[t][s]
+                if gsh > 0:  # SAR skips LSBs below the window: round-half-up
+                    p = ((p + (1 << (gsh - 1))) >> gsh) << gsh
+                d = detects[t][s]
+                if d is not None:  # overflow-detect comparison -> clamp signal
+                    flags = jnp.maximum(flags, ((p >> d) > 0).astype(jnp.int32))
+                base = spec.base_shift(t, s)
+                if base < RADIX_BITS:
+                    sh = p << base  # <= 2**(19 + adc_bits) — safe
+                    lo_acc = lo_acc + (sh & RADIX_MASK)
+                    hi_acc = hi_acc + (sh >> RADIX_BITS)
+                else:
+                    hi_acc = hi_acc + (p << (base - RADIX_BITS))
+            carry = lo_acc >> RADIX_BITS
+            acc_hi[...] = hi_acc + carry
+            acc_lo[...] = lo_acc - (carry << RADIX_BITS)
+            flag_ref[...] = flags
+
+        if skip_zero_planes:
+            pl.when(jnp.any(plane_i != 0))(_accum)
+        else:
+            _accum()
 
     @pl.when(k == n_k - 1)
     def _finalize():
@@ -99,7 +113,9 @@ def _noisy_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("spec", "adc_cfg", "block_m", "block_n", "interpret"),
+    static_argnames=(
+        "spec", "adc_cfg", "block_m", "block_n", "interpret", "skip_zero_planes",
+    ),
 )
 def noisy_vmm_pallas(
     x_codes: jnp.ndarray,
@@ -109,13 +125,15 @@ def noisy_vmm_pallas(
     block_m: int = DEFAULT_BM,
     block_n: int = DEFAULT_BN,
     interpret: bool = False,
+    skip_zero_planes: bool = True,
 ) -> jnp.ndarray:
     """Device-perturbed crossbar VMM via the Pallas kernel.
 
     x_codes: (..., K) unsigned input codes; g_eff: (S, K, N) float32
     effective cell codes (``repro.device.models.effective_cell_codes``).
     Returns (..., N) int32 output codes identical to
-    ``repro.core.crossbar.noisy_crossbar_vmm``.
+    ``repro.core.crossbar.noisy_crossbar_vmm``; ``skip_zero_planes`` is the
+    bit-identical plane-popcount early-out (see ``crossbar_vmm``).
     """
     if spec.partial_max << GEFF_FRAC_BITS >= 1 << 24:
         raise ValueError(
@@ -146,7 +164,8 @@ def noisy_vmm_pallas(
 
     shifts, detects = _schedule_tables(spec, adc_cfg)
     kernel = functools.partial(
-        _noisy_kernel, spec=spec, shifts=shifts, detects=detects, n_k=grid[2]
+        _noisy_kernel, spec=spec, shifts=shifts, detects=detects, n_k=grid[2],
+        skip_zero_planes=skip_zero_planes,
     )
 
     out = pl.pallas_call(

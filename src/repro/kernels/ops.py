@@ -36,12 +36,14 @@ def crossbar_vmm_op(
     adc_cfg: Optional[ADCConfig] = None,
     fast: bool = False,
     interpret: Optional[bool] = None,
+    skip_zero_planes: bool = True,
 ) -> jnp.ndarray:
     """Bit-exact crossbar VMM on integer codes (Pallas)."""
     if interpret is None:
         interpret = _auto_interpret()
     return crossbar_vmm_pallas(
-        x_codes, w_codes, spec=spec, adc_cfg=adc_cfg, fast=fast, interpret=interpret
+        x_codes, w_codes, spec=spec, adc_cfg=adc_cfg, fast=fast, interpret=interpret,
+        skip_zero_planes=skip_zero_planes,
     )
 
 
@@ -51,11 +53,15 @@ def noisy_vmm_op(
     spec: CrossbarSpec = DEFAULT_SPEC,
     adc_cfg: Optional[ADCConfig] = None,
     interpret: Optional[bool] = None,
+    skip_zero_planes: bool = True,
 ) -> jnp.ndarray:
     """Device-perturbed crossbar VMM on integer codes + effective cells."""
     if interpret is None:
         interpret = _auto_interpret()
-    return noisy_vmm_pallas(x_codes, g_eff, spec=spec, adc_cfg=adc_cfg, interpret=interpret)
+    return noisy_vmm_pallas(
+        x_codes, g_eff, spec=spec, adc_cfg=adc_cfg, interpret=interpret,
+        skip_zero_planes=skip_zero_planes,
+    )
 
 
 def crossbar_matmul(

@@ -330,14 +330,26 @@ class CrossbarMode:
     ``device`` (a ``repro.device.DeviceConfig``) additionally routes the
     matmul through the memristor non-ideality pipeline — stuck cells,
     programming variation, drift, IR drop — so end-to-end model accuracy
-    under realistic devices is one context manager away."""
+    under realistic devices is one context manager away.
+
+    ``programmed`` (a ``repro.device.programmed.ProgrammedModel``) is the
+    program-once steady-state path: projections whose weight matches a
+    compiled artifact skip quantization-scale reductions, fault redraw and
+    write-verify entirely and serve from the fixed programmed chip; weights
+    without an artifact fall back to the program-every-call path above."""
 
     enabled: bool = False
     fast: bool = True  # fused exact kernel (full-resolution ADC)
     device: Optional[Any] = None  # repro.device.DeviceConfig
+    programmed: Optional[Any] = None  # repro.device.programmed.ProgrammedModel
 
 
 _CROSSBAR = CrossbarMode()
+
+
+def current_crossbar() -> CrossbarMode:
+    """The active CrossbarMode (the all-default disabled mode when unset)."""
+    return _CROSSBAR
 
 
 @contextlib.contextmanager
@@ -355,10 +367,28 @@ def crossbar_linear(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """y = x @ w, optionally through the crossbar datapath (W16A16).
 
     Activations are offset-encoded (crossbar inputs are unsigned; the offset
-    is corrected digitally — see ``core.crossbar.signed_vmm_limbs``)."""
+    is corrected digitally — see ``core.crossbar.signed_vmm_limbs``).
+
+    If a programmed artifact is bound for ``w`` (via
+    ``CrossbarMode.programmed`` or an enclosing ``ProgrammedModel.bind``),
+    the steady-state program-once path serves the call: quantize input ->
+    Pallas kernel -> dequantize, with scales / effective cells / correction
+    column sums all precomputed at programming time.  Otherwise the weight
+    is programmed on the fly (the original per-call pipeline)."""
     if not _CROSSBAR.enabled:
         return x @ w
+    from repro.device import programmed as prog
     from repro.kernels import ops as kops
+
+    if _CROSSBAR.programmed is not None:
+        art = _CROSSBAR.programmed.lookup(w)  # bind-stack first, then build map
+    else:
+        art = prog.active_artifact_for(w)
+    if art is not None:
+        # x passed as-is: programmed_linear offset-encodes in x.dtype before
+        # casting, mirroring the fallback below op-for-op (pre-casting bf16
+        # activations here would break bit-identity between the two paths)
+        return prog.programmed_linear(x, art).astype(x.dtype)
 
     shift = jnp.min(x)
     xs = (x - shift).astype(jnp.float32)  # non-negative

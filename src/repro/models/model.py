@@ -29,6 +29,7 @@ from repro.models import ssm as ssm_mod
 from repro.models import xlstm as xlstm_mod
 from repro.models.layers import (
     Init,
+    current_crossbar,
     embed,
     init_embed,
     init_mlp,
@@ -38,6 +39,28 @@ from repro.models.layers import (
     shard,
     softcap,
 )
+
+
+def _stage_artifacts(si: int):
+    """Programmed-crossbar artifact subtree for stage ``si``.
+
+    Non-None only when serving under ``crossbar_mode(CrossbarMode(...,
+    programmed=...))`` — the program-once steady-state path.  The subtree
+    mirrors the stage's stacked params; ``_run_stage`` zips it into the
+    layer scan so each iteration binds its parameter slices to the matching
+    pre-programmed artifact slices.
+    """
+    mode = current_crossbar()
+    if not mode.enabled or mode.programmed is None:
+        return None
+    sub = mode.programmed.subtree(f"stage{si}")
+    if sub is None:
+        return None
+    # stage params are layer-stacked; only stacked artifacts can ride the
+    # scan (a stray 2-D artifact would crash the per-layer slicing)
+    from repro.device.programmed import stacked_only
+
+    return stacked_only(sub)
 
 
 # ---------------------------------------------------------------------------
@@ -236,23 +259,29 @@ def _run_stage(
     cache_stage=None,
     decode_pos=None,
     remat: bool = False,
+    artifacts_stage=None,
 ):
     def body(carry, xs):
         h = carry
-        lp, cache_layer = xs
-        new_entries = {}
-        for i, kind in enumerate(spec.kinds):
-            entry = cache_layer[f"b{i}"] if cache_layer is not None else None
-            h, ne = _apply_block(
-                lp[f"b{i}"], h, cfg, kind, bool(spec.moe[i]) and cfg.moe_experts > 0,
-                positions, entry, decode_pos,
-            )
-            if cache_layer is not None:
-                new_entries[f"b{i}"] = ne
-        if decode_pos is None and h.shape[1] > 1:
-            # sequence-parallel residual stream: the layer-boundary carries the
-            # scan backward must save shrink by the model-axis extent
-            h = shard(h, "batch", "act_seq", None)
+        lp, cache_layer, ap = xs
+        # bind this layer's programmed-crossbar artifacts (scan-sliced in
+        # lockstep with the params) so crossbar_linear serves steady-state
+        from repro.device.programmed import bind_artifacts
+
+        with bind_artifacts(lp, ap):
+            new_entries = {}
+            for i, kind in enumerate(spec.kinds):
+                entry = cache_layer[f"b{i}"] if cache_layer is not None else None
+                h, ne = _apply_block(
+                    lp[f"b{i}"], h, cfg, kind, bool(spec.moe[i]) and cfg.moe_experts > 0,
+                    positions, entry, decode_pos,
+                )
+                if cache_layer is not None:
+                    new_entries[f"b{i}"] = ne
+            if decode_pos is None and h.shape[1] > 1:
+                # sequence-parallel residual stream: the layer-boundary carries the
+                # scan backward must save shrink by the model-axis extent
+                h = shard(h, "batch", "act_seq", None)
         return h, (new_entries if cache_layer is not None else None)
 
     if remat:
@@ -264,13 +293,18 @@ def _run_stage(
         for r in range(spec.repeats):
             lp = jax.tree.map(lambda a: a[r], params_stage)
             cl = jax.tree.map(lambda a: a[r], cache_stage) if cache_stage is not None else None
-            x, ne = body(x, (lp, cl))
+            ap = (
+                jax.tree.map(lambda a: a[r], artifacts_stage)
+                if artifacts_stage is not None
+                else None
+            )
+            x, ne = body(x, (lp, cl, ap))
             entries.append(ne)
         if cache_stage is None:
             return x, None
         stacked = jax.tree.map(lambda *ys: jnp.stack(ys), *entries)
         return x, stacked
-    x, new_cache = jax.lax.scan(body, x, (params_stage, cache_stage))
+    x, new_cache = jax.lax.scan(body, x, (params_stage, cache_stage, artifacts_stage))
     return x, new_cache
 
 
@@ -297,7 +331,8 @@ def forward(params, cfg: ModelConfig, inp, positions=None) -> jnp.ndarray:
         positions = jnp.arange(S)
     for si, spec in enumerate(cfg.stages):
         x, _ = _run_stage(
-            params[f"stage{si}"], x, cfg, spec, positions, remat=cfg.remat
+            params[f"stage{si}"], x, cfg, spec, positions, remat=cfg.remat,
+            artifacts_stage=_stage_artifacts(si),
         )
     return _logits(params, cfg, x)
 
@@ -316,7 +351,10 @@ def loss_fn(params, cfg: ModelConfig, batch) -> jnp.ndarray:
     S = x.shape[1]
     positions = jnp.arange(S)
     for si, spec in enumerate(cfg.stages):
-        x, _ = _run_stage(params[f"stage{si}"], x, cfg, spec, positions, remat=cfg.remat)
+        x, _ = _run_stage(
+            params[f"stage{si}"], x, cfg, spec, positions, remat=cfg.remat,
+            artifacts_stage=_stage_artifacts(si),
+        )
     targets = batch["targets"]
     mask = batch.get("mask", jnp.ones(targets.shape, jnp.float32))
 
@@ -357,7 +395,7 @@ def prefill(params, cfg: ModelConfig, inp, cache):
     for si, spec in enumerate(cfg.stages):
         x, nc = _run_stage(
             params[f"stage{si}"], x, cfg, spec, positions, cache_stage=cache[si],
-            remat=False,
+            remat=False, artifacts_stage=_stage_artifacts(si),
         )
         new_cache.append(nc)
     logits = _logits(params, cfg, x[:, -1:])
@@ -374,7 +412,7 @@ def decode_step(params, cfg: ModelConfig, inp, pos, cache):
     for si, spec in enumerate(cfg.stages):
         x, nc = _run_stage(
             params[f"stage{si}"], x, cfg, spec, positions, cache_stage=cache[si],
-            decode_pos=pos, remat=False,
+            decode_pos=pos, remat=False, artifacts_stage=_stage_artifacts(si),
         )
         new_cache.append(nc)
     logits = _logits(params, cfg, x)

@@ -12,9 +12,17 @@ Slot-based design (vLLM-lite, adapted to JAX static shapes):
 
 Sampling is greedy or temperature-based with a per-engine PRNG; generation
 is deterministic given (seed, admission order), which the tests assert.
+
+Crossbar serving: pass ``crossbar=CrossbarMode(enabled=True, device=...)``
+and the engine compiles every projection onto programmed crossbars **once**
+at construction (``repro.device.programmed.program_model``) — the paper's
+program-once premise as a serving feature.  Every prefill/decode then runs
+the steady-state artifact path inside the jitted step functions: one fixed
+noisy chip across the whole engine lifetime, no per-call reprogramming.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 from typing import Dict, List, Optional
@@ -25,6 +33,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as model_lib
+from repro.models.layers import CrossbarMode, crossbar_mode
 
 
 @dataclasses.dataclass
@@ -53,6 +62,7 @@ class ServingEngine:
         max_seq: int = 512,
         temperature: float = 0.0,
         seed: int = 0,
+        crossbar: Optional[CrossbarMode] = None,
     ):
         self.cfg = cfg
         self.params = params
@@ -60,6 +70,7 @@ class ServingEngine:
         self.max_seq = max_seq
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
+        self.crossbar = self._program_crossbars(crossbar)
         self.cache = model_lib.init_cache(cfg, max_batch, max_seq, dtype=jnp.float32)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.pos = np.zeros(max_batch, np.int32)  # position of next write
@@ -67,9 +78,43 @@ class ServingEngine:
         self.pending: List[Request] = []
         self._rid = itertools.count()
         self._decode = jax.jit(
-            lambda p, t, pos, c: model_lib.decode_step(p, self.cfg, t, pos, c)
+            lambda p, t, pos, c: self._with_crossbar(
+                p, lambda: model_lib.decode_step(p, self.cfg, t, pos, c)
+            )
         )
         self._prefills: Dict[int, object] = {}
+
+    # ------------------------------------------------------------------
+    def _program_crossbars(self, crossbar: Optional[CrossbarMode]):
+        """Program-once compilation of the model's weights (deploy time).
+
+        When crossbar serving is requested without prebuilt artifacts, walk
+        the params and compile every projection now — every subsequent
+        prefill/decode is pure steady-state (and under a noisy
+        ``DeviceConfig`` the whole engine serves from one fixed chip
+        instead of redrawing noise per layer call).
+        """
+        if crossbar is None or not crossbar.enabled or crossbar.programmed is not None:
+            return crossbar
+        from repro.device.programmed import program_model
+
+        prog = program_model(
+            self.params, device=crossbar.device, fast=crossbar.fast
+        )
+        return dataclasses.replace(crossbar, programmed=prog)
+
+    def _with_crossbar(self, params, fn):
+        """Run ``fn`` under the engine's crossbar mode, with programmed
+        artifacts bound to ``params``' leaves (works at jit trace time)."""
+        if self.crossbar is None:
+            return fn()
+        bind = (
+            self.crossbar.programmed.bind(params)
+            if self.crossbar.programmed is not None
+            else contextlib.nullcontext()
+        )
+        with crossbar_mode(self.crossbar), bind:
+            return fn()
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 16, eos_id: Optional[int] = None) -> int:
@@ -80,7 +125,9 @@ class ServingEngine:
     def _prefill_fn(self, bucket: int):
         if bucket not in self._prefills:
             def fn(params, tokens, cache):
-                return model_lib.prefill(params, self.cfg, tokens, cache)
+                return self._with_crossbar(
+                    params, lambda: model_lib.prefill(params, self.cfg, tokens, cache)
+                )
             self._prefills[bucket] = jax.jit(fn)
         return self._prefills[bucket]
 

@@ -1,0 +1,316 @@
+"""Program-once crossbar compilation: the programmed-artifact path must be
+bit-identical to the program-every-call path (ideal and noisy, Pallas
+interpret and jnp reference), zero-plane skipping must be bit-identical to
+the dense loop, and the activity/latency accounting must follow its
+documented semantics."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import adc
+from repro.core import crossbar as cb
+from repro.core.crossbar import ConversionStats, DEFAULT_SPEC
+from repro.device import (
+    DeviceConfig,
+    effective_cell_codes,
+    program_layer,
+    program_model,
+    programmed_linear,
+    programmed_matmul,
+)
+from repro.kernels import ops, ref
+from repro.models.layers import CrossbarMode, crossbar_mode, crossbar_linear
+
+DEV = DeviceConfig(sigma=0.1, p_stuck_on=1e-3, p_stuck_off=1e-3, write_verify_iters=4)
+
+
+def _float_data(rng, B, K, N, nonneg=True):
+    x = rng.normal(size=(B, K)).astype(np.float32)
+    if nonneg:
+        x = np.abs(x)
+    w = rng.normal(size=(K, N)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(w)
+
+
+# ---------------------------------------------------------------------------
+# programmed artifact == program-every-call, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_programmed_noisy_bit_identical_pallas():
+    rng = np.random.default_rng(0)
+    x, w = _float_data(rng, 4, 256, 32)
+    y_percall = ops.crossbar_matmul(x, w, device=DEV, interpret=True)
+    art = program_layer(w, device=DEV)
+    y_prog = programmed_matmul(x, art, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_percall), np.asarray(y_prog))
+
+
+def test_programmed_noisy_bit_identical_jnp_reference():
+    """The same split through the pure-jnp functional model: quantizing with
+    the artifact's frozen scales and running ``noisy_crossbar_vmm`` on its
+    frozen ``g_eff`` reproduces ``crossbar_matmul_f32(device=...)``."""
+    rng = np.random.default_rng(1)
+    x, w = _float_data(rng, 3, 200, 24)
+    y_percall = cb.crossbar_matmul_f32(x, w, device=DEV)
+    art = program_layer(w, device=DEV, adc_cfg=None)
+    spec = art.spec
+    x_scale = jnp.maximum(jnp.max(x), 1e-9) / ((1 << spec.input_bits) - 1)
+    xq = cb.quantize_input(x, spec, x_scale)
+    yq = cb.noisy_crossbar_vmm(xq, art.g_eff, spec)
+    y_prog = yq.astype(jnp.float32) * (x_scale * art.w_scale * (2.0 ** spec.drop_lsb))
+    np.testing.assert_array_equal(np.asarray(y_percall), np.asarray(y_prog))
+
+
+@pytest.mark.parametrize("fast", [True, False])
+def test_programmed_ideal_bit_identical(fast):
+    rng = np.random.default_rng(2)
+    x, w = _float_data(rng, 4, 256, 32)
+    y_percall = ops.crossbar_matmul(x, w, fast=fast, interpret=True)
+    art = program_layer(w, fast=fast)
+    y_prog = programmed_matmul(x, art, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_percall), np.asarray(y_prog))
+
+
+def test_programming_is_deterministic():
+    """One DeviceConfig seed -> one chip: reprogramming draws the identical
+    faults, pulses and read path (the program-every-call path relied on
+    exactly this, so the cache is sound)."""
+    rng = np.random.default_rng(3)
+    _, w = _float_data(rng, 1, 128, 16)
+    a1 = program_layer(w, device=DEV)
+    a2 = program_layer(w, device=DEV, with_report=True)
+    np.testing.assert_array_equal(np.asarray(a1.g_eff), np.asarray(a2.g_eff))
+    np.testing.assert_array_equal(np.asarray(a1.w_codes), np.asarray(a2.w_codes))
+    assert a2.report is not None and a2.report.iterations >= 1
+
+
+def test_stacked_artifact_matches_per_layer():
+    rng = np.random.default_rng(4)
+    ws = jnp.asarray(rng.normal(size=(3, 128, 16)).astype(np.float32))
+    stacked = program_layer(ws, device=DEV)
+    assert stacked.stacked and stacked.w_codes.shape == (3, 128, 16)
+    for i in range(3):
+        direct = program_layer(ws[i], device=DEV)
+        sliced = stacked.layer(i)
+        np.testing.assert_array_equal(np.asarray(sliced.g_eff), np.asarray(direct.g_eff))
+        np.testing.assert_array_equal(
+            np.asarray(sliced.w_scale), np.asarray(direct.w_scale)
+        )
+
+
+# ---------------------------------------------------------------------------
+# crossbar_linear / CrossbarMode integration
+# ---------------------------------------------------------------------------
+
+def test_crossbar_linear_programmed_bit_identical():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(4, 256)).astype(np.float32))  # signed
+    w = jnp.asarray(rng.normal(size=(256, 32)).astype(np.float32))
+    params = {"wq": w}
+    prog = program_model(params, device=DEV)
+    assert prog.n_compiled == 1
+    with crossbar_mode(CrossbarMode(enabled=True, device=DEV)):
+        y_percall = crossbar_linear(x, w)
+    with crossbar_mode(CrossbarMode(enabled=True, device=DEV, programmed=prog)):
+        y_prog = crossbar_linear(x, params["wq"])
+    np.testing.assert_array_equal(np.asarray(y_percall), np.asarray(y_prog))
+
+
+def test_crossbar_linear_programmed_bit_identical_bf16():
+    """Offset encoding must happen in x.dtype on both paths — bf16 is the
+    default param dtype, and pre-casting activations to f32 on only one
+    side silently breaks the bit-identity guarantee."""
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.normal(size=(4, 128)).astype(np.float32)).astype(jnp.bfloat16)
+    w = jnp.asarray(rng.normal(size=(128, 16)).astype(np.float32)).astype(jnp.bfloat16)
+    params = {"wq": w}
+    prog = program_model(params, device=DEV)
+    with crossbar_mode(CrossbarMode(enabled=True, device=DEV)):
+        y_percall = crossbar_linear(x, w)
+    with crossbar_mode(CrossbarMode(enabled=True, device=DEV, programmed=prog)):
+        y_prog = crossbar_linear(x, params["wq"])
+    assert y_prog.dtype == x.dtype
+    np.testing.assert_array_equal(
+        np.asarray(y_percall, np.float32), np.asarray(y_prog, np.float32)
+    )
+
+
+def test_programmed_bind_under_jit():
+    """Artifact lookup resolves through tracers inside jit; the result
+    matches the jitted per-call path to float fusion tolerance (XLA fuses
+    the two traces differently, so exact bit equality is an eager-only
+    guarantee)."""
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(2, 128)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(128, 16)).astype(np.float32))
+    params = {"wq": w}
+    prog = program_model(params, device=DEV)
+
+    @jax.jit
+    def fwd_prog(p, xin):
+        with prog.bind(p), crossbar_mode(CrossbarMode(enabled=True, device=DEV)):
+            return crossbar_linear(xin, p["wq"])
+
+    @jax.jit
+    def fwd_percall(p, xin):
+        with crossbar_mode(CrossbarMode(enabled=True, device=DEV)):
+            return crossbar_linear(xin, p["wq"])
+
+    a = np.asarray(fwd_prog(params, x))
+    b = np.asarray(fwd_percall(params, x))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_programmed_model_default_filter():
+    """Stacked projections compile; embeddings and norm scales do not."""
+    rng = np.random.default_rng(7)
+    params = {
+        "embed": {"tokens": jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))},
+        "stage0": {
+            "b0": {
+                "wq": jnp.asarray(rng.normal(size=(2, 32, 16)).astype(np.float32)),
+                "norm1": jnp.asarray(rng.normal(size=(2, 32)).astype(np.float32)),
+            }
+        },
+    }
+    prog = program_model(params)  # ideal: cheap
+    assert prog.n_compiled == 1
+    assert prog.artifacts["stage0"]["b0"]["wq"].stacked
+    assert prog.artifacts["stage0"]["b0"]["norm1"] is None
+    assert prog.artifacts["embed"]["tokens"] is None
+
+
+@pytest.mark.slow
+def test_serving_engine_programmed_crossbars():
+    """End-to-end: the engine programs the model once and decodes on the
+    steady-state path; generation is deterministic for a fixed seed."""
+    from repro import configs
+    from repro.configs.base import reduced
+    from repro.models import model as M
+    from repro.serving.engine import ServingEngine
+
+    cfg = reduced(configs.get_config("smollm-360m"))
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+    dev = DeviceConfig(sigma=0.02, write_verify_iters=2)
+    outs = []
+    for _ in range(2):
+        eng = ServingEngine(
+            cfg, params, max_batch=2, max_seq=64,
+            crossbar=CrossbarMode(enabled=True, device=dev),
+        )
+        assert eng.crossbar.programmed is not None
+        assert eng.crossbar.programmed.n_compiled >= 4
+        eng.submit(np.array([1, 2, 3], np.int32), max_new_tokens=2)
+        outs.append(eng.run_until_done()[0].generated)
+    assert outs[0] == outs[1] and len(outs[0]) == 2
+
+
+# ---------------------------------------------------------------------------
+# zero-plane skipping: bit-identity + conversion accounting
+# ---------------------------------------------------------------------------
+
+def _int_data(rng, B, K, N, sparse=False):
+    if sparse:  # post-ReLU style: mostly zero, small codes
+        x = rng.integers(0, 1 << 9, size=(B, K)) * (rng.random((B, K)) < 0.25)
+    else:
+        x = rng.integers(0, 1 << 16, size=(B, K))
+    w = rng.integers(-(1 << 15), 1 << 15, size=(K, N))
+    return jnp.asarray(x), jnp.asarray(w)
+
+
+@pytest.mark.parametrize("sparse", [False, True], ids=["dense", "sparse"])
+@pytest.mark.parametrize("adc_cfg", [None, adc.SAFE_ADAPTIVE], ids=["full", "adaptive"])
+def test_zero_plane_skip_bit_identical_ideal(sparse, adc_cfg):
+    rng = np.random.default_rng(10 + sparse)
+    x, w = _int_data(rng, 4, 300, 24, sparse=sparse)
+    y_skip = ops.crossbar_vmm_op(
+        x, w, DEFAULT_SPEC, adc_cfg=adc_cfg, interpret=True, skip_zero_planes=True
+    )
+    y_dense = ops.crossbar_vmm_op(
+        x, w, DEFAULT_SPEC, adc_cfg=adc_cfg, interpret=True, skip_zero_planes=False
+    )
+    y_ref = ref.crossbar_vmm_ref(x, w, DEFAULT_SPEC, adc_cfg=adc_cfg)
+    np.testing.assert_array_equal(np.asarray(y_skip), np.asarray(y_dense))
+    np.testing.assert_array_equal(np.asarray(y_skip), np.asarray(y_ref))
+
+
+@pytest.mark.parametrize("sparse", [False, True], ids=["dense", "sparse"])
+def test_zero_plane_skip_bit_identical_fast(sparse):
+    rng = np.random.default_rng(12 + sparse)
+    x, w = _int_data(rng, 4, 300, 24, sparse=sparse)
+    y_skip = ops.crossbar_vmm_op(x, w, fast=True, interpret=True, skip_zero_planes=True)
+    y_dense = ops.crossbar_vmm_op(x, w, fast=True, interpret=True, skip_zero_planes=False)
+    np.testing.assert_array_equal(np.asarray(y_skip), np.asarray(y_dense))
+
+
+@pytest.mark.parametrize("sparse", [False, True], ids=["dense", "sparse"])
+def test_zero_plane_skip_bit_identical_noisy(sparse):
+    rng = np.random.default_rng(14 + sparse)
+    x, w = _int_data(rng, 4, 256, 16, sparse=sparse)
+    g = effective_cell_codes(
+        w.astype(jnp.int32) + DEFAULT_SPEC.weight_bias, DEFAULT_SPEC, DEV
+    )
+    y_skip = ops.noisy_vmm_op(x, g, interpret=True, skip_zero_planes=True)
+    y_dense = ops.noisy_vmm_op(x, g, interpret=True, skip_zero_planes=False)
+    y_ref = ref.noisy_vmm_ref(x, g)
+    np.testing.assert_array_equal(np.asarray(y_skip), np.asarray(y_dense))
+    np.testing.assert_array_equal(np.asarray(y_skip), np.asarray(y_ref))
+
+
+def test_activity_conversion_stats():
+    rng = np.random.default_rng(16)
+    B, K, N = 4, 300, 24
+    x_dense, _ = _int_data(rng, B, K, N)
+    x_sparse, _ = _int_data(rng, B, K, N, sparse=True)
+    dense = cb.conversion_stats(B, K, N, DEFAULT_SPEC, x_codes=x_dense)
+    sparse = cb.conversion_stats(B, K, N, DEFAULT_SPEC, x_codes=x_sparse)
+    nominal = cb.conversion_stats(B, K, N, DEFAULT_SPEC)
+    # dense 16-bit codes light every plane; sparse inputs skip many
+    assert dense.conversions == nominal.conversions and dense.skipped_conversions == 0
+    assert 0 < sparse.conversions < nominal.conversions
+    assert sparse.conversions + sparse.skipped_conversions == nominal.conversions
+    # all-zero input: everything skipped
+    zero = cb.conversion_stats(
+        B, K, N, DEFAULT_SPEC, x_codes=jnp.zeros((B, K), jnp.int32)
+    )
+    assert zero.conversions == 0
+    assert zero.skipped_conversions == nominal.conversions
+
+
+def test_energy_activity_term():
+    from repro.core import energy as E
+    from repro.core.arch import ISAAC_CHIP
+    from repro.core.workloads import alexnet
+
+    net = alexnet()
+    r_dense = E.evaluate(net, ISAAC_CHIP)
+    r_sparse = E.evaluate(net, ISAAC_CHIP, activity=0.5)
+    # ADC/crossbar/DAC energy scale with activity; provisioned power doesn't
+    assert r_sparse.breakdown["adc"] == pytest.approx(0.5 * r_dense.breakdown["adc"])
+    assert r_sparse.breakdown["crossbar"] == pytest.approx(
+        0.5 * r_dense.breakdown["crossbar"]
+    )
+    assert r_sparse.energy_per_sample_j < r_dense.energy_per_sample_j
+    assert r_sparse.peak_power_w == r_dense.peak_power_w
+
+
+# ---------------------------------------------------------------------------
+# ConversionStats semantics
+# ---------------------------------------------------------------------------
+
+def test_conversion_stats_add_is_sequential_sum():
+    """``+`` composes sequential VMMs: every field adds, including
+    ``iterations`` (total cycles).  Pinned because an earlier revision
+    documented a max-latency proxy while summing."""
+    a = ConversionStats(conversions=10, bit_decisions=90, iterations=16,
+                        skipped_conversions=2)
+    b = ConversionStats(conversions=5, bit_decisions=45, iterations=16,
+                        skipped_conversions=1)
+    c = a + b
+    assert c == ConversionStats(
+        conversions=15, bit_decisions=135, iterations=32, skipped_conversions=3
+    )
+    # identity element + associativity of the sum semantic
+    z = ConversionStats()
+    assert a + z == a and (a + b) + c == a + (b + c)
