@@ -13,7 +13,17 @@ Emits JSON:
    "variation_curve": [{"sigma": s, "adc": "full"|"safe_adaptive",
                         "rmse_ulp": ..., "max_abs_ulp": ..., "rel_err": ...,
                         "bit_exact_vs_ideal": bool}, ...],
-   "fault_curve":     [{"fault_rate": p, "adc": ..., ...}, ...]}
+   "fault_curve":     [{"fault_rate": p, "adc": ..., ...}, ...],
+   "repair_curve":    [{"fault_rate": p, "repair": "off"|"on",
+                        "spare_cols": B, ..., "recovered_frac": r}, ...]}
+
+The repair curve reruns the fault sweep with the ``device.repair``
+spare-column planner on vs off (same seed, same primary fault draw — the
+planner never perturbs primary columns), reporting the fraction of
+stuck-at MSE degradation the repair recovers.  ``model_fault_recovery``
+runs the same comparison end-to-end on a tiny LM (every projection routed
+through the crossbar), which is the repo's acceptance bar: >= 70% of
+logit-MSE degradation recovered at a 1% stuck rate (tests/test_repair.py).
 
 Error units: output ULPs of the per-layer-scaled 16-bit output format
 (``layer_scaled_spec`` picks drop_lsb so the K-row accumulator fits the
@@ -36,6 +46,7 @@ from repro.kernels import ops
 SIGMAS = [0.0, 0.02, 0.05, 0.1, 0.2, 0.4]
 FAULT_RATES = [0.0, 1e-3, 3e-3, 1e-2, 3e-2]
 ADC_CONFIGS = {"full": None, "safe_adaptive": adc.SAFE_ADAPTIVE}
+REPAIR_SPARE_COLS = 64  # per-column-group repair budget for the repair curve
 
 
 def _error_row(y: np.ndarray, y_ideal: np.ndarray) -> Dict[str, float]:
@@ -57,6 +68,7 @@ def run_sweep(
     fault_rates: Optional[List[float]] = None,
     seed: int = 0,
     interpret: bool = True,
+    spare_cols: int = REPAIR_SPARE_COLS,
 ) -> Dict:
     sigmas = SIGMAS if sigmas is None else sigmas
     fault_rates = FAULT_RATES if fault_rates is None else fault_rates
@@ -95,6 +107,31 @@ def run_sweep(
             row.update(measure(cfg, adc_name))
             fault_curve.append(row)
 
+    # --- spare-column repair on/off (full-resolution ADC) ------------------
+    # the "off" arm is the fault_curve's (p, full-ADC) row — same config,
+    # same primary fault draw — so only the repaired chip is re-measured
+    fault_full = {r["fault_rate"]: r for r in fault_curve if r["adc"] == "full"}
+    repair_curve = []
+    for p in fault_rates:
+        base = DeviceConfig(p_stuck_on=p / 2, p_stuck_off=p / 2, seed=seed)
+        off = {k: v for k, v in fault_full[p].items() if k not in ("fault_rate", "adc")}
+        # at p=0 the budget is inert (wants_repair False): provably the off arm
+        on = measure(base.replace(spare_cols=spare_cols), "full") if p > 0 else dict(off)
+        mse_off, mse_on = off["rmse_ulp"] ** 2, on["rmse_ulp"] ** 2
+        recovered = 1.0 - mse_on / mse_off if mse_off > 0 else 0.0
+        repair_curve.append(
+            {"fault_rate": p, "repair": "off", "spare_cols": 0, **off}
+        )
+        repair_curve.append(
+            {
+                "fault_rate": p,
+                "repair": "on",
+                "spare_cols": spare_cols,
+                "recovered_frac": recovered,
+                **on,
+            }
+        )
+
     return {
         "meta": {
             "batch": batch,
@@ -106,9 +143,78 @@ def run_sweep(
             "seed": seed,
             "sigmas": list(sigmas),
             "fault_rates": list(fault_rates),
+            "repair_spare_cols": spare_cols,
         },
         "variation_curve": variation_curve,
         "fault_curve": fault_curve,
+        "repair_curve": repair_curve,
+    }
+
+
+def tiny_lm_config():
+    """A deliberately tiny attention LM whose every projection (q/k/v/o,
+    mlp wi/wo, untied head) routes through ``crossbar_linear`` — small
+    enough for interpret-mode forwards in the fast test tier."""
+    from repro.configs.base import ModelConfig, StageSpec
+
+    return ModelConfig(
+        name="tiny-crossbar-lm",
+        family="dense",
+        n_layers=1,
+        d_model=32,
+        n_heads=2,
+        n_kv_heads=2,
+        d_ff=64,
+        vocab_size=64,
+        stages=(StageSpec(kinds=("attn",), repeats=1),),
+        tie_embeddings=False,
+        param_dtype="float32",
+        remat=False,
+    )
+
+
+def model_fault_recovery(
+    fault_rate: float = 1e-2,
+    spare_cols: int = REPAIR_SPARE_COLS,
+    seed: int = 0,
+    batch: int = 2,
+    seq: int = 8,
+) -> Dict[str, float]:
+    """End-to-end logit-MSE degradation under stuck-at faults, repair on/off.
+
+    Runs the tiny LM three times through the per-call crossbar path (ideal
+    device, faulty device, faulty device + spare-column repair) and reports
+    the fraction of logit-MSE degradation the repair recovers — the repo's
+    model-level acceptance metric for the fault-aware mapping subsystem.
+    """
+    import jax
+
+    from repro.models import model as M
+    from repro.models.layers import CrossbarMode, crossbar_mode
+
+    cfg = tiny_lm_config()
+    params, _ = M.init_model(jax.random.PRNGKey(seed), cfg, dtype=jnp.float32)
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(batch, seq)))
+
+    def logits(mode: CrossbarMode) -> np.ndarray:
+        with crossbar_mode(mode):
+            return np.asarray(M.forward(params, cfg, tokens), np.float32)
+
+    y_ideal = logits(CrossbarMode(enabled=True, fast=False))
+    dev = DeviceConfig(p_stuck_on=fault_rate / 2, p_stuck_off=fault_rate / 2, seed=seed)
+    y_fault = logits(CrossbarMode(enabled=True, fast=False, device=dev))
+    y_repair = logits(
+        CrossbarMode(enabled=True, fast=False, device=dev.replace(spare_cols=spare_cols))
+    )
+    mse_off = float(np.mean((y_fault - y_ideal) ** 2))
+    mse_on = float(np.mean((y_repair - y_ideal) ** 2))
+    return {
+        "fault_rate": fault_rate,
+        "spare_cols": spare_cols,
+        "logit_mse_norepair": mse_off,
+        "logit_mse_repair": mse_on,
+        "recovered_frac": (1.0 - mse_on / mse_off) if mse_off > 0 else 0.0,
     }
 
 
@@ -118,10 +224,14 @@ def noise_sweep_bench(seed: int = 0) -> Dict[str, float]:
         batch=4, k=128, n=32, sigmas=[0.0, 0.1], fault_rates=[0.0, 1e-2], seed=seed
     )
     by = {(r["adc"], r["sigma"]): r for r in out["variation_curve"]}
+    rep = {
+        (r["fault_rate"], r["repair"]): r for r in out["repair_curve"]
+    }
     return {
         "zero_noise_bit_exact": float(by[("full", 0.0)]["bit_exact_vs_ideal"]),
         "rmse_full_sigma0.1": by[("full", 0.1)]["rmse_ulp"],
         "rmse_adaptive_sigma0.1": by[("safe_adaptive", 0.1)]["rmse_ulp"],
+        "repair_recovered_frac_p0.01": rep[(1e-2, "on")]["recovered_frac"],
     }
 
 
@@ -135,8 +245,12 @@ def main() -> None:
     ap.add_argument("--k", type=int, default=256)
     ap.add_argument("--n", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--spare-cols", type=int, default=REPAIR_SPARE_COLS)
     args = ap.parse_args()
-    out = run_sweep(batch=args.batch, k=args.k, n=args.n, seed=args.seed)
+    out = run_sweep(
+        batch=args.batch, k=args.k, n=args.n, seed=args.seed,
+        spare_cols=args.spare_cols,
+    )
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {args.out} (seed={args.seed})")
@@ -150,6 +264,13 @@ def main() -> None:
         print(
             f"  fault={row['fault_rate']:<6} adc={row['adc']:<14} "
             f"rmse={row['rmse_ulp']:<10.3f} max={row['max_abs_ulp']:<6}"
+        )
+    for row in out["repair_curve"]:
+        rec = row.get("recovered_frac")
+        print(
+            f"  fault={row['fault_rate']:<6} repair={row['repair']:<3} "
+            f"spares={row['spare_cols']:<4} rmse={row['rmse_ulp']:<10.3f}"
+            + (f" recovered={rec:.3f}" if rec is not None else "")
         )
 
 

@@ -3,9 +3,14 @@
 #
 #   scripts/run_tests.sh            fast tier (default: slow marker excluded)
 #   scripts/run_tests.sh --all      everything, including @pytest.mark.slow
-#   scripts/run_tests.sh --bench    fast kernel-benchmark tier; fails on a
-#                                   >20% regression of the BENCH_kernels.json
-#                                   headline numbers, then refreshes the file
+#   scripts/run_tests.sh --bench    fast kernel-benchmark tier; runs the
+#                                   BENCH_kernels.json --check regression gate
+#                                   by default: fails on a >20% regression of
+#                                   any headline number (bit-exactness flags,
+#                                   conversion counts, repair recovery) or on
+#                                   a programmed/repaired steady-state speedup
+#                                   below the 5x acceptance floor, then
+#                                   refreshes the file
 #   scripts/run_tests.sh <args...>  extra args forwarded to pytest
 #
 # pytest exits 2 on collection errors, so a broken import fails the run.

@@ -441,6 +441,9 @@ def crossbar_vmm(
     ``device``: optional ``repro.device.models.DeviceConfig``; when set, the
     weight slab is programmed through the device non-ideality pipeline and
     the VMM runs against the perturbed cells (the ideal config is a no-op).
+    A config provisioning ``spare_cols`` additionally routes the slab
+    through the fault-aware spare-column repair planner (``device.repair``)
+    before the VMM — faulty columns serve from programmed spares.
     """
     batch_shape = x_codes.shape[:-1]
     K = x_codes.shape[-1]
@@ -472,8 +475,10 @@ def noisy_crossbar_vmm(
 
     Same contract as ``crossbar_vmm`` but the weights are already programmed:
     ``g_eff`` is the (S, K, N) float32 effective-cell-code array (biased
-    representation).  This is the functional oracle for the batched Pallas
-    kernel ``kernels.noisy_vmm``.
+    representation) — possibly a *repaired* layout with spare-column cells
+    already scattered into victim positions (``device.repair``; the datapath
+    is column-separable, so nothing downstream can tell).  This is the
+    functional oracle for the batched Pallas kernel ``kernels.noisy_vmm``.
     """
     batch_shape = x_codes.shape[:-1]
     K = x_codes.shape[-1]

@@ -14,6 +14,14 @@ Replication (both policies, ISAAC §"pipeline balancing"): early conv layers
 produce more pixels than later ones; layer ``l`` is replicated
 ``ceil(pixels_l / pixels_min)`` times so the inter-tile pipeline is balanced
 and throughput is set by the least-replicated layer.
+
+Fault-aware provisioning: both policies accept a per-crossbar spare-column
+budget (``spare_cols``, or derived from a stuck-cell ``fault_rate`` via
+``provision_spare_cols``).  Spare columns are allocated-but-unmappable
+cells — they shrink each crossbar's usable width, inflating ``crossbars``
+and deflating ``used_cells_frac`` / the Fig-10 underutilization accounting,
+which is exactly the provisioning cost the ``device.repair`` planner's
+repair capability is bought with.
 """
 from __future__ import annotations
 
@@ -22,9 +30,37 @@ import math
 from typing import Dict, List, Optional
 
 from repro.core.arch import ChipConfig, IMAConfig, TileConfig
+from repro.core.crossbar import CrossbarSpec
 from repro.core.workloads import Layer, Network
 
 BYTES_PER_VAL = 2  # 16-bit fixed point
+
+
+def provision_spare_cols(
+    fault_rate: float, spec: CrossbarSpec, coverage: float = 1.0
+) -> int:
+    """Spare columns per crossbar for a stuck-cell rate (provisioning rule).
+
+    A column is worth repairing when its most significant slice carries a
+    stuck cell (slice significance makes MSB-slice faults dominate output
+    error — see ``device.repair.column_salience``); the expected fraction of
+    such columns is ``1 - (1 - p)**rows``.  ``coverage`` scales the budget
+    (< 1 repairs only the worst offenders, > 1 over-provisions so the
+    planner can skip spares that are themselves faulty).  Capped at the
+    crossbar width.
+
+    Note the two subsystems model spare placement from opposite ends: this
+    mapper *carves* spares out of the fixed crossbar width (usable columns
+    shrink to ``cols - spare_cols`` — the provisioning-cost view), while
+    ``device.repair`` *appends* a spare block past each group's data
+    columns (the functional-layout view, which keeps repaired g_eff shapes
+    equal to unrepaired ones).  The cell counts agree; the group fan-out
+    differs for slabs wider than one crossbar (ROADMAP follow-on).
+    """
+    if fault_rate <= 0.0 or coverage <= 0.0:
+        return 0
+    frac = 1.0 - (1.0 - fault_rate) ** spec.rows
+    return min(spec.cols, math.ceil(spec.cols * frac * coverage))
 
 
 @dataclasses.dataclass
@@ -57,6 +93,8 @@ class MappingReport:
     mean_tile_buffer_bytes: float
     crossbar_underutilization: float  # weighted average (Fig 10)
     inter_tile_bytes_per_sample: float
+    spare_cols: int = 0  # repair columns provisioned per crossbar
+    spare_cells_frac: float = 0.0  # fraction of allocated cells held spare
 
     @property
     def total_tiles(self) -> int:
@@ -75,8 +113,23 @@ def map_network(
     policy: str = "newton",
     pixels_ref: Optional[int] = None,
     max_replication: int = 1 << 30,
+    spare_cols: int = 0,
+    fault_rate: Optional[float] = None,
 ) -> MappingReport:
+    """Map ``net`` onto ``chip`` under the given policy.
+
+    ``spare_cols`` reserves repair columns in every crossbar (usable width
+    shrinks by that much); alternatively pass a stuck-cell ``fault_rate``
+    and the budget is derived via ``provision_spare_cols``.  Spares inflate
+    ``crossbars`` and count as allocated-but-unused cells in
+    ``used_cells_frac`` — the Fig-10 accounting then shows the
+    fault-tolerance provisioning cost directly.
+    """
     ima = chip.conv_tile.ima
+    if fault_rate is not None and spare_cols == 0:
+        spare_cols = provision_spare_cols(fault_rate, ima.xbar_spec)
+    spare_cols = min(spare_cols, ima.xbar_spec.cols - 1)
+    data_cols = ima.xbar_spec.cols - spare_cols
     conv = net.conv_layers()
     fc = net.fc_layers()
 
@@ -89,9 +142,14 @@ def map_network(
     # the image period.
     fc_cfg_tile = chip.fc_tile or chip.conv_tile
     fc_repl = max(1, -(-int(fc_cfg_tile.adc_slowdown) // max(1, pixels_ref)))
+    # usable IMA output width: each of its crossbar column slots loses the
+    # spare columns (both policies allocate layer columns into data columns)
+    usable_out = max(1, (ima.out_cols // ima.xbar_spec.cols) * data_cols)
     mapped: List[LayerMapping] = []
     for layer in net.layers:
         rg, cg = _layer_grid(layer, ima, policy)
+        if spare_cols:
+            cg = -(-layer.cols // usable_out)
         if layer.kind == "conv":
             repl = min(max_replication, max(1, -(-layer.pixels // pixels_ref)))
         else:
@@ -102,10 +160,16 @@ def map_network(
         if policy == "isaac":
             # Unconstrained: partial row/col groups of different layers can
             # share an IMA; utilization ~ full but account fragmentation at
-            # crossbar granularity.
+            # crossbar granularity.  Spare columns shrink each crossbar's
+            # mappable width to ``data_cols``; allocated cells stay physical
+            # (spares are bought, just not mappable).
             used = layer.rows * layer.cols
-            alloc_xbars = math.ceil(used / (ima.rows * 128)) * ima.xbar_spec.n_slices
-            alloc_cells = alloc_xbars / ima.xbar_spec.n_slices * ima.rows * 128
+            alloc_xbars = (
+                math.ceil(used / (ima.rows * data_cols)) * ima.xbar_spec.n_slices
+            )
+            alloc_cells = (
+                alloc_xbars / ima.xbar_spec.n_slices * ima.rows * ima.xbar_spec.cols
+            )
             util = used / alloc_cells
             crossbars = alloc_xbars * repl
             tiles_span = max(1, math.ceil(imas / chip.conv_tile.imas))
@@ -113,9 +177,11 @@ def map_network(
             # Constrained: an IMA belongs to one layer, but the embedded
             # HTree shift-and-add lets multiple *row groups of the same
             # layer* occupy its column slots (partials reduced in-tree), so
-            # allocation granularity is a 128x128 crossbar-column slot.
+            # allocation granularity is a 128x128 crossbar-column slot —
+            # of which only ``data_cols`` columns are mappable when repair
+            # spares are provisioned.
             slots_per_ima = max(1, ima.out_cols // ima.xbar_spec.cols)
-            slots = rg * -(-layer.cols // ima.xbar_spec.cols) * repl
+            slots = rg * -(-layer.cols // data_cols) * repl
             imas = -(-slots // slots_per_ima)
             grid_imas = -(-slots // (repl * slots_per_ima))
             used = layer.rows * layer.cols
@@ -211,7 +277,25 @@ def map_network(
         mean_tile_buffer_bytes=mean_buf,
         crossbar_underutilization=under,
         inter_tile_bytes_per_sample=traffic,
+        spare_cols=spare_cols,
+        spare_cells_frac=spare_cols / ima.xbar_spec.cols,
     )
+
+
+def fault_provision_sweep(
+    nets: List[Network], chip: ChipConfig, fault_rates: List[float], policy: str = "newton"
+):
+    """Fig-10 accounting extended with repair provisioning: average crossbar
+    under-utilization vs stuck-cell fault rate (spares via
+    ``provision_spare_cols``)."""
+    out: Dict[str, float] = {}
+    for p in fault_rates:
+        vals = [
+            map_network(n, chip, policy=policy, fault_rate=p).crossbar_underutilization
+            for n in nets
+        ]
+        out[f"{p:g}"] = sum(vals) / len(vals)
+    return out
 
 
 def underutilization_sweep(nets: List[Network], ima_sizes: List[tuple], chip: ChipConfig):

@@ -11,6 +11,10 @@ Entry points:
   * ``programmed.program_layer`` / ``program_model`` — program-once
     compilation into frozen ``ProgrammedLinear`` artifacts; steady-state
     serving via ``programmed_matmul`` / ``programmed_linear``.
+  * ``repair.plan_repair`` / ``apply_repair`` — fault-aware spare-column
+    repair: rank columns by fault-weighted salience, remap the worst into a
+    ``DeviceConfig.spare_cols`` budget of programmed spares (zero
+    steady-state overhead; ``RepairReport`` records what moved).
 """
 from repro.device.models import (  # noqa: F401
     DeviceConfig,
@@ -21,8 +25,19 @@ from repro.device.models import (  # noqa: F401
     programmed_conductance,
     read_effective_codes,
     target_cell_codes,
+    wants_repair,
 )
 from repro.device.program import ProgramReport, write_verify  # noqa: F401
+from repro.device.repair import (  # noqa: F401
+    RepairPlan,
+    RepairReport,
+    apply_repair,
+    column_salience,
+    plan_repair,
+    repair_report,
+    repaired_effective_cells,
+    spare_budget,
+)
 from repro.device.programmed import (  # noqa: F401
     ProgrammedLinear,
     ProgrammedModel,

@@ -48,12 +48,19 @@ from repro.core.crossbar import CrossbarSpec
 # 384 * 256 = 98304 for the default spec, with ample headroom for variants.
 GEFF_FRAC_BITS = 8
 
-_STAGES = {"faults": 0, "program": 1}
+_STAGES = {"faults": 0, "program": 1, "spare_faults": 2, "spare_program": 3}
 
 
 @dataclasses.dataclass(frozen=True)
 class DeviceConfig:
-    """Programmed-conductance non-ideality knobs (all default to ideal)."""
+    """Programmed-conductance non-ideality knobs (all default to ideal).
+
+    ``spare_cols`` provisions redundant spare columns — per 128-column
+    crossbar column group — for the fault-aware repair planner
+    (``device.repair``): at programming time the worst fault-afflicted
+    columns of a weight slab are remapped into spares drawn from their own
+    seeded fault/variation fields.  Zero (the default) disables repair.
+    """
 
     sigma: float = 0.0  # lognormal programming variation of ln(G)
     p_stuck_on: float = 0.0  # fraction of cells pinned at g_on_s
@@ -66,6 +73,7 @@ class DeviceConfig:
     g_off_s: float = 3.16e-6
     write_verify_iters: int = 1  # programming pulses (1 = open-loop write)
     write_verify_tol: float = 0.25  # verify tolerance, cell-code units
+    spare_cols: int = 0  # spare columns per crossbar column group (repair)
     seed: int = 0
 
     def replace(self, **kw) -> "DeviceConfig":
@@ -134,11 +142,18 @@ def quantize_code_grid(codes: jnp.ndarray) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 def fault_masks(
-    cfg: DeviceConfig, shape: Tuple[int, ...], tag: Optional[jnp.ndarray] = None
+    cfg: DeviceConfig,
+    shape: Tuple[int, ...],
+    tag: Optional[jnp.ndarray] = None,
+    stage: str = "faults",
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Disjoint (stuck_on, stuck_off) bool maps — a pure function of
-    (cfg, shape) plus the optional per-slab ``tag`` (see ``_slab_tag``)."""
-    u = jax.random.uniform(_stage_key(cfg, "faults", tag), shape)
+    (cfg, shape, tag): repeated calls (eager or under ``jax.jit``) return the
+    identical draw.  ``tag`` decorrelates same-shape slabs (see
+    ``_slab_tag``); ``stage`` selects an independent fault field — the
+    repair planner draws its spare-column block from ``"spare_faults"`` so
+    provisioning spares never perturbs the primary columns' faults."""
+    u = jax.random.uniform(_stage_key(cfg, stage, tag), shape)
     stuck_off = u < cfg.p_stuck_off
     stuck_on = (u >= cfg.p_stuck_off) & (u < cfg.p_stuck_off + cfg.p_stuck_on)
     return stuck_on, stuck_off
@@ -167,7 +182,9 @@ def apply_drift(g: jnp.ndarray, cfg: DeviceConfig) -> jnp.ndarray:
     return g * factor
 
 
-def ir_drop_conductance(g: jnp.ndarray, spec: CrossbarSpec, cfg: DeviceConfig) -> jnp.ndarray:
+def ir_drop_conductance(
+    g: jnp.ndarray, spec: CrossbarSpec, cfg: DeviceConfig, col_offset: int = 0
+) -> jnp.ndarray:
     """First-order line-resistance attenuation (AG2048 model, closed form).
 
     A cell at (row ``i`` of its 128-row group, column ``j``) sees series wire
@@ -177,13 +194,16 @@ def ir_drop_conductance(g: jnp.ndarray, spec: CrossbarSpec, cfg: DeviceConfig) -
     far from driver and ADC attenuate most — the classic IR-drop corner.
 
     ``g``: (S, K, N) conductances; K is the contraction dim (wordlines, row
-    ``i = k mod rows`` within its group), N the bitlines.
+    ``i = k mod rows`` within its group), N the bitlines.  ``col_offset``
+    shifts the wordline position of column 0 — ``device.repair`` reads each
+    spare block at the position just past its own column group's data
+    columns, not at the near-driver corner.
     """
     if cfg.r_line_ohm == 0.0:
         return g
     S, K, N = g.shape
     i = (jnp.arange(K, dtype=jnp.int32) % spec.rows).astype(jnp.float32)
-    j = jnp.arange(N, dtype=jnp.float32)
+    j = jnp.arange(N, dtype=jnp.float32) + float(col_offset)
     r_series = ((j[None, :] + 1.0) + (spec.rows - i[:, None])) * cfg.r_line_ohm
     return g / (1.0 + g * r_series[None, :, :])
 
@@ -197,32 +217,47 @@ def target_cell_codes(w_codes_biased: jnp.ndarray, spec: CrossbarSpec) -> jnp.nd
     return fxp.cell_slices(w_codes_biased, spec.weight_bits, spec.cell_bits)
 
 
-def programmed_conductance(
-    w_codes_biased: jnp.ndarray, spec: CrossbarSpec, cfg: DeviceConfig
+def program_attempt(
+    target_g: jnp.ndarray,
+    masks: Tuple[jnp.ndarray, jnp.ndarray],
+    cfg: DeviceConfig,
+    key: jax.Array,
+    i: int,
 ) -> jnp.ndarray:
-    """Program a weight slab into cell conductances (trace-safe).
+    """Write pulse ``i`` of a verify sequence: one noisy open-loop write with
+    stuck cells pinned.  Per-pulse randomness is ``fold_in(key, i)`` — the
+    shared currency between ``programmed_conductance`` (trace-safe inference
+    path), ``program.write_verify`` (host-side reporting path) and the spare
+    block programmer in ``device.repair``, which must all land bit-identical
+    conductances for the same pulse index."""
+    return apply_faults(
+        program_variation(target_g, cfg, jax.random.fold_in(key, i)), masks, cfg
+    )
+
+
+def write_verify_fixed(
+    target: jnp.ndarray,
+    masks: Tuple[jnp.ndarray, jnp.ndarray],
+    key: jax.Array,
+    spec: CrossbarSpec,
+    cfg: DeviceConfig,
+) -> jnp.ndarray:
+    """Fixed-iteration (trace-safe) write-verify of target cell codes.
 
     With ``write_verify_iters <= 1`` this is an open-loop write (one noisy
-    pulse); otherwise a fixed-iteration write-verify loop re-pulses cells
-    whose read-back code is more than ``write_verify_tol`` from target.
-    Stuck cells ignore every pulse.  ``program.write_verify`` wraps this with
-    host-side convergence reporting.
+    pulse); otherwise cells whose read-back code is more than
+    ``write_verify_tol`` from target are re-pulsed.  Stuck cells ignore
+    every pulse.
     """
-    target = target_cell_codes(w_codes_biased, spec)
     target_g = conductance_of_codes(target, spec, cfg)
-    tag = _slab_tag(w_codes_biased)
-    masks = fault_masks(cfg, target.shape, tag)
-    key = _stage_key(cfg, "program", tag)
     iters = max(1, cfg.write_verify_iters)
-    g = apply_faults(program_variation(target_g, cfg, jax.random.fold_in(key, 0)), masks, cfg)
+    g = program_attempt(target_g, masks, cfg, key, 0)
     if iters > 1:
         done = (
             jnp.abs(codes_of_conductance(g, spec, cfg) - target) <= cfg.write_verify_tol
         )
         for i in range(1, iters):
-            attempt = apply_faults(
-                program_variation(target_g, cfg, jax.random.fold_in(key, i)), masks, cfg
-            )
+            attempt = program_attempt(target_g, masks, cfg, key, i)
             g = jnp.where(done, g, attempt)
             done = (
                 jnp.abs(codes_of_conductance(g, spec, cfg) - target) <= cfg.write_verify_tol
@@ -230,32 +265,91 @@ def programmed_conductance(
     return g
 
 
+def programmed_conductance(
+    w_codes_biased: jnp.ndarray, spec: CrossbarSpec, cfg: DeviceConfig
+) -> jnp.ndarray:
+    """Program a weight slab into cell conductances (trace-safe).
+
+    Draws the slab's fault map and pulse keys, then runs the fixed-iteration
+    ``write_verify_fixed`` loop.  ``program.write_verify`` wraps the same
+    keys with host-side convergence reporting.
+    """
+    target = target_cell_codes(w_codes_biased, spec)
+    tag = _slab_tag(w_codes_biased)
+    masks = fault_masks(cfg, target.shape, tag)
+    key = _stage_key(cfg, "program", tag)
+    return write_verify_fixed(target, masks, key, spec, cfg)
+
+
 def read_effective_codes(
-    g: jnp.ndarray, spec: CrossbarSpec, cfg: DeviceConfig
+    g: jnp.ndarray, spec: CrossbarSpec, cfg: DeviceConfig, col_offset: int = 0
 ) -> jnp.ndarray:
     """Read-time view of programmed conductances, in grid-quantized code units.
 
     Applies drift and IR drop, converts back through the level map, clips to
     the physical rails [0, 2**cell_bits - 1] and snaps to the verification
-    grid.  (S, K, N) in, (S, K, N) float32 out.
+    grid.  (S, K, N) in, (S, K, N) float32 out.  ``col_offset`` positions
+    the block on the wordline for IR drop (see ``ir_drop_conductance``).
     """
     g = apply_drift(g, cfg)
-    g = ir_drop_conductance(g, spec, cfg)
+    g = ir_drop_conductance(g, spec, cfg, col_offset=col_offset)
     codes = codes_of_conductance(g, spec, cfg)
     codes = jnp.clip(codes, 0.0, float((1 << spec.cell_bits) - 1))
     return quantize_code_grid(codes)
 
 
+def wants_repair(cfg: DeviceConfig) -> bool:
+    """Spare-column repair is active: a budget is provisioned and stuck-at
+    faults exist to repair (variation/drift are not column-clustered, so
+    repair without faults would be pure provisioning waste)."""
+    return cfg.spare_cols > 0 and (cfg.p_stuck_on > 0.0 or cfg.p_stuck_off > 0.0)
+
+
 def effective_cell_codes(
-    w_codes_biased: jnp.ndarray, spec: CrossbarSpec, cfg: DeviceConfig
+    w_codes_biased: jnp.ndarray,
+    spec: CrossbarSpec,
+    cfg: DeviceConfig,
+    repair: bool = True,
 ) -> jnp.ndarray:
     """Full program+read pipeline: (K, N) biased codes -> (S, K, N) effective.
 
     The one call sites need: what the analog datapath actually multiplies
     against, given this device config.  Deterministic in (cfg, shape); the
     ideal config returns the exact integer slices.
+
+    When the config provisions spare columns (``cfg.spare_cols > 0``) and
+    stuck-at faults are enabled, the returned layout is the *repaired* one:
+    ``device.repair`` remaps the worst fault-afflicted columns into
+    programmed spares and scatters the spare cells back into the victim
+    positions, so every downstream consumer (functional model, Pallas
+    kernels, programmed artifacts) reads the repaired chip with zero
+    steady-state overhead.  ``repair=False`` returns the primary columns
+    only (``device.programmed`` uses this to record the spare block and
+    gather map explicitly).
     """
     if cfg.is_ideal:
         return target_cell_codes(w_codes_biased, spec).astype(jnp.float32)
-    g = programmed_conductance(w_codes_biased, spec, cfg)
-    return read_effective_codes(g, spec, cfg)
+    g_eff, target, tag, masks = _programmed_effective(w_codes_biased, spec, cfg)
+    if repair and wants_repair(cfg):
+        from repro.device import repair as repair_mod  # deferred: repair imports models
+
+        plan = repair_mod.plan_repair(
+            w_codes_biased, spec, cfg, target=target, tag=tag, primary_masks=masks
+        )
+        g_eff = repair_mod.apply_repair(g_eff, plan)
+    return g_eff
+
+
+def _programmed_effective(
+    w_codes_biased: jnp.ndarray, spec: CrossbarSpec, cfg: DeviceConfig
+):
+    """Programming pipeline with its intermediates exposed: (g_eff, target,
+    tag, masks).  The repair planner needs the same target slices, slab tag
+    and primary fault draw — handing them over avoids paying the cell-slice
+    expansion / content hash / fault draw twice per slab."""
+    target = target_cell_codes(w_codes_biased, spec)
+    tag = _slab_tag(w_codes_biased)
+    masks = fault_masks(cfg, target.shape, tag)
+    key = _stage_key(cfg, "program", tag)
+    g = write_verify_fixed(target, masks, key, spec, cfg)
+    return read_effective_codes(g, spec, cfg), target, tag, masks

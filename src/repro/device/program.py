@@ -5,16 +5,17 @@ programmer pulses a cell, reads it back, and re-pulses until the read-back
 code is within tolerance of the target (or a pulse budget is exhausted —
 stuck cells never converge).  ``models.programmed_conductance`` implements
 the trace-safe fixed-iteration loop used inside jitted inference; this
-module wraps the same per-pulse keys with host-side diagnostics so
-calibration quality is observable: per-iteration error, converged fraction,
-and the residual programming error the inference path will see.
+module wraps the same per-pulse keys (``models.program_attempt``) with
+host-side diagnostics so calibration quality is observable: per-iteration
+error, converged fraction, and the residual programming error the inference
+path will see.  The spare-column block of ``device.repair`` is programmed
+through the identical pulse pipeline under its own stage keys.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -44,6 +45,10 @@ def write_verify(
     w_codes_biased: jnp.ndarray,
     spec: CrossbarSpec = DEFAULT_SPEC,
     cfg: dm.DeviceConfig = dm.IDEAL_DEVICE,
+    *,
+    target=None,
+    tag=None,
+    masks=None,
 ) -> Tuple[jnp.ndarray, ProgramReport]:
     """Program ``(K, N)`` biased weight codes; return conductances + report.
 
@@ -52,26 +57,30 @@ def write_verify(
     array is bit-identical to what the jitted inference path programs — the
     report is pure added observability.  Early-stops once every non-stuck
     cell verifies, which is why this variant is host-only.
+
+    ``target`` / ``tag`` / ``masks`` accept the standard pipeline's
+    intermediates when the caller (``programmed.program_layer``) already
+    derived them for the repair planner; they MUST match what this function
+    would compute itself.
     """
-    target = dm.target_cell_codes(w_codes_biased, spec)
+    if target is None:
+        target = dm.target_cell_codes(w_codes_biased, spec)
     target_g = dm.conductance_of_codes(target, spec, cfg)
-    tag = dm._slab_tag(w_codes_biased)
-    masks = dm.fault_masks(cfg, target.shape, tag)
+    if tag is None:
+        tag = dm._slab_tag(w_codes_biased)
+    if masks is None:
+        masks = dm.fault_masks(cfg, target.shape, tag)
     stuck = masks[0] | masks[1]
     key = dm._stage_key(cfg, "program", tag)
     iters = max(1, cfg.write_verify_iters)
 
-    g = dm.apply_faults(
-        dm.program_variation(target_g, cfg, jax.random.fold_in(key, 0)), masks, cfg
-    )
+    g = dm.program_attempt(target_g, masks, cfg, key, 0)
     per_iter = []
     done = None
     used = iters
     for i in range(iters):
         if i > 0:
-            attempt = dm.apply_faults(
-                dm.program_variation(target_g, cfg, jax.random.fold_in(key, i)), masks, cfg
-            )
+            attempt = dm.program_attempt(target_g, masks, cfg, key, i)
             g = jnp.where(done, g, attempt)
         err = jnp.abs(dm.codes_of_conductance(g, spec, cfg) - target)
         done = err <= cfg.write_verify_tol

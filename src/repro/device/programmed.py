@@ -71,6 +71,15 @@ class ProgrammedLinear:
       * ``x_scale``: 0-d float32 or None — frozen input scale; None keeps
         input quantization dynamic (per-call ``max(x)``), exactly matching
         the unprogrammed path.
+      * ``g_spare``: (S, K, B) float32 programmed spare-column cells, or
+        None when the device provisions no repair (``device.repair``).
+        ``g_eff`` already holds the *repaired* layout (spares scattered into
+        victim positions at programming time — zero steady-state overhead);
+        the spare block plus ``out_gather`` are the explicit hardware
+        record: the redundant columns as programmed and the column-mux
+        routing table.
+      * ``out_gather``: (N,) int32 or None — physical column serving each
+        logical output (j, or N + b for repaired columns).
 
     A *stacked* artifact (from a ``(L, K, N)`` scan-stacked parameter leaf)
     carries a leading layer axis on every array; ``jax.lax.scan`` /
@@ -80,8 +89,8 @@ class ProgrammedLinear:
     Static aux (hashable; part of the jit cache key): ``spec`` — the
     layer-scaled ``CrossbarSpec`` (``drop_lsb`` already chosen for this K);
     ``adc_cfg`` / ``fast`` — which kernel path serves this artifact;
-    ``report`` — optional write-verify ``ProgramReport`` (a tuple of them
-    for stacked artifacts).
+    ``report`` — optional write-verify ``ProgramReport``; ``repair`` —
+    optional ``repair.RepairReport`` (tuples of them for stacked artifacts).
     """
 
     w_codes: jnp.ndarray
@@ -93,6 +102,9 @@ class ProgrammedLinear:
     adc_cfg: Optional[ADCConfig] = None
     fast: bool = True
     report: Optional[Any] = None
+    g_spare: Optional[jnp.ndarray] = None
+    out_gather: Optional[jnp.ndarray] = None
+    repair: Optional[Any] = None
 
     @property
     def noisy(self) -> bool:
@@ -124,13 +136,21 @@ class ProgrammedLinear:
         return jax.tree.map(lambda a: a[i], self)
 
     def tree_flatten(self):
-        children = (self.w_codes, self.g_eff, self.w_colsum, self.w_scale, self.x_scale)
-        aux = (self.spec, self.adc_cfg, self.fast, self.report)
+        children = (
+            self.w_codes, self.g_eff, self.w_colsum, self.w_scale, self.x_scale,
+            self.g_spare, self.out_gather,
+        )
+        aux = (self.spec, self.adc_cfg, self.fast, self.report, self.repair)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        w_codes, g_eff, w_colsum, w_scale, x_scale, g_spare, out_gather = children
+        spec, adc_cfg, fast, report, repair = aux
+        return cls(
+            w_codes, g_eff, w_colsum, w_scale, x_scale, spec, adc_cfg, fast,
+            report, g_spare=g_spare, out_gather=out_gather, repair=repair,
+        )
 
 
 def program_layer(
@@ -168,12 +188,15 @@ def program_layer(
             for i in range(w.shape[0])
         ]
         reports = tuple(p.report for p in parts)
+        repairs = tuple(p.repair for p in parts)
         # per-layer reports differ, which would make the tree structures
-        # unequal — strip them before stacking, reattach as a tuple
-        parts = [dataclasses.replace(p, report=None) for p in parts]
+        # unequal — strip them before stacking, reattach as tuples
+        parts = [dataclasses.replace(p, report=None, repair=None) for p in parts]
         out = jax.tree.map(lambda *xs: jnp.stack(xs), *parts)
         return dataclasses.replace(
-            out, report=(reports if any(r is not None for r in reports) else None)
+            out,
+            report=(reports if any(r is not None for r in reports) else None),
+            repair=(repairs if any(r is not None for r in repairs) else None),
         )
     spec = layer_scaled_spec(spec, w.shape[0])
     if w_scale is None:
@@ -187,19 +210,41 @@ def program_layer(
     wq = quantize_weight(w, spec, w_scale_a)
     w_colsum = jnp.sum(w, axis=0)
     g_eff = None
+    g_spare = None
+    out_gather = None
     report = None
+    repair_rep = None
     if device is not None and not device.is_ideal:
         wb = wq + spec.weight_bias
+        # fault-aware spare-column repair (device.repair): remap the worst
+        # fault-afflicted columns into programmed spares and bake the
+        # repaired layout into g_eff — steady-state calls pay nothing
+        from repro.device import repair as repair_mod
+
         if with_report:
-            g, report = write_verify(wb, spec, device)
+            target = dm.target_cell_codes(wb, spec)
+            tag = dm._slab_tag(wb)
+            masks = dm.fault_masks(device, target.shape, tag)
+            g, report = write_verify(
+                wb, spec, device, target=target, tag=tag, masks=masks
+            )
             g_eff = dm.read_effective_codes(g, spec, device)
+            plan = repair_mod.plan_repair(
+                wb, spec, device, target=target, tag=tag, primary_masks=masks
+            )
+            g_eff = repair_mod.apply_repair(g_eff, plan)
         else:
-            g_eff = dm.effective_cell_codes(wb, spec, device)
+            g_eff, plan = repair_mod.repaired_effective_cells(wb, spec, device)
+        if plan is not None:
+            g_spare = plan.g_spare
+            out_gather = plan.out_gather
+            repair_rep = repair_mod.repair_report(plan)
     return ProgrammedLinear(
         w_codes=wq, g_eff=g_eff, w_colsum=w_colsum,
         w_scale=w_scale_a,
         x_scale=(jnp.asarray(x_scale, jnp.float32) if x_scale is not None else None),
-        spec=spec, adc_cfg=adc_cfg, fast=fast, report=report,
+        g_spare=g_spare, out_gather=out_gather,
+        spec=spec, adc_cfg=adc_cfg, fast=fast, report=report, repair=repair_rep,
     )
 
 
@@ -338,11 +383,13 @@ def active_artifact_for(w: jnp.ndarray) -> Optional[ProgrammedLinear]:
     return None
 
 
-# The projection leaves models.attention routes through crossbar_linear —
-# the only call sites that can consume an artifact today.  (ffn wi/wo and
-# the LM head use plain XLA matmuls; widen this set when they are routed
-# through the crossbar, see ROADMAP.)
-_CROSSBAR_CONSUMERS = ("wq", "wk", "wv", "wo", "w_kv_down")
+# The projection leaves routed through models.layers.crossbar_linear — the
+# call sites that can consume an artifact: attention q/k/v/o and the MLA kv
+# down-projection, the dense-MLP wi/wo, and the untied LM head.  (MoE expert
+# stacks are (L, E, dm, ff) after layer stacking — 4-D, rejected by the
+# ndim guard below — and a tied LM head multiplies a per-call transpose of
+# the embedding table, which has no stable leaf identity to bind.)
+_CROSSBAR_CONSUMERS = ("wq", "wk", "wv", "wo", "w_kv_down", "wi", "head")
 
 
 def _path_names(path: Tuple[Any, ...]) -> Tuple[str, ...]:
@@ -353,21 +400,21 @@ def _matmul_leaf(path: Tuple[Any, ...], leaf: Any) -> bool:
     """Default predicate: which param leaves go onto crossbars.
 
     Allowlist of the projection names ``crossbar_linear`` actually serves
-    (attention q/k/v/o and the MLA kv down-projection), as 2-D matrices or
-    3-D scan-stacked ``(L, K, N)``.  An allowlist — rather than excluding
-    known non-matmuls — keeps stacked per-layer *vectors* (ssm ``conv_b``,
-    ``D_skip``: ``(L, din)`` after stacking, indistinguishable from a small
-    weight matrix by shape alone) from being miscompiled into unusable
-    artifacts, and avoids paying write-verify programming + 8x ``g_eff``
-    memory for leaves no crossbar call site consumes.  Override with
-    ``leaf_filter`` for exotic layouts.
+    (attention q/k/v/o, the MLA kv down-projection, dense-MLP wi/wo, the
+    untied LM head), as 2-D matrices or 3-D scan-stacked ``(L, K, N)``.  An
+    allowlist — rather than excluding known non-matmuls — keeps stacked
+    per-layer *vectors* (ssm ``conv_b``, ``D_skip``: ``(L, din)`` after
+    stacking, indistinguishable from a small weight matrix by shape alone)
+    from being miscompiled into unusable artifacts, and avoids paying
+    write-verify programming + 8x ``g_eff`` memory for leaves no crossbar
+    call site consumes.  Override with ``leaf_filter`` for exotic layouts.
     """
     if not isinstance(leaf, jnp.ndarray) or leaf.ndim not in (2, 3):
         return False
     if not jnp.issubdtype(leaf.dtype, jnp.floating):
         return False
     names = _path_names(path)
-    return bool(names) and names[-1] in _CROSSBAR_CONSUMERS and "ffn" not in names
+    return bool(names) and names[-1] in _CROSSBAR_CONSUMERS
 
 
 def stacked_only(artifacts: Any) -> Any:
@@ -442,6 +489,18 @@ class ProgrammedModel:
         for path, art in flat:
             if isinstance(art, ProgrammedLinear) and art.report is not None:
                 out[jax.tree_util.keystr(path)] = art.report
+        return out
+
+    def repair_reports(self) -> Dict[str, Any]:
+        """Path -> spare-column ``RepairReport`` (or per-layer tuple for
+        stacked leaves) for every compiled leaf that was repaired."""
+        out: Dict[str, Any] = {}
+        flat, _ = jax.tree_util.tree_flatten_with_path(
+            self.artifacts, is_leaf=lambda x: isinstance(x, ProgrammedLinear)
+        )
+        for path, art in flat:
+            if isinstance(art, ProgrammedLinear) and art.repair is not None:
+                out[jax.tree_util.keystr(path)] = art.repair
         return out
 
 

@@ -1,0 +1,332 @@
+"""Fault-aware spare-column repair of programmed crossbar slabs.
+
+Newton's mapping (§III.B) provisions tiles as if every memristor cell works;
+real arrays ship with stuck-at cells, and Xiao et al. ("On the Accuracy of
+Analog Neural Network Inference Accelerators") show those hard faults — not
+programming variation — dominate accuracy loss at realistic rates.  Because
+the datapath is column-separable (one bitline = one output), the classic
+memory-repair remedy applies: provision a budget of **redundant spare
+columns** per crossbar and, at programming time, remap the worst
+fault-afflicted columns into them, rerouting the column outputs through a
+gather table.
+
+The pipeline here:
+
+* ``column_salience`` — rank columns by fault-weighted salience: the total
+  |installed - target| cell-code error a column's stuck cells would cause,
+  weighted by bit-slice significance ``2**(s * cell_bits)`` (a stuck MSB
+  slice cell is 16384x a stuck LSB one for the default 16b/2b layout).
+* ``plan_repair`` — greedy budget assignment: repeatedly move the
+  (victim column, spare) pair with the largest salience *gain*.  Spares
+  draw their own seeded stuck-at field (stage ``"spare_faults"``), so a
+  faulty spare is never blindly trusted — a victim moves only where it
+  strictly improves.  Trace-safe: the loop has a static trip count (the
+  budget) and all choices are jnp argmax/where.
+* spare programming — the chosen victims' target codes are written into the
+  spare block through the same write-verify pulse pipeline as primary cells
+  (stage ``"spare_program"`` keys), then read back through drift/IR-drop.
+* ``apply_repair`` — scatter the programmed spare cells into the victim
+  positions.  The datapath is column-separable, so pre-gathering the
+  repaired layout at programming time is bit-identical to gathering kernel
+  outputs at read time — and costs nothing per call: all three Pallas
+  kernels consume the repaired ``(S, K, N)`` layout unchanged.
+
+Primary columns are programmed exactly as without repair (their fault and
+variation draws never see the spare block), so repair on/off comparisons are
+apples-to-apples and a zero-fault config with a nonzero budget stays
+bit-identical to the unrepaired path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.crossbar import CrossbarSpec
+from repro.device import models as dm
+
+
+def spare_budget(n_cols: int, spec: CrossbarSpec, cfg: dm.DeviceConfig) -> int:
+    """Spare columns available to one (K, N) weight slab.
+
+    ``cfg.spare_cols`` is provisioned per physical crossbar column group; a
+    slab spanning ``ceil(N / spec.cols)`` column groups owns that many
+    budgets, and each budget is group-local — a spare's output mux can only
+    stand in for columns of its own group (``plan_repair``).  (Each row
+    group reuses the same spare columns — a spare is a full-height column of
+    every bit-slice crossbar in the group.)
+    """
+    return int(cfg.spare_cols) * max(1, -(-n_cols // spec.cols))
+
+
+def _slice_weights(spec: CrossbarSpec) -> jnp.ndarray:
+    """(S,) bit-slice significance: slice s carries 2**(s * cell_bits)."""
+    return (2.0 ** (spec.cell_bits * jnp.arange(spec.n_slices))).astype(jnp.float32)
+
+
+def column_salience(
+    target: jnp.ndarray,
+    masks: Tuple[jnp.ndarray, jnp.ndarray],
+    spec: CrossbarSpec,
+) -> jnp.ndarray:
+    """Fault-weighted salience of each column of a target-code slab.
+
+    ``target``: (S, K, N) ideal cell codes; ``masks``: (stuck_on, stuck_off)
+    bool maps of the same shape.  Returns (N,) float32: the significance-
+    weighted total |stuck value - target| each column's hard faults inflict.
+    A stuck-on cell installs the top code ``cell_max``; stuck-off installs 0.
+    """
+    stuck_on, stuck_off = masks
+    cell_max = float((1 << spec.cell_bits) - 1)
+    w = _slice_weights(spec)[:, None, None]
+    err = jnp.where(stuck_on, (cell_max - target) * w, 0.0)
+    err = err + jnp.where(stuck_off, target * w, 0.0)
+    return jnp.sum(err, axis=(0, 1)).astype(jnp.float32)
+
+
+def _salience_in_spares(
+    target: jnp.ndarray,
+    spare_masks: Tuple[jnp.ndarray, jnp.ndarray],
+    spec: CrossbarSpec,
+) -> jnp.ndarray:
+    """(B, N) salience of placing column n's targets into spare b."""
+    stuck_on, stuck_off = spare_masks
+    cell_max = float((1 << spec.cell_bits) - 1)
+    w = _slice_weights(spec)[:, None, None]
+    on = stuck_on.astype(jnp.float32)  # (S, K, B)
+    off = stuck_off.astype(jnp.float32)
+    t = target.astype(jnp.float32)  # (S, K, N)
+    return jnp.einsum("skb,skn->bn", on, (cell_max - t) * w) + jnp.einsum(
+        "skb,skn->bn", off, t * w
+    )
+
+
+@dataclasses.dataclass
+class RepairPlan:
+    """Trace-safe record of one slab's spare-column repair.
+
+    ``victim``: (B,) int32 — logical column programmed into each spare, -1
+    for unused spares.  ``out_gather``: (N,) int32 — physical column serving
+    each logical output (j itself, or N + b for repaired columns); the
+    hardware routing table a real chip would burn into its column mux.
+    ``g_spare``: (S, K, B) float32 effective cell codes of the programmed
+    spare block; unused spares are programmed toward target 0 but still
+    read back their own faults/variation, so detect them via
+    ``victim == -1``, not zero cells.  Saliences are pre/post-repair (N,)
+    vectors of ``column_salience`` units.
+    """
+
+    victim: jnp.ndarray
+    out_gather: jnp.ndarray
+    g_spare: jnp.ndarray
+    salience_before: jnp.ndarray
+    salience_after: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class RepairReport:
+    """Host-side summary of a ``RepairPlan`` (hashable: rides pytree aux)."""
+
+    budget: int
+    n_repaired: int
+    repaired_cols: Tuple[int, ...]  # logical columns, in spare order
+    salience_before: float
+    salience_after: float
+
+    @property
+    def recovered_frac(self) -> float:
+        """Fraction of planner-model salience removed by the repair."""
+        if self.salience_before <= 0.0:
+            return 0.0
+        return 1.0 - self.salience_after / self.salience_before
+
+
+def _greedy_assign(sal0: jnp.ndarray, err_sp: jnp.ndarray):
+    """Greedy (victim, spare) assignment within one column group.
+
+    Each of the ``B`` steps moves the pair with the largest remaining
+    salience gain, if any strict improvement exists.  A repaired column is
+    never displaced to a second spare: re-stealing column j from spare b1
+    by b2 would need ``err_sp[b2, j] < err_sp[b1, j]``, but b2 was already
+    available when (b1, j) won the argmax (the available set only shrinks),
+    so ``err_sp[b1, j] <= err_sp[b2, j]`` — every spare therefore serves at
+    most one column and no victim slot is ever orphaned.  Returns local
+    (salience_after (n,), victim (B,), gather (n,)) with gather entries
+    ``>= n`` meaning "spare gather - n".
+    """
+    B, n = err_sp.shape
+
+    def _step(_, carry):
+        sal, victim, gather, avail = carry
+        gain = jnp.where(avail[:, None], sal[None, :] - err_sp, -jnp.inf)
+        flat = jnp.argmax(gain)
+        b, j = flat // n, flat % n
+        do = gain.reshape(-1)[flat] > 0.0
+        victim = victim.at[b].set(jnp.where(do, j.astype(jnp.int32), victim[b]))
+        gather = jnp.where(do, gather.at[j].set(n + b.astype(jnp.int32)), gather)
+        sal = sal.at[j].set(jnp.where(do, err_sp[b, j], sal[j]))
+        avail = avail.at[b].set(jnp.where(do, False, avail[b]))
+        return sal, victim, gather, avail
+
+    sal, victim, gather, _ = jax.lax.fori_loop(
+        0,
+        B,
+        _step,
+        (
+            sal0,
+            jnp.full((B,), -1, jnp.int32),
+            jnp.arange(n, dtype=jnp.int32),
+            jnp.ones((B,), bool),
+        ),
+    )
+    return sal, victim, gather
+
+
+def plan_repair(
+    w_codes_biased: jnp.ndarray,
+    spec: CrossbarSpec,
+    cfg: dm.DeviceConfig,
+    *,
+    target: Optional[jnp.ndarray] = None,
+    tag: Optional[jnp.ndarray] = None,
+    primary_masks: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+) -> Optional[RepairPlan]:
+    """Plan and program one slab's spare-column repair (trace-safe).
+
+    Planning is *per column group*: a spare column physically lives in one
+    128-column crossbar group and its output mux can only stand in for
+    columns of that group, so each group's ``cfg.spare_cols`` spares are
+    assigned greedily among its own <= ``spec.cols`` columns.  (This also
+    bounds the planner: every gain matrix is at most ``spare_cols x cols``,
+    so wide slabs — e.g. a vocab-sized LM head — cost one small greedy pass
+    per group instead of one quadratic pass over all columns.)  Spares carry
+    their own seeded stuck-at faults, write-verify pulse noise, drift and IR
+    drop, so the plan never pretends a spare is perfect.  Returns None when
+    the config provisions no repair.
+
+    ``target`` / ``tag`` / ``primary_masks`` let a caller that has already
+    run the programming pipeline for this slab (``effective_cell_codes``)
+    hand its intermediates over instead of paying the cell-slice expansion,
+    content-hash and fault draw a second time; when provided they MUST be
+    the values the standard pipeline derives from ``w_codes_biased``.
+    """
+    if not dm.wants_repair(cfg):
+        return None
+    if target is None:
+        target = dm.target_cell_codes(w_codes_biased, spec)
+    target = target.astype(jnp.float32)
+    S, K, N = target.shape
+    B_per = int(cfg.spare_cols)
+    B = spare_budget(N, spec, cfg)
+    n_groups = B // B_per
+    if tag is None:
+        tag = dm._slab_tag(w_codes_biased)
+    if primary_masks is None:
+        primary_masks = dm.fault_masks(cfg, (S, K, N), tag)
+    spare_masks = dm.fault_masks(cfg, (S, K, B), tag, stage="spare_faults")
+
+    sal0 = column_salience(target, primary_masks, spec)  # (N,)
+    sal = sal0
+    victim = jnp.full((B,), -1, jnp.int32)
+    gather = jnp.arange(N, dtype=jnp.int32)
+    for g in range(n_groups):
+        n0, n1 = g * spec.cols, min((g + 1) * spec.cols, N)
+        b0 = g * B_per
+        err_sp = _salience_in_spares(
+            target[:, :, n0:n1],
+            (
+                spare_masks[0][:, :, b0 : b0 + B_per],
+                spare_masks[1][:, :, b0 : b0 + B_per],
+            ),
+            spec,
+        )  # (B_per, n1 - n0)
+        sal_g, victim_g, gather_g = _greedy_assign(sal0[n0:n1], err_sp)
+        n_g = n1 - n0
+        victim = victim.at[b0 : b0 + B_per].set(
+            jnp.where(victim_g >= 0, victim_g + n0, -1)
+        )
+        gather = gather.at[n0:n1].set(
+            jnp.where(gather_g >= n_g, gather_g - n_g + N + b0, gather_g + n0)
+        )
+        sal = sal.at[n0:n1].set(sal_g)
+
+    # Program the chosen targets into the spare block through the standard
+    # write-verify pipeline (independent "spare_program" pulse keys), then
+    # read back through drift/IR drop at each group's true wordline
+    # position: a spare physically sits right past its own group's data
+    # columns (group-local mux), never at the near-driver corner — so
+    # repair is not optimistically biased under r_line_ohm.
+    used = victim >= 0
+    spare_target = jnp.where(
+        used[None, None, :], target[:, :, jnp.clip(victim, 0, N - 1)], 0.0
+    )
+    key = dm._stage_key(cfg, "spare_program", tag)
+    g = dm.write_verify_fixed(spare_target, spare_masks, key, spec, cfg)
+    parts = []
+    for gi in range(n_groups):
+        b0 = gi * B_per
+        n_end = min((gi + 1) * spec.cols, N)
+        parts.append(
+            dm.read_effective_codes(
+                g[:, :, b0 : b0 + B_per], spec, cfg, col_offset=n_end
+            )
+        )
+    g_spare = jnp.concatenate(parts, axis=2) if n_groups > 1 else parts[0]
+
+    return RepairPlan(
+        victim=victim,
+        out_gather=gather,
+        g_spare=g_spare,
+        salience_before=sal0,
+        salience_after=sal,
+    )
+
+
+def apply_repair(g_eff_primary: jnp.ndarray, plan: Optional[RepairPlan]) -> jnp.ndarray:
+    """Scatter programmed spare cells into victim positions: the repaired
+    (S, K, N) layout every kernel consumes with zero steady-state overhead.
+
+    Column-separability makes this exactly equivalent to running the
+    physical (S, K, N + B) layout and gathering kernel outputs through
+    ``plan.out_gather`` — see tests/test_repair.py, which pins the
+    equivalence down bit-for-bit.
+    """
+    if plan is None:
+        return g_eff_primary
+    g_full = jnp.concatenate([g_eff_primary, plan.g_spare], axis=2)
+    return jnp.take(g_full, plan.out_gather, axis=2)
+
+
+def repaired_effective_cells(
+    w_codes_biased: jnp.ndarray, spec: CrossbarSpec, cfg: dm.DeviceConfig
+) -> Tuple[jnp.ndarray, Optional[RepairPlan]]:
+    """Program + repair in one pass: (repaired g_eff, plan).
+
+    Equivalent to ``effective_cell_codes(wb, spec, cfg)`` but also returns
+    the plan (spare block, gather table, saliences) for callers — notably
+    ``programmed.program_layer`` — that record the repair; the programming
+    intermediates are shared with the planner, never recomputed.
+    """
+    g_eff, target, tag, masks = dm._programmed_effective(w_codes_biased, spec, cfg)
+    plan = plan_repair(
+        w_codes_biased, spec, cfg, target=target, tag=tag, primary_masks=masks
+    )
+    return apply_repair(g_eff, plan), plan
+
+
+def repair_report(plan: Optional[RepairPlan]) -> Optional[RepairReport]:
+    """Materialize the host-side summary (programming time only, not under
+    trace — the plan's arrays are concretized)."""
+    if plan is None:
+        return None
+    victim = np.asarray(plan.victim)
+    return RepairReport(
+        budget=int(victim.shape[0]),
+        n_repaired=int((victim >= 0).sum()),
+        repaired_cols=tuple(int(v) for v in victim if v >= 0),
+        salience_before=float(np.asarray(plan.salience_before).sum()),
+        salience_after=float(np.asarray(plan.salience_after).sum()),
+    )

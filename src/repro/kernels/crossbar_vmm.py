@@ -25,6 +25,11 @@ Grid is (M/bm, N/bn, K/bk) with bk = rows = 128 (the ADC row-group); the
 k axis is the innermost reduction ("arbitrary" semantics).  Both kernels are
 validated in interpret mode against ``ref.crossbar_vmm_ref`` across shape /
 guard sweeps (tests/test_kernels.py) — bit-identical outputs.
+
+Both kernels are column-separable (bitline j reads only weight column j),
+which is what lets ``device.repair`` bake spare-column repairs into the
+weight layout at programming time instead of gathering kernel outputs —
+tests/test_repair.py pins gather-commutation down bit-for-bit.
 """
 from __future__ import annotations
 

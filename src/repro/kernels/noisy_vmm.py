@@ -18,6 +18,13 @@ every partial sum is a multiple of the grid step bounded by ``partial_max``
 2**24``), making f32 accumulation order-independent.  The adaptive-ADC
 shift/clamp tables from ``crossbar_vmm`` apply unchanged, so noise sweeps
 can compare full vs adaptive ADC configs on identical perturbed cells.
+
+Spare-column repair (``device.repair``) needs no kernel support: the
+datapath is column-separable (bitline j only reads ``g_eff[:, :, j]``), so
+the repaired layout — spare cells scattered into victim columns at
+programming time — is just another ``g_eff`` and the kernel serves it with
+zero steady-state overhead.  tests/test_repair.py pins the equivalence to
+an explicit physical-layout + output-gather formulation bit-for-bit.
 """
 from __future__ import annotations
 

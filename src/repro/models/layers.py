@@ -258,7 +258,10 @@ def init_mlp(ini: Init, d_model: int, d_ff: int, kind: str):
 
 
 def mlp(params, x: jnp.ndarray, kind: str) -> jnp.ndarray:
-    h = x @ params["wi"]
+    # wi/wo route through crossbar_linear so an enabled CrossbarMode (and
+    # the programmed/repaired artifact path) covers the FFN, not just the
+    # attention projections; with the mode disabled this is a plain matmul
+    h = crossbar_linear(x, params["wi"])
     h = shard(h, "batch", None, "mlp")
     if kind in ("swiglu", "geglu"):
         u, g = jnp.split(h, 2, axis=-1)
@@ -270,7 +273,7 @@ def mlp(params, x: jnp.ndarray, kind: str) -> jnp.ndarray:
         h = jnp.square(jax.nn.relu(h))
     else:
         raise ValueError(kind)
-    y = h @ params["wo"]
+    y = crossbar_linear(h, params["wo"])
     return shard(y, "batch", None, None)
 
 
@@ -311,7 +314,18 @@ def embed(params, tokens: jnp.ndarray, scale: bool, d_model: int) -> jnp.ndarray
 
 
 def lm_head(table_or_w, x: jnp.ndarray, tied: bool, cap: float = 0.0) -> jnp.ndarray:
-    logits = x @ (table_or_w.T if tied else table_or_w)
+    # the LM head is the model's largest single projection; routing it
+    # through crossbar_linear completes full-model crossbar coverage.  A
+    # *tied* head multiplies a per-call transpose of the embedding table —
+    # no stable leaf identity to bind a programmed artifact to — so putting
+    # it on the crossbar would rerun the whole programming pipeline (fault
+    # draw, write-verify, repair planning) inside every decode step,
+    # breaking the engine's program-once guarantee; tied heads therefore
+    # stay digital (ROADMAP: name-keyed artifact binding would lift this)
+    if tied:
+        logits = x @ table_or_w.T
+    else:
+        logits = crossbar_linear(x, table_or_w)
     logits = shard(logits, "batch", None, "vocab")
     if cap:
         logits = softcap(logits.astype(jnp.float32), cap)
@@ -324,8 +338,12 @@ def lm_head(table_or_w, x: jnp.ndarray, tied: bool, cap: float = 0.0) -> jnp.nda
 
 @dataclasses.dataclass(frozen=True)
 class CrossbarMode:
-    """When enabled, projections run through the Newton bit-sliced crossbar
-    datapath (Pallas kernel; interpret-mode on CPU) instead of XLA matmul.
+    """When enabled, every weight-bearing matmul — attention projections,
+    dense-MLP wi/wo and the (untied) LM head — runs through the Newton
+    bit-sliced crossbar datapath (Pallas kernel; interpret-mode on CPU)
+    instead of XLA matmul; activation-activation products (attention
+    scores/values) and tied LM heads (a per-call transpose, see ``lm_head``)
+    stay digital (tests/test_models_smoke.py pins the coverage).
 
     ``device`` (a ``repro.device.DeviceConfig``) additionally routes the
     matmul through the memristor non-ideality pipeline — stuck cells,

@@ -19,6 +19,9 @@ at construction (``repro.device.programmed.program_model``) — the paper's
 program-once premise as a serving feature.  Every prefill/decode then runs
 the steady-state artifact path inside the jitted step functions: one fixed
 noisy chip across the whole engine lifetime, no per-call reprogramming.
+``spare_cols=`` exposes the fault-aware spare-column repair budget
+(``device.repair``) at deploy time; ``repair_reports()`` summarizes what
+the planner remapped.
 """
 from __future__ import annotations
 
@@ -63,6 +66,7 @@ class ServingEngine:
         temperature: float = 0.0,
         seed: int = 0,
         crossbar: Optional[CrossbarMode] = None,
+        spare_cols: Optional[int] = None,
     ):
         self.cfg = cfg
         self.params = params
@@ -70,7 +74,7 @@ class ServingEngine:
         self.max_seq = max_seq
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
-        self.crossbar = self._program_crossbars(crossbar)
+        self.crossbar = self._program_crossbars(crossbar, spare_cols)
         self.cache = model_lib.init_cache(cfg, max_batch, max_seq, dtype=jnp.float32)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.pos = np.zeros(max_batch, np.int32)  # position of next write
@@ -85,7 +89,9 @@ class ServingEngine:
         self._prefills: Dict[int, object] = {}
 
     # ------------------------------------------------------------------
-    def _program_crossbars(self, crossbar: Optional[CrossbarMode]):
+    def _program_crossbars(
+        self, crossbar: Optional[CrossbarMode], spare_cols: Optional[int] = None
+    ):
         """Program-once compilation of the model's weights (deploy time).
 
         When crossbar serving is requested without prebuilt artifacts, walk
@@ -93,15 +99,54 @@ class ServingEngine:
         prefill/decode is pure steady-state (and under a noisy
         ``DeviceConfig`` the whole engine serves from one fixed chip
         instead of redrawing noise per layer call).
+
+        ``spare_cols`` (engine constructor arg) overrides the device's
+        spare-column repair budget at deploy time: the fault-aware planner
+        (``device.repair``) then remaps the worst stuck-cell columns of
+        every projection into programmed spares before serving begins.
         """
+        # spare_cols=0 means "no repair" and is a no-op wherever repair could
+        # not happen anyway; a *positive* budget that cannot take effect is a
+        # misconfiguration — silently serving unrepaired while the operator
+        # believes a repair budget is active would be worse than failing
         if crossbar is None or not crossbar.enabled or crossbar.programmed is not None:
+            if spare_cols:
+                raise ValueError(
+                    "spare_cols= needs crossbar serving with a DeviceConfig "
+                    "to repair and no prebuilt artifacts (set spare_cols on "
+                    "the DeviceConfig passed to program_model instead)"
+                )
             return crossbar
+        device = crossbar.device
+        if spare_cols is not None:
+            if device is None:
+                if spare_cols:
+                    raise ValueError(
+                        "spare_cols= without a CrossbarMode.device: there is "
+                        "no fault model to repair against"
+                    )
+            else:
+                device = device.replace(spare_cols=spare_cols)
+                from repro.device import wants_repair
+
+                if spare_cols > 0 and not wants_repair(device):
+                    raise ValueError(
+                        f"spare_cols={spare_cols} on a device with no "
+                        "stuck-at faults (p_stuck_on == p_stuck_off == 0): "
+                        "nothing to repair"
+                    )
+                crossbar = dataclasses.replace(crossbar, device=device)
         from repro.device.programmed import program_model
 
-        prog = program_model(
-            self.params, device=crossbar.device, fast=crossbar.fast
-        )
+        prog = program_model(self.params, device=device, fast=crossbar.fast)
         return dataclasses.replace(crossbar, programmed=prog)
+
+    def repair_reports(self):
+        """Path -> spare-column ``RepairReport`` for every repaired
+        projection of the programmed model ({} when repair is off)."""
+        if self.crossbar is None or self.crossbar.programmed is None:
+            return {}
+        return self.crossbar.programmed.repair_reports()
 
     def _with_crossbar(self, params, fn):
         """Run ``fn`` under the engine's crossbar mode, with programmed

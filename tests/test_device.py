@@ -4,7 +4,7 @@ the dense perturbed reference, and write-verify convergence."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from _propcheck import integers, sweep
+from _propcheck import integers, sampled_from, sweep
 
 from repro.core import adc
 from repro.core import crossbar as cb
@@ -64,6 +64,52 @@ def test_explicitly_zeroed_config_is_ideal():
 
 
 # --- seeded determinism -----------------------------------------------------
+
+@sweep(
+    integers(1, 8),  # slices
+    integers(32, 384),  # rows
+    integers(8, 48),  # cols
+    sampled_from([(0.0, 0.0), (0.01, 0.02), (0.05, 0.0), (0.05, 0.05)]),
+    integers(0, 2**31 - 1),  # seed
+    examples=8,
+)
+def test_fault_masks_property(S, K, N, rates, seed):
+    """fault_masks is a bit-reproducible pure function of (cfg, shape, tag):
+    masks are disjoint, empirical rates match p_stuck_* to binomial
+    tolerance, repeated calls and jit-compiled calls agree bit-for-bit, and
+    tag / stage select independent fields."""
+    import functools
+    import jax
+
+    p_on, p_off = rates
+    cfg = DeviceConfig(p_stuck_on=p_on, p_stuck_off=p_off, seed=seed)
+    shape = (S, K, N)
+    on1, off1 = fault_masks(cfg, shape)
+    on2, off2 = fault_masks(cfg, shape)
+    # disjoint + bit-reproducible across calls
+    assert not bool(jnp.any(on1 & off1))
+    np.testing.assert_array_equal(np.asarray(on1), np.asarray(on2))
+    np.testing.assert_array_equal(np.asarray(off1), np.asarray(off2))
+    # and under jit (shape/cfg static, tag traced)
+    jon, joff = jax.jit(functools.partial(fault_masks, cfg, shape))(
+        tag=jnp.uint32(7)
+    )
+    eon, eoff = fault_masks(cfg, shape, tag=jnp.uint32(7))
+    np.testing.assert_array_equal(np.asarray(jon), np.asarray(eon))
+    np.testing.assert_array_equal(np.asarray(joff), np.asarray(eoff))
+    # empirical rates within a 6-sigma binomial band (plus one-cell slack)
+    ncells = S * K * N
+    for mask, p in ((on1, p_on), (off1, p_off)):
+        se = (p * (1.0 - p) / ncells) ** 0.5
+        assert abs(float(jnp.mean(mask)) - p) <= 6.0 * se + 1.0 / ncells
+    if p_on + p_off > 0.0 and ncells >= 4096:
+        # tag and stage decorrelate: same cfg/shape, different field
+        t1, _ = fault_masks(cfg, shape, tag=jnp.uint32(1))
+        t2, _ = fault_masks(cfg, shape, tag=jnp.uint32(2))
+        assert bool(jnp.any(t1 != t2))
+        s1 = fault_masks(cfg, shape, stage="spare_faults")
+        assert bool(jnp.any(s1[0] != on1)) or bool(jnp.any(s1[1] != off1))
+
 
 def test_fault_maps_deterministic_and_disjoint():
     cfg = DeviceConfig(p_stuck_on=0.01, p_stuck_off=0.02, seed=5)

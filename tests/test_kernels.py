@@ -1,12 +1,17 @@
 """Pallas kernel validation: interpret-mode execution vs the pure-jnp oracle
 across shape/dtype/ADC-config sweeps (bit-identical, not just allclose)."""
+import functools
+import zlib
+
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
 from _propcheck import integers, sweep
 
 from repro.core import adc
 from repro.core.crossbar import CrossbarSpec, DEFAULT_SPEC
+from repro.device import DeviceConfig, effective_cell_codes
 from repro.kernels import ops, ref
 
 SPEC_S = DEFAULT_SPEC
@@ -94,6 +99,56 @@ def test_kernel_property(B, K, N, seed):
     y_k = ops.crossbar_vmm_op(x, w, SPEC_S, interpret=True)
     y_r = ref.crossbar_vmm_ref(x, w, SPEC_S)
     np.testing.assert_array_equal(np.asarray(y_k), np.asarray(y_r))
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity matrix: every Pallas kernel x skip_zero_planes x jit x input
+# sparsity vs the dense jnp reference — one grid instead of ad-hoc per-kernel
+# coverage (the zero-plane early-out, outer-jit tracing and repaired g_eff
+# layouts all ride these same entry points).
+# ---------------------------------------------------------------------------
+
+_MB, _MK, _MN = 2, 160, 16  # K=160 pads to two 128-row groups
+_MDEV = DeviceConfig(sigma=0.1, p_stuck_on=2e-3, p_stuck_off=2e-3, seed=11)
+
+
+def _matrix_inputs(case_id: str, sparse: bool):
+    rng = np.random.default_rng(zlib.crc32(case_id.encode()))
+    if sparse:  # post-ReLU style: mostly zero, codes confined to low planes
+        x = rng.integers(0, 1 << 9, size=(_MB, _MK)) * (rng.random((_MB, _MK)) < 0.3)
+    else:
+        x = rng.integers(0, 1 << 16, size=(_MB, _MK))
+    w = rng.integers(-(1 << 15), 1 << 15, size=(_MK, _MN))
+    return jnp.asarray(x), jnp.asarray(w)
+
+
+@pytest.mark.parametrize("sparse", [False, True], ids=["dense_x", "sparse_x"])
+@pytest.mark.parametrize("use_jit", [False, True], ids=["eager", "jit"])
+@pytest.mark.parametrize("skip", [True, False], ids=["skip", "dense_loop"])
+@pytest.mark.parametrize("kernel", ["paper", "fast", "noisy"])
+def test_kernel_bit_identity_matrix(kernel, skip, use_jit, sparse):
+    x, w = _matrix_inputs(f"{kernel}-{sparse}", sparse)
+    if kernel == "noisy":
+        g = effective_cell_codes(w.astype(jnp.int32) + SPEC_S.weight_bias, SPEC_S, _MDEV)
+        fn = functools.partial(
+            ops.noisy_vmm_op, spec=SPEC_S, interpret=True, skip_zero_planes=skip
+        )
+        args = (x, g)
+        y_ref = ref.noisy_vmm_ref(x, g, SPEC_S)
+    else:
+        fn = functools.partial(
+            ops.crossbar_vmm_op,
+            spec=SPEC_S,
+            fast=(kernel == "fast"),
+            interpret=True,
+            skip_zero_planes=skip,
+        )
+        args = (x, w)
+        y_ref = ref.crossbar_vmm_ref(x, w, SPEC_S)
+    if use_jit:
+        fn = jax.jit(fn)
+    y = fn(*args)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
 
 
 def test_float_crossbar_matmul_fidelity():

@@ -178,3 +178,69 @@ def test_moe_capacity_drops_are_bounded():
     y_inf = Mo.moe_ffn(ini.params, x, dc.replace(cfg, moe_capacity_factor=1000.0))
     denom = float(jnp.linalg.norm(y_inf)) + 1e-9
     assert float(jnp.linalg.norm(y - y_inf)) / denom < 0.35
+
+
+def test_no_plain_xla_matmuls_on_crossbar_path(monkeypatch):
+    """Under an enabled CrossbarMode every weight-bearing matmul — attention
+    q/k/v/o, MLP wi/wo, and the LM head — routes through crossbar_linear
+    into a Pallas kernel; the only dot_generals left in the traced forward
+    are the activation-activation attention products (QK^T, probs @ V),
+    which hold no weights and cannot live on a crossbar."""
+    from benchmarks.noise_sweep import tiny_lm_config
+    from repro.models import attention as A
+    from repro.models import layers as L
+
+    cfg = tiny_lm_config()
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    tokens = jnp.zeros((1, 4), jnp.int32)
+
+    consumed = []
+    real = L.crossbar_linear
+
+    def spy(x, w):
+        consumed.append(tuple(int(d) for d in w.shape))
+        return real(x, w)
+
+    monkeypatch.setattr(L, "crossbar_linear", spy)
+    monkeypatch.setattr(A, "crossbar_linear", spy)
+
+    def count_dots(closed) -> int:
+        def walk(jaxpr) -> int:
+            n = 0
+            for eqn in jaxpr.eqns:
+                if eqn.primitive.name == "pallas_call":
+                    continue  # the crossbar datapath itself
+                if eqn.primitive.name == "dot_general":
+                    n += 1
+                for v in eqn.params.values():
+                    for sub in (v if isinstance(v, (list, tuple)) else (v,)):
+                        inner = getattr(sub, "jaxpr", None)
+                        if hasattr(inner, "eqns"):
+                            n += walk(inner)
+                        elif hasattr(sub, "eqns"):
+                            n += walk(sub)
+            return n
+
+        return walk(closed.jaxpr)
+
+    def trace(mode):
+        consumed.clear()
+        with L.crossbar_mode(mode):
+            return jax.make_jaxpr(lambda p, t: M.forward(p, cfg, t))(params, tokens)
+
+    off = count_dots(trace(L.CrossbarMode(enabled=False)))
+    jaxpr_on = trace(L.CrossbarMode(enabled=True, fast=True))
+    on = count_dots(jaxpr_on)
+    n_routed = len(consumed)
+    # every projection class is served: 4 attention + 2 mlp + 1 head (the
+    # layer scan traces each distinct block body once)
+    assert n_routed == 7, consumed
+    expected = {
+        tuple(int(d) for d in a.shape[1:])
+        for a in jax.tree_util.tree_leaves(params["stage0"])
+        if a.ndim == 3
+    } | {tuple(int(d) for d in params["head"].shape)}
+    assert set(consumed) == expected
+    # ... and each routed site removed exactly one plain-XLA dot_general;
+    # what remains is the weightless attention pair
+    assert on == off - n_routed == 2, (on, off)

@@ -1,0 +1,305 @@
+"""Fault-aware mapping & spare-column repair, end to end.
+
+Pins down: planner determinism and report consistency; column-separability
+(pre-gathered repaired layouts == physical layout + output gather, bit for
+bit, for every kernel); programmed-vs-per-call bit-identity with repair
+active; the zero-fault no-op guarantee; mapper fault provisioning; and the
+repo's model-level acceptance bar — spare-column repair recovers >= 70% of
+the stuck-at logit-MSE degradation at a 1% fault rate on a tiny LM whose
+every projection routes through the crossbar.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import crossbar as cb
+from repro.device import (
+    DeviceConfig,
+    apply_repair,
+    effective_cell_codes,
+    plan_repair,
+    program_layer,
+    program_model,
+    programmed_matmul,
+    repair_report,
+    spare_budget,
+    wants_repair,
+)
+from repro.kernels import ops
+
+SPEC = cb.layer_scaled_spec(cb.DEFAULT_SPEC, 256)
+FAULTY = DeviceConfig(p_stuck_on=5e-3, p_stuck_off=5e-3, spare_cols=32, seed=0)
+
+
+def _codes(rng, K, N):
+    w = jnp.asarray(rng.integers(-(1 << 15), 1 << 15, size=(K, N)))
+    return w.astype(jnp.int32) + SPEC.weight_bias
+
+
+# ---------------------------------------------------------------------------
+# Planner
+# ---------------------------------------------------------------------------
+
+def test_plan_is_deterministic_and_consistent():
+    rng = np.random.default_rng(0)
+    wb = _codes(rng, 256, 64)
+    p1 = plan_repair(wb, SPEC, FAULTY)
+    p2 = plan_repair(wb, SPEC, FAULTY)
+    np.testing.assert_array_equal(np.asarray(p1.victim), np.asarray(p2.victim))
+    np.testing.assert_array_equal(np.asarray(p1.out_gather), np.asarray(p2.out_gather))
+    np.testing.assert_array_equal(np.asarray(p1.g_spare), np.asarray(p2.g_spare))
+
+    victim = np.asarray(p1.victim)
+    gather = np.asarray(p1.out_gather)
+    N = wb.shape[1]
+    B = spare_budget(N, SPEC, FAULTY)
+    assert victim.shape == (B,) and gather.shape == (N,)
+    # every redirected output points at a spare holding exactly that column
+    for j in range(N):
+        if gather[j] >= N:
+            assert victim[gather[j] - N] == j
+    # ... and no orphaned spares: used victim slots are exactly the
+    # redirected columns, each repaired once
+    used = victim[victim >= 0]
+    assert len(used) == len(set(used.tolist()))
+    assert set(used.tolist()) == {int(j) for j in range(N) if gather[j] >= N}
+    # spares are group-local: a spare only serves columns of its own
+    # 128-column crossbar group
+    for b in range(B):
+        if victim[b] >= 0:
+            assert victim[b] // SPEC.cols == b // FAULTY.spare_cols
+    # repair never increases planner-model salience, and strictly helps here
+    before = np.asarray(p1.salience_before)
+    after = np.asarray(p1.salience_after)
+    assert (after <= before + 1e-6).all()
+    assert after.sum() < before.sum()
+
+    rep = repair_report(p1)
+    assert rep.budget == B
+    assert rep.n_repaired == int((victim >= 0).sum())
+    assert set(rep.repaired_cols) == set(int(j) for j in range(N) if gather[j] >= N)
+    assert 0.0 < rep.recovered_frac <= 1.0
+
+
+def test_no_repair_without_budget_or_faults():
+    assert plan_repair(jnp.zeros((8, 4), jnp.int32), SPEC, DeviceConfig()) is None
+    assert not wants_repair(DeviceConfig(p_stuck_on=0.01))  # no budget
+    assert not wants_repair(DeviceConfig(spare_cols=8))  # no faults
+    assert wants_repair(DeviceConfig(p_stuck_on=0.01, spare_cols=8))
+
+
+def test_spare_budget_scales_with_column_groups():
+    cfg = DeviceConfig(p_stuck_on=0.01, spare_cols=8)
+    assert spare_budget(64, SPEC, cfg) == 8  # one column group
+    assert spare_budget(SPEC.cols + 1, SPEC, cfg) == 16  # two groups
+
+
+# ---------------------------------------------------------------------------
+# Column separability: pre-gathered layout == physical layout + out gather
+# ---------------------------------------------------------------------------
+
+def test_repaired_layout_equals_physical_gather_noisy_kernel():
+    rng = np.random.default_rng(1)
+    wb = _codes(rng, 256, 48)
+    x = jnp.asarray(rng.integers(0, 1 << 16, size=(4, 256)))
+    plan = plan_repair(wb, SPEC, FAULTY)
+    g_primary = effective_cell_codes(wb, SPEC, FAULTY, repair=False)
+    g_repaired = apply_repair(g_primary, plan)
+    # the physical chip: primary columns ++ spare block, outputs gathered
+    g_phys = jnp.concatenate([g_primary, plan.g_spare], axis=2)
+    y_phys = ops.noisy_vmm_op(x, g_phys, SPEC, interpret=True)[:, plan.out_gather]
+    y_pre = ops.noisy_vmm_op(x, g_repaired, SPEC, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_phys), np.asarray(y_pre))
+    # and the functional oracle agrees
+    y_ref = cb.noisy_crossbar_vmm(x, g_repaired, SPEC)
+    np.testing.assert_array_equal(np.asarray(y_pre), np.asarray(y_ref))
+
+
+@pytest.mark.parametrize("fast", [False, True], ids=["paper", "fast"])
+def test_column_separability_ideal_kernels(fast):
+    """The ideal kernels are column-separable too: gathering weight columns
+    commutes with the VMM — the property that lets repaired layouts be baked
+    at programming time for every kernel path."""
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.integers(-(1 << 15), 1 << 15, size=(200, 24)))
+    x = jnp.asarray(rng.integers(0, 1 << 16, size=(3, 200)))
+    gather = jnp.asarray(rng.permutation(24).astype(np.int32))
+    y_full = ops.crossbar_vmm_op(x, w, SPEC, fast=fast, interpret=True)
+    y_gathered = ops.crossbar_vmm_op(x, w[:, gather], SPEC, fast=fast, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_full[:, gather]), np.asarray(y_gathered))
+
+
+# ---------------------------------------------------------------------------
+# Programmed pipeline integration
+# ---------------------------------------------------------------------------
+
+def test_programmed_repair_bit_identical_to_per_call():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(np.abs(rng.normal(size=(4, 256))).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(256, 32)).astype(np.float32))
+    dev = FAULTY.replace(sigma=0.05, write_verify_iters=2)
+    y_percall = ops.crossbar_matmul(x, w, device=dev, interpret=True)
+    art = program_layer(w, device=dev)
+    y_prog = programmed_matmul(x, art, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_percall), np.asarray(y_prog))
+    # artifact records the hardware view: spare block + routing table
+    assert art.g_spare is not None and art.out_gather is not None
+    assert art.repair is not None and art.repair.n_repaired > 0
+    B = spare_budget(32, art.spec, dev)
+    assert art.g_spare.shape == (art.spec.n_slices, 256, B)
+
+
+def test_zero_fault_budget_is_bit_exact_no_op():
+    """Provisioned spares with faults disabled change nothing: the repaired
+    programmed path stays bit-identical to the per-call noisy path."""
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(np.abs(rng.normal(size=(4, 128))).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(128, 16)).astype(np.float32))
+    dev = DeviceConfig(sigma=0.1, spare_cols=16, seed=5)
+    assert not wants_repair(dev)
+    wb = jnp.asarray(
+        np.asarray(cb.quantize_weight(w, SPEC, jnp.max(jnp.abs(w)) / ((1 << 15) - 1)))
+    ) + SPEC.weight_bias
+    np.testing.assert_array_equal(
+        np.asarray(effective_cell_codes(wb, SPEC, dev)),
+        np.asarray(effective_cell_codes(wb, SPEC, dev.replace(spare_cols=0))),
+    )
+    art = program_layer(w, device=dev)
+    assert art.g_spare is None and art.out_gather is None and art.repair is None
+    y_prog = programmed_matmul(x, art, interpret=True)
+    y_percall = ops.crossbar_matmul(x, w, device=dev.replace(spare_cols=0), interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_prog), np.asarray(y_percall))
+
+
+def test_repair_reduces_vmm_error():
+    rng = np.random.default_rng(5)
+    wb = _codes(rng, 256, 64)
+    x = jnp.asarray(rng.integers(0, 1 << 16, size=(8, 256)))
+    y_ideal = np.asarray(
+        cb.noisy_crossbar_vmm(x, effective_cell_codes(wb, SPEC, DeviceConfig()), SPEC),
+        np.int64,
+    )
+    cfg = DeviceConfig(p_stuck_on=5e-3, p_stuck_off=5e-3, seed=0)
+    errs = {}
+    for spares in (0, 64):
+        g = effective_cell_codes(wb, SPEC, cfg.replace(spare_cols=spares))
+        y = np.asarray(cb.noisy_crossbar_vmm(x, g, SPEC), np.int64)
+        errs[spares] = float(((y - y_ideal) ** 2).mean())
+    # a budget of one spare per column recovers the large majority of MSE
+    assert errs[64] < 0.3 * errs[0]
+
+
+def test_program_model_records_repairs():
+    rng = np.random.default_rng(6)
+    params = {
+        "stage0": {
+            "b0": {"wq": jnp.asarray(rng.normal(size=(2, 64, 16)).astype(np.float32))}
+        },
+        "head": jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32)),
+    }
+    prog = program_model(params, device=FAULTY)
+    assert prog.n_compiled == 2
+    reps = prog.repair_reports()
+    assert len(reps) == 2
+    stacked = [r for k, r in reps.items() if "wq" in k][0]
+    assert isinstance(stacked, tuple) and len(stacked) == 2  # per-layer reports
+    assert all(r.budget == spare_budget(16, prog.artifacts["stage0"]["b0"]["wq"].spec, FAULTY) for r in stacked)
+
+
+def test_serving_engine_exposes_repair_budget():
+    """The engine constructor's ``spare_cols`` knob overrides the device
+    budget at deploy time, and ``repair_reports()`` surfaces the planner's
+    work for every compiled projection."""
+    from benchmarks.noise_sweep import tiny_lm_config
+    from repro.models import model as M
+    from repro.models.layers import CrossbarMode
+    from repro.serving.engine import ServingEngine
+
+    cfg = tiny_lm_config()
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    dev = DeviceConfig(p_stuck_on=5e-3, p_stuck_off=5e-3, seed=1)
+    eng = ServingEngine(
+        cfg, params, max_batch=1, max_seq=32,
+        crossbar=CrossbarMode(enabled=True, device=dev), spare_cols=16,
+    )
+    assert eng.crossbar.device.spare_cols == 16
+    assert eng.crossbar.programmed is not None
+    # a budget that cannot repair anything is a misconfiguration, not a no-op
+    with pytest.raises(ValueError):
+        ServingEngine(
+            cfg, params, max_batch=1, max_seq=32,
+            crossbar=CrossbarMode(enabled=True, device=DeviceConfig(sigma=0.1)),
+            spare_cols=16,
+        )
+    with pytest.raises(ValueError):
+        ServingEngine(
+            cfg, params, max_batch=1, max_seq=32,
+            crossbar=CrossbarMode(enabled=True), spare_cols=16,
+        )
+    # ... but spare_cols=0 explicitly disables a budget baked into the device
+    eng_off = ServingEngine(
+        cfg, params, max_batch=1, max_seq=32,
+        crossbar=CrossbarMode(enabled=True, device=dev.replace(spare_cols=16)),
+        spare_cols=0,
+    )
+    assert eng_off.crossbar.device.spare_cols == 0
+    assert eng_off.repair_reports() == {}
+    # ... and 0 stays a no-op wherever repair could not happen anyway
+    assert ServingEngine(cfg, params, max_batch=1, spare_cols=0).crossbar is None
+    reps = eng.repair_reports()
+    # every compiled projection (attention q/k/v/o, mlp wi/wo, head) repaired
+    assert len(reps) == 7
+    flat = [r for v in reps.values() for r in (v if isinstance(v, tuple) else (v,))]
+    assert all(rep.n_repaired > 0 for rep in flat)
+
+
+# ---------------------------------------------------------------------------
+# Mapper provisioning
+# ---------------------------------------------------------------------------
+
+def test_mapper_fault_provisioning_inflates_allocation():
+    from repro.core import arch, mapper
+    from repro.core import workloads as wl
+
+    net = wl.benchmark_suite()[0]
+    for policy in ("newton", "isaac"):
+        base = mapper.map_network(net, arch.NEWTON_CHIP, policy=policy)
+        prov = mapper.map_network(net, arch.NEWTON_CHIP, policy=policy, fault_rate=1e-2)
+        assert prov.spare_cols == mapper.provision_spare_cols(
+            1e-2, arch.NEWTON_CHIP.conv_tile.ima.xbar_spec
+        ) > 0
+        assert prov.spare_cells_frac == pytest.approx(prov.spare_cols / 128)
+        # spares are allocated-but-unmappable: more crossbars, lower utilization
+        assert sum(m.crossbars for m in prov.layers) > sum(m.crossbars for m in base.layers)
+        assert prov.crossbar_underutilization > base.crossbar_underutilization
+        # throughput provisioning is not affected by column sparing
+        assert prov.throughput_samples_s == base.throughput_samples_s
+
+
+def test_provision_spare_cols_monotone_and_capped():
+    from repro.core.mapper import provision_spare_cols
+
+    spec = cb.DEFAULT_SPEC
+    rates = [0.0, 1e-4, 1e-3, 1e-2, 1e-1]
+    vals = [provision_spare_cols(p, spec) for p in rates]
+    assert vals[0] == 0
+    assert all(b >= a for a, b in zip(vals, vals[1:]))
+    assert vals[-1] <= spec.cols
+    # coverage scales the budget
+    assert provision_spare_cols(1e-3, spec, coverage=0.5) <= provision_spare_cols(1e-3, spec)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: model-level recovery (ISSUE 3 criterion)
+# ---------------------------------------------------------------------------
+
+def test_model_logit_mse_recovery_at_1pct_faults():
+    """At p_stuck_on + p_stuck_off = 0.01, spare-column repair recovers
+    >= 70% of the stuck-at logit-MSE degradation on the tiny LM (every
+    projection — attention, MLP, LM head — on the crossbar path)."""
+    from benchmarks.noise_sweep import model_fault_recovery
+
+    out = model_fault_recovery(fault_rate=1e-2, spare_cols=64, seed=0)
+    assert out["logit_mse_norepair"] > 0.0
+    assert out["recovered_frac"] >= 0.70, out
