@@ -198,9 +198,128 @@ def repaired_kernel_bench() -> Dict[str, float]:
     }
 
 
+def artifact_store_bench() -> Dict[str, float]:
+    """Restore-vs-reprogram: serving-restart latency (ISSUE 4 tentpole).
+
+    A restart that replays ``program_model`` pays the full write-verify /
+    fault-draw / IR-drop pipeline for every projection; one that restores a
+    ``save_programmed`` artifact store pays file I/O.  Both must produce
+    the *same chip* — ``bit_exact`` compares every array leaf of every
+    artifact (effective cells, scales, spare blocks, gather tables).  The
+    acceptance floor is ``restore_speedup_x >= 2`` (in practice restore is
+    orders of magnitude faster; the floor only guards against restore
+    accidentally re-entering the programming pipeline).
+    """
+    import tempfile
+
+    from repro.checkpoint import restore_programmed, save_programmed
+    from repro.device import program_model
+
+    rng = np.random.default_rng(3)
+    params = {
+        "stage0": {
+            "b0": {
+                "wq": jnp.asarray(rng.normal(size=(2, 256, 64)).astype(np.float32)),
+                "wi": jnp.asarray(rng.normal(size=(2, 256, 128)).astype(np.float32)),
+            }
+        },
+        "head": jnp.asarray(rng.normal(size=(256, 128)).astype(np.float32)),
+    }
+    dev = DeviceConfig(
+        sigma=0.1, p_stuck_on=1e-3, p_stuck_off=1e-3, write_verify_iters=8,
+        spare_cols=8,
+    )
+
+    def _program():
+        prog = program_model(params, device=dev)
+        jax.block_until_ready([a.g_eff for a in prog.by_name.values()])
+        return prog
+
+    t0 = time.perf_counter()
+    prog = _program()
+    t_program = (time.perf_counter() - t0) * 1e6
+
+    with tempfile.TemporaryDirectory() as d:
+        save_programmed(d, prog)
+
+        def _restore():
+            back = restore_programmed(d)
+            jax.block_until_ready([a.g_eff for a in back.by_name.values()])
+            return back
+
+        t_restore = _time(_restore)
+        back = _restore()
+
+    from repro.device.programmed import artifacts_equal
+
+    exact = set(back.by_name) == set(prog.by_name)
+    exact = exact and all(
+        artifacts_equal(prog.by_name[n], back.by_name[n]) for n in prog.by_name
+    )
+    return {
+        "program_us": t_program,
+        "restore_us": t_restore,
+        "restore_speedup_x": t_program / t_restore,
+        "bit_exact": float(bool(exact)),
+    }
+
+
+def moe_programmed_bench() -> Dict[str, float]:
+    """Per-expert stacked artifacts vs per-call expert programming.
+
+    The (E, K, N) expert bank compiles once (name-keyed 4-D stacking);
+    steady-state serving slices per-expert artifacts instead of rerunning
+    the programming pipeline per expert per call.  Held to the same
+    ``speedup_x >= 5`` program-once floor as the dense benches, and each
+    expert's steady-state output must stay bit-identical to its per-call
+    reference.
+    """
+    rng = np.random.default_rng(4)
+    E, B, K, N = 4, 8, 256, 64
+    xs = jnp.asarray(np.abs(rng.normal(size=(E, B, K))).astype(np.float32))
+    ws = jnp.asarray(rng.normal(size=(E, K, N)).astype(np.float32))
+    dev = DeviceConfig(
+        sigma=0.1, p_stuck_on=1e-3, p_stuck_off=1e-3, write_verify_iters=8
+    )
+
+    def percall():
+        return [
+            ops.crossbar_matmul(xs[e], ws[e], device=dev, interpret=True)
+            for e in range(E)
+        ]
+
+    t_percall = _time(lambda: jax.block_until_ready(percall()))
+
+    t0 = time.perf_counter()
+    bank = program_layer(ws, device=dev)  # expert-stacked artifact
+    jax.block_until_ready(bank.g_eff)
+    t_program = (time.perf_counter() - t0) * 1e6
+
+    def steady():
+        return [programmed_matmul(xs[e], bank.layer(e), interpret=True) for e in range(E)]
+
+    t_steady = _time(lambda: jax.block_until_ready(steady()))
+
+    y_percall = percall()
+    y_steady = steady()
+    exact = all(
+        bool(jnp.array_equal(a, b)) for a, b in zip(y_percall, y_steady)
+    )
+    return {
+        "percall_us": t_percall,
+        "steady_state_us": t_steady,
+        "program_once_us": t_program,
+        "speedup_x": t_percall / t_steady,
+        "bit_exact": float(exact),
+        "experts": float(E),
+    }
+
+
 ALL = [
     ("kernel_crossbar", crossbar_kernel_bench),
     ("kernel_programmed", programmed_kernel_bench),
     ("kernel_zero_plane", zero_plane_kernel_bench),
     ("kernel_repaired", repaired_kernel_bench),
+    ("kernel_artifact_store", artifact_store_bench),
+    ("kernel_moe_programmed", moe_programmed_bench),
 ]

@@ -173,6 +173,35 @@ def tiny_lm_config():
     )
 
 
+def tiny_moe_lm_config():
+    """A deliberately tiny *MoE* LM with a tied embedding/LM head: every
+    weight-bearing projection — attention q/k/v/o, the router, the
+    per-expert wi/wg/wo bank, and the tied head (via its transposed
+    artifact) — routes through ``crossbar_linear``.  Small enough for
+    interpret-mode forwards in the fast test tier; exercises the name-keyed
+    4-D expert stacking and the tied-head transpose binding."""
+    from repro.configs.base import ModelConfig, StageSpec
+
+    return ModelConfig(
+        name="tiny-crossbar-moe",
+        family="moe",
+        n_layers=1,
+        d_model=16,
+        n_heads=2,
+        n_kv_heads=2,
+        d_ff=0,
+        vocab_size=32,
+        stages=(StageSpec(kinds=("attn",), repeats=1, moe=(True,)),),
+        moe_experts=2,
+        moe_top_k=1,
+        moe_d_ff=16,
+        mlp_kind="swiglu",
+        tie_embeddings=True,
+        param_dtype="float32",
+        remat=False,
+    )
+
+
 def model_fault_recovery(
     fault_rate: float = 1e-2,
     spare_cols: int = REPAIR_SPARE_COLS,

@@ -35,18 +35,25 @@ HEADLINE = [
     ("kernel_repaired", "bit_exact", "higher"),
     ("kernel_repaired", "bit_exact_zero_fault", "higher"),
     ("kernel_repaired", "recovery_frac", "higher"),
+    ("kernel_artifact_store", "bit_exact", "higher"),
+    ("kernel_moe_programmed", "bit_exact", "higher"),
 ]
 REGRESSION_TOL = 0.20
 
 # Wall-clock-derived ratios are gated against fixed acceptance floors, not
 # the last committed value — a noisy-box run that wrote an unusually high
 # (or low) baseline must not make later honest runs fail (or let real
-# regressions pass).  speedup_x >= 5 is this repo's program-once bar — and
-# the repaired path is held to the same floor, so the spare-column gather
-# cost can never silently move into the steady state.
+# regressions pass).  speedup_x >= 5 is this repo's program-once bar — the
+# repaired path and the per-expert MoE path are held to the same floor, so
+# neither a spare-column gather nor per-expert slicing can silently move
+# programming-pipeline work into the steady state.  restore_speedup_x >= 2
+# guards the serving-restart path: restoring a persisted chip must beat
+# reprogramming it (in practice by orders of magnitude).
 ABSOLUTE_FLOORS = {
     ("kernel_programmed", "speedup_x"): 5.0,
     ("kernel_repaired", "speedup_x"): 5.0,
+    ("kernel_moe_programmed", "speedup_x"): 5.0,
+    ("kernel_artifact_store", "restore_speedup_x"): 2.0,
 }
 
 

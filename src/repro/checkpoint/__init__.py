@@ -2,5 +2,7 @@ from repro.checkpoint.checkpoint import (  # noqa: F401
     CheckpointManager,
     save_checkpoint,
     restore_checkpoint,
+    restore_programmed,
+    save_programmed,
     latest_step,
 )

@@ -15,6 +15,16 @@ Properties needed at scale (DESIGN.md §4):
     synchronously (cheap) and writes files on a background thread, keeping
     the accelerator busy;
   * **bounded** — keeps the newest ``keep`` checkpoints.
+
+Programmed-crossbar artifacts: ``save_programmed`` / ``restore_programmed``
+persist a ``repro.device.programmed.ProgrammedModel`` — the *chip*, not the
+weights: effective cell codes (fault fields and all), frozen quantization
+scales, correction column sums, spare blocks + gather tables, and the
+write-verify / repair reports.  The store is keyed by the same canonical
+parameter names the binding layer uses ("stage0/b0/mixer/wq"), so a
+restored model serves any congruent params tree; a serving restart becomes
+file I/O instead of a full write-verify reprogramming pass, and restores
+the *same* chip bit-for-bit (``ServingEngine(restore_artifacts=...)``).
 """
 from __future__ import annotations
 
@@ -28,28 +38,23 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
+# the one canonical tree-path -> "a/b/c" key derivation, shared with the
+# artifact-binding layer so weight-checkpoint keys and artifact-store keys
+# can never diverge for the same pytree
+from repro.device.programmed import join_path as _join_path
+
 
 def _flatten_with_paths(tree) -> Dict[str, Any]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(
-            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
-            for p in path
-        )
-        flat[key] = leaf
+        flat[_join_path(path)] = leaf
     return flat
 
 
 def _unflatten_from_paths(tree_like, flat: Dict[str, Any]):
     paths = jax.tree_util.tree_flatten_with_path(tree_like)[0]
     treedef = jax.tree_util.tree_structure(tree_like)
-    leaves = []
-    for path, _ in paths:
-        key = "/".join(
-            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
-            for p in path
-        )
-        leaves.append(flat[key])
+    leaves = [flat[_join_path(path)] for path, _ in paths]
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
@@ -112,6 +117,152 @@ def restore_checkpoint(directory: str, step: Optional[int], tree_like, shardings
     if shardings is not None:
         tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
     return tree, manifest["step"], manifest["metadata"]
+
+
+# ---------------------------------------------------------------------------
+# Programmed-crossbar artifact store (name-keyed chips)
+# ---------------------------------------------------------------------------
+
+def _encode_aux(obj):
+    """JSON-encode artifact aux metadata: None, report dataclasses, and the
+    (possibly nested) per-layer/per-expert tuples stacked artifacts carry."""
+    import dataclasses as dc
+
+    if obj is None:
+        return None
+    if isinstance(obj, tuple):
+        return {"__kind__": "tuple", "items": [_encode_aux(o) for o in obj]}
+    if dc.is_dataclass(obj):
+        return {"__kind__": type(obj).__name__, **dc.asdict(obj)}
+    raise TypeError(f"unserializable artifact aux: {type(obj)!r}")
+
+
+def _decode_aux(obj):
+    if obj is None:
+        return None
+    kind = obj["__kind__"]
+    if kind == "tuple":
+        return tuple(_decode_aux(o) for o in obj["items"])
+    from repro.device.program import ProgramReport
+    from repro.device.repair import RepairReport
+
+    fields = {k: v for k, v in obj.items() if k != "__kind__"}
+    if kind == "ProgramReport":
+        fields["per_iter_mean_error"] = tuple(fields["per_iter_mean_error"])
+        return ProgramReport(**fields)
+    if kind == "RepairReport":
+        fields["repaired_cols"] = tuple(fields["repaired_cols"])
+        return RepairReport(**fields)
+    raise ValueError(f"unknown artifact aux kind: {kind!r}")
+
+
+def save_programmed(directory: str, prog, metadata: Optional[dict] = None) -> str:
+    """Atomically persist a ``ProgrammedModel`` under ``<dir>/programmed/``.
+
+    One ``.npz`` per artifact (every non-None array leaf, exact dtypes) plus
+    a manifest holding the name-keyed static aux: ``CrossbarSpec``,
+    ``ADCConfig``, the kernel-path flag and the write-verify/repair reports.
+    Restoring yields a bit-identical chip — same effective cells, same
+    fault realizations, same routing tables.
+    """
+    import dataclasses as dc
+
+    from repro.device.programmed import ARTIFACT_ARRAY_FIELDS
+
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, "programmed")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {"schema": 1, "metadata": metadata or {}, "artifacts": {}}
+    for name, art in prog.by_name.items():
+        # injective escaping ("_" first, then "/"): distinct names can never
+        # collide onto one file — "a/b" -> "a__b" but "a__b" -> "a_u_ub"
+        fname = name.replace("_", "_u").replace("/", "__") + ".npz"
+        arrays = {
+            f: np.asarray(jax.device_get(getattr(art, f)))
+            for f in ARTIFACT_ARRAY_FIELDS
+            if getattr(art, f) is not None
+        }
+        np.savez(os.path.join(tmp, fname), **arrays)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "spec": dc.asdict(art.spec),
+            "adc_cfg": dc.asdict(art.adc_cfg) if art.adc_cfg is not None else None,
+            "fast": bool(art.fast),
+            "report": _encode_aux(art.report),
+            "repair": _encode_aux(art.repair),
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    # swap, don't delete-then-rename: a crash between those two steps would
+    # lose the old store too, and the next restart would have to pay the
+    # full write-verify reprogramming this store exists to avoid
+    old = final + ".old"
+    if os.path.exists(old):
+        shutil.rmtree(old)
+    if os.path.exists(final):
+        os.rename(final, old)
+    os.rename(tmp, final)
+    shutil.rmtree(old, ignore_errors=True)
+    return final
+
+
+def restore_programmed(directory: str):
+    """Load a ``save_programmed`` store back into a ``ProgrammedModel``.
+
+    The artifact tree is rebuilt as nested dicts from the canonical names,
+    so stage subtrees ride the layer scan exactly as freshly programmed
+    ones do; no parameter tree is needed — name-keyed binding resolves
+    against whatever congruent params the model is served with.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.adc import ADCConfig
+    from repro.core.crossbar import CrossbarSpec
+    from repro.device.programmed import ProgrammedLinear, ProgrammedModel
+
+    base = os.path.join(directory, "programmed")
+    # a crash inside save_programmed's two-rename swap can leave the store
+    # under ".tmp" (fully written — the manifest is the last file out — but
+    # not yet renamed) or only under ".old" (previous chip renamed aside);
+    # fall back in completeness order instead of forcing a reprogram
+    candidates = [base, base + ".tmp", base + ".old", directory]
+    d = next(
+        (c for c in candidates if os.path.isfile(os.path.join(c, "manifest.json"))),
+        None,
+    )
+    if d is None:
+        raise FileNotFoundError(f"no programmed-artifact store in {directory}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    tree: Dict[str, Any] = {}
+    for name, info in manifest["artifacts"].items():
+        with np.load(os.path.join(d, info["file"])) as z:
+            arrays = {k: jnp.asarray(z[k]) for k in z.files}
+        art = ProgrammedLinear(
+            w_codes=arrays["w_codes"],
+            g_eff=arrays.get("g_eff"),
+            w_colsum=arrays["w_colsum"],
+            w_scale=arrays["w_scale"],
+            x_scale=arrays.get("x_scale"),
+            spec=CrossbarSpec(**info["spec"]),
+            adc_cfg=(
+                ADCConfig(**info["adc_cfg"]) if info["adc_cfg"] is not None else None
+            ),
+            fast=bool(info["fast"]),
+            report=_decode_aux(info["report"]),
+            g_spare=arrays.get("g_spare"),
+            out_gather=arrays.get("out_gather"),
+            repair=_decode_aux(info["repair"]),
+        )
+        node = tree
+        parts = name.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = art
+    return ProgrammedModel(tree)
 
 
 class CheckpointManager:

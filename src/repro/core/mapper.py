@@ -17,11 +17,16 @@ and throughput is set by the least-replicated layer.
 
 Fault-aware provisioning: both policies accept a per-crossbar spare-column
 budget (``spare_cols``, or derived from a stuck-cell ``fault_rate`` via
-``provision_spare_cols``).  Spare columns are allocated-but-unmappable
-cells — they shrink each crossbar's usable width, inflating ``crossbars``
-and deflating ``used_cells_frac`` / the Fig-10 underutilization accounting,
-which is exactly the provisioning cost the ``device.repair`` planner's
-repair capability is bought with.
+``provision_spare_cols``).  The spare-placement model is **shared with
+``device.repair``**: every 128-column group keeps its full data width and
+a block of ``spare_cols`` redundant columns is appended past it (the
+classic memory-redundancy layout — extra physical bitlines beyond the
+addressable array, reachable only through the column mux).  Spares are
+allocated-but-unmappable cells: layer columns never land in them, so the
+group fan-out is spare-independent, but every allocated crossbar grows by
+``rows x spare_cols`` cells per slice — deflating ``used_cells_frac`` /
+the Fig-10 underutilization accounting, which is exactly the provisioning
+cost the repair capability is bought with.
 """
 from __future__ import annotations
 
@@ -49,13 +54,12 @@ def provision_spare_cols(
     planner can skip spares that are themselves faulty).  Capped at the
     crossbar width.
 
-    Note the two subsystems model spare placement from opposite ends: this
-    mapper *carves* spares out of the fixed crossbar width (usable columns
-    shrink to ``cols - spare_cols`` — the provisioning-cost view), while
-    ``device.repair`` *appends* a spare block past each group's data
-    columns (the functional-layout view, which keeps repaired g_eff shapes
-    equal to unrepaired ones).  The cell counts agree; the group fan-out
-    differs for slabs wider than one crossbar (ROADMAP follow-on).
+    The budget is provisioned per column group in the same layout
+    ``device.repair.spare_budget`` consumes: ``spare_cols`` redundant
+    columns appended past each group's ``spec.cols`` data columns, so a
+    slab spanning ``ceil(N / spec.cols)`` groups owns exactly the spares
+    the repair planner will assign (pinned cross-module in
+    tests/test_repair.py).
     """
     if fault_rate <= 0.0 or coverage <= 0.0:
         return 0
@@ -118,18 +122,26 @@ def map_network(
 ) -> MappingReport:
     """Map ``net`` onto ``chip`` under the given policy.
 
-    ``spare_cols`` reserves repair columns in every crossbar (usable width
-    shrinks by that much); alternatively pass a stuck-cell ``fault_rate``
-    and the budget is derived via ``provision_spare_cols``.  Spares inflate
-    ``crossbars`` and count as allocated-but-unused cells in
-    ``used_cells_frac`` — the Fig-10 accounting then shows the
-    fault-tolerance provisioning cost directly.
+    ``spare_cols`` appends repair columns past every crossbar column group
+    (the ``device.repair`` layout: data width stays ``spec.cols``, spares
+    are extra unmappable cells); alternatively pass a stuck-cell
+    ``fault_rate`` and the budget is derived via ``provision_spare_cols``.
+    Spares grow every allocated crossbar by ``rows x spare_cols`` cells per
+    slice and count as allocated-but-unused in ``used_cells_frac`` — the
+    Fig-10 accounting then shows the fault-tolerance provisioning cost
+    directly, while group fan-out (hence ``crossbars`` and IMA counts)
+    matches the unprovisioned mapping and the repair planner's
+    ``spare_budget`` group arithmetic.
     """
     ima = chip.conv_tile.ima
     if fault_rate is not None and spare_cols == 0:
         spare_cols = provision_spare_cols(fault_rate, ima.xbar_spec)
-    spare_cols = min(spare_cols, ima.xbar_spec.cols - 1)
-    data_cols = ima.xbar_spec.cols - spare_cols
+    # physical column-group width: cols data + spare_cols appended repair
+    # columns (shared layout with device.repair.spare_budget — deliberately
+    # uncapped here so an explicit budget is accounted exactly as the
+    # repair planner will program it; provision_spare_cols caps its own
+    # derived budgets at the crossbar width)
+    group_width = ima.xbar_spec.cols + spare_cols
     conv = net.conv_layers()
     fc = net.fc_layers()
 
@@ -142,14 +154,9 @@ def map_network(
     # the image period.
     fc_cfg_tile = chip.fc_tile or chip.conv_tile
     fc_repl = max(1, -(-int(fc_cfg_tile.adc_slowdown) // max(1, pixels_ref)))
-    # usable IMA output width: each of its crossbar column slots loses the
-    # spare columns (both policies allocate layer columns into data columns)
-    usable_out = max(1, (ima.out_cols // ima.xbar_spec.cols) * data_cols)
     mapped: List[LayerMapping] = []
     for layer in net.layers:
         rg, cg = _layer_grid(layer, ima, policy)
-        if spare_cols:
-            cg = -(-layer.cols // usable_out)
         if layer.kind == "conv":
             repl = min(max_replication, max(1, -(-layer.pixels // pixels_ref)))
         else:
@@ -160,16 +167,15 @@ def map_network(
         if policy == "isaac":
             # Unconstrained: partial row/col groups of different layers can
             # share an IMA; utilization ~ full but account fragmentation at
-            # crossbar granularity.  Spare columns shrink each crossbar's
-            # mappable width to ``data_cols``; allocated cells stay physical
-            # (spares are bought, just not mappable).
+            # crossbar granularity.  Layer columns map into each group's
+            # full ``cols`` data width; the appended spare block is bought
+            # physical cells that are never mappable.
             used = layer.rows * layer.cols
             alloc_xbars = (
-                math.ceil(used / (ima.rows * data_cols)) * ima.xbar_spec.n_slices
+                math.ceil(used / (ima.rows * ima.xbar_spec.cols))
+                * ima.xbar_spec.n_slices
             )
-            alloc_cells = (
-                alloc_xbars / ima.xbar_spec.n_slices * ima.rows * ima.xbar_spec.cols
-            )
+            alloc_cells = alloc_xbars / ima.xbar_spec.n_slices * ima.rows * group_width
             util = used / alloc_cells
             crossbars = alloc_xbars * repl
             tiles_span = max(1, math.ceil(imas / chip.conv_tile.imas))
@@ -178,14 +184,14 @@ def map_network(
             # HTree shift-and-add lets multiple *row groups of the same
             # layer* occupy its column slots (partials reduced in-tree), so
             # allocation granularity is a 128x128 crossbar-column slot —
-            # of which only ``data_cols`` columns are mappable when repair
-            # spares are provisioned.
+            # each slot's physical array is ``group_width`` wide when repair
+            # spares are provisioned (data columns + appended spare block).
             slots_per_ima = max(1, ima.out_cols // ima.xbar_spec.cols)
-            slots = rg * -(-layer.cols // data_cols) * repl
+            slots = rg * -(-layer.cols // ima.xbar_spec.cols) * repl
             imas = -(-slots // slots_per_ima)
             grid_imas = -(-slots // (repl * slots_per_ima))
             used = layer.rows * layer.cols
-            alloc_cells = (slots // repl) * ima.rows * ima.xbar_spec.cols
+            alloc_cells = (slots // repl) * ima.rows * group_width
             util = min(1.0, used / alloc_cells)
             crossbars = slots * ima.xbar_spec.n_slices
             tiles_span = max(1, math.ceil(imas / chip.conv_tile.imas))
@@ -278,7 +284,7 @@ def map_network(
         crossbar_underutilization=under,
         inter_tile_bytes_per_sample=traffic,
         spare_cols=spare_cols,
-        spare_cells_frac=spare_cols / ima.xbar_spec.cols,
+        spare_cells_frac=spare_cols / group_width,
     )
 
 

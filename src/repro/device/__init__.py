@@ -9,8 +9,14 @@ Entry points:
   * ``core.crossbar.crossbar_vmm(..., device=cfg)`` and
     ``kernels.ops.noisy_vmm_op`` — functional / Pallas inference paths.
   * ``programmed.program_layer`` / ``program_model`` — program-once
-    compilation into frozen ``ProgrammedLinear`` artifacts; steady-state
-    serving via ``programmed_matmul`` / ``programmed_linear``.
+    compilation into frozen ``ProgrammedLinear`` artifacts (2-D, scan-
+    stacked 3-D, or 4-D MoE expert banks; ``tie_lm_head=True`` programs
+    the embedding transpose for tied heads); steady-state serving via
+    ``programmed_matmul`` / ``programmed_linear``.  Artifacts bind by
+    canonical parameter *name* (``name_scope`` / ``bind_artifacts`` /
+    ``ProgrammedModel.by_name``), so binding survives pytree copies, jit
+    retraces and transposes; ``checkpoint.save_programmed`` persists the
+    chip bit-for-bit.
   * ``repair.plan_repair`` / ``apply_repair`` — fault-aware spare-column
     repair: rank columns by fault-weighted salience, remap the worst into a
     ``DeviceConfig.spare_cols`` budget of programmed spares (zero
@@ -41,8 +47,11 @@ from repro.device.repair import (  # noqa: F401
 from repro.device.programmed import (  # noqa: F401
     ProgrammedLinear,
     ProgrammedModel,
+    bind_artifacts,
+    name_scope,
     program_layer,
     program_model,
     programmed_linear,
     programmed_matmul,
+    scoped_name,
 )

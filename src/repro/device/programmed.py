@@ -20,9 +20,16 @@ vs **inference time**:
   chip serves the whole inference run instead of a fresh noise draw per
   layer call.
 * ``program_model(params, ...) -> ProgrammedModel`` — walk a parameter
-  pytree and compile every matmul-shaped leaf; ``ProgrammedModel.bind``
-  re-associates artifacts with (possibly traced) parameters inside ``jit``
-  so ``models.layers.crossbar_linear`` finds them transparently.
+  pytree and compile every matmul-shaped leaf.  Artifacts are **keyed by
+  the joined parameter path** ("stage0/b0/mixer/wq"), not by leaf object
+  identity: a pytree copy (``jax.device_put``, donation, optimizer step,
+  checkpoint restore), a fresh jit trace, or a transpose view all resolve
+  to the same artifact, because the *name* is stable where the array
+  object is not.  ``models.layers.crossbar_linear(x, w, name=...)`` joins
+  the call-site name with the active ``name_scope`` stack (pushed by
+  ``models.model`` as it descends stages/blocks/submodules) and looks the
+  key up in the dynamic ``bind_artifacts`` stack first (scan-sliced
+  per-layer bindings) and the model's ``by_name`` table second.
 
 Everything static (spec, scales, ADC config, report) rides in the pytree
 *aux* so a ``ProgrammedLinear`` can be passed through ``jax.jit`` or closed
@@ -49,7 +56,7 @@ from repro.core.crossbar import (
     quantize_weight,
 )
 from repro.device import models as dm
-from repro.device.program import ProgramReport, write_verify
+from repro.device.program import ProgramReport
 
 
 @jax.tree_util.register_pytree_node_class
@@ -112,7 +119,10 @@ class ProgrammedLinear:
 
     @property
     def stacked(self) -> bool:
-        return self.w_codes.ndim == 3
+        """Carries leading stacking axes beyond the servable (K, N) matrix:
+        (L, K, N) scan-stacked layers, (E, K, N) expert stacks, or the
+        (L, E, K, N) combination.  ``layer(i)`` peels one leading axis."""
+        return self.w_codes.ndim >= 3
 
     @property
     def shape(self) -> Tuple[int, ...]:
@@ -153,6 +163,26 @@ class ProgrammedLinear:
         )
 
 
+# Every array leaf a ProgrammedLinear carries — the single source of truth
+# for serialization (checkpoint.save_programmed) and equality checks.
+ARTIFACT_ARRAY_FIELDS = (
+    "w_codes", "g_eff", "w_colsum", "w_scale", "x_scale", "g_spare", "out_gather",
+)
+
+
+def artifacts_equal(a: "ProgrammedLinear", b: "ProgrammedLinear") -> bool:
+    """Bit-exact artifact equality: every array field (None-ness included)
+    plus the static datapath aux (spec / adc_cfg / fast).  Reports are
+    observability metadata and deliberately not part of chip equality."""
+    for f in ARTIFACT_ARRAY_FIELDS:
+        va, vb = getattr(a, f), getattr(b, f)
+        if (va is None) != (vb is None):
+            return False
+        if va is not None and not bool(jnp.array_equal(va, vb)):
+            return False
+    return a.spec == b.spec and a.adc_cfg == b.adc_cfg and a.fast == b.fast
+
+
 def program_layer(
     w: jnp.ndarray,
     spec: CrossbarSpec = DEFAULT_SPEC,
@@ -164,7 +194,7 @@ def program_layer(
     fast: bool = True,
     with_report: bool = False,
 ) -> ProgrammedLinear:
-    """Compile one (K, N) — or scan-stacked (L, K, N) — float weight matrix.
+    """Compile one (K, N) — or stacked (L, K, N) / (L, E, K, N) — weight.
 
     This is the *programming-time* entry point — it runs every expensive,
     weight-only stage exactly once: the ``max |w|`` scale reduction, weight
@@ -177,9 +207,14 @@ def program_layer(
     matching the unprogrammed path exactly; pass a calibrated scale for
     fully static serving.  ``with_report=True`` routes programming through
     ``program.write_verify`` for convergence metadata (bit-identical cells).
+
+    Stacked leaves recurse over every leading axis: a scan-stacked MoE
+    expert bank ``(L, E, d_model, d_ff)`` compiles to an artifact whose
+    arrays carry ``(L, E, ...)`` — the layer scan slices ``L``, the
+    per-expert scan inside ``models.moe`` slices ``E``.
     """
     w = jnp.asarray(w, jnp.float32)
-    if w.ndim == 3:  # scan-stacked (L, K, N): compile per layer, stack
+    if w.ndim >= 3:  # stacked (L/E leading axes): compile per slice, stack
         parts = [
             program_layer(
                 w[i], spec, device, adc_cfg, x_scale=x_scale, w_scale=w_scale,
@@ -218,23 +253,15 @@ def program_layer(
         wb = wq + spec.weight_bias
         # fault-aware spare-column repair (device.repair): remap the worst
         # fault-afflicted columns into programmed spares and bake the
-        # repaired layout into g_eff — steady-state calls pay nothing
+        # repaired layout into g_eff — steady-state calls pay nothing.
+        # repaired_effective_cells is the single derivation site for the
+        # programming intermediates; with_report only adds observability
+        # (bit-identical cells, pinned by test_programming_is_deterministic)
         from repro.device import repair as repair_mod
 
-        if with_report:
-            target = dm.target_cell_codes(wb, spec)
-            tag = dm._slab_tag(wb)
-            masks = dm.fault_masks(device, target.shape, tag)
-            g, report = write_verify(
-                wb, spec, device, target=target, tag=tag, masks=masks
-            )
-            g_eff = dm.read_effective_codes(g, spec, device)
-            plan = repair_mod.plan_repair(
-                wb, spec, device, target=target, tag=tag, primary_masks=masks
-            )
-            g_eff = repair_mod.apply_repair(g_eff, plan)
-        else:
-            g_eff, plan = repair_mod.repaired_effective_cells(wb, spec, device)
+        g_eff, plan, report = repair_mod.repaired_effective_cells(
+            wb, spec, device, with_report=with_report
+        )
         if plan is not None:
             g_spare = plan.g_spare
             out_gather = plan.out_gather
@@ -327,36 +354,83 @@ def programmed_linear(
 
 
 # ---------------------------------------------------------------------------
-# Whole-model compilation + artifact lookup (eager and under jit)
+# Name-keyed artifact binding (eager and under jit)
 # ---------------------------------------------------------------------------
+#
+# Artifacts are addressed by the *joined parameter path* — "stage0/b0/mixer/
+# wq" — never by array object identity.  Identity keying silently orphans
+# every artifact the moment the params tree is copied (jax.device_put, buffer
+# donation, an optimizer step, a checkpoint restore all produce fresh leaf
+# objects), downgrading the whole model to plain XLA matmul with no error.
+# Names survive all of those, survive jit retraces, and give transposed
+# views (the tied LM head) something stable to bind to.
 
-_BIND = threading.local()  # .maps: list of {id(param leaf) -> ProgrammedLinear}
-
-
-def _id_map_of(params: Any, artifacts: Any) -> Dict[int, ProgrammedLinear]:
-    """Position-exact {id(param leaf) -> artifact}: flatten params, align the
-    artifact tree to the same structure (None where not compiled), zip."""
-    flat_p, treedef_p = jax.tree_util.tree_flatten(params)
-    flat_a = treedef_p.flatten_up_to(artifacts)
-    out: Dict[int, ProgrammedLinear] = {}
-    for leaf, art in zip(flat_p, flat_a):
-        if isinstance(art, ProgrammedLinear):
-            out[id(leaf)] = art
-    return out
+_SCOPE = threading.local()  # .stack: list[str] — the active module path
 
 
 @contextlib.contextmanager
-def bind_artifacts(params: Any, artifacts: Any):
-    """Associate a (sub)tree of artifacts with congruent parameter leaves
-    for the dynamic scope.  Works eagerly and at ``jit``/``scan`` trace
-    time: the leaves may be tracers, and the map built here routes each
-    traced weight to its (closure-constant or traced) artifact — this is
-    how scan-stacked layers bind their per-iteration parameter slices to
-    the matching per-iteration artifact slices inside the scan body."""
-    if artifacts is None:
+def name_scope(name: str):
+    """Push one path component onto the ambient parameter-name scope.
+
+    ``models.model`` pushes "stage{i}" / "b{i}" / "mixer" / "ffn" as it
+    descends, so a call site only states its local leaf name —
+    ``crossbar_linear(x, w, name="wq")`` — and ``scoped_name`` joins the
+    full key.  Purely a Python-level dynamic scope: it is active during
+    tracing, costs nothing inside the compiled computation, and nests
+    across ``jit`` / ``scan`` / ``checkpoint`` bodies.
+    """
+    stack = getattr(_SCOPE, "stack", None)
+    if stack is None:
+        stack = _SCOPE.stack = []
+    stack.append(str(name))
+    try:
         yield
-        return
-    m = _id_map_of(params, artifacts)
+    finally:
+        stack.pop()
+
+
+def scoped_name(name: str) -> str:
+    """Join ``name`` onto the active scope: the canonical artifact key."""
+    return "/".join(getattr(_SCOPE, "stack", []) + [str(name)])
+
+
+def _path_component(entry: Any) -> str:
+    for attr in ("key", "idx", "name"):
+        if hasattr(entry, attr):
+            return str(getattr(entry, attr))
+    return str(entry)
+
+
+def join_path(path: Tuple[Any, ...]) -> str:
+    """Canonical "a/b/c" key for a jax tree path (Dict/Sequence/Attr keys)."""
+    return "/".join(_path_component(p) for p in path)
+
+
+def artifact_names(artifacts: Any, prefix: str = "") -> Dict[str, "ProgrammedLinear"]:
+    """Flatten an artifact (sub)tree into {joined path: artifact}.
+
+    ``prefix`` (usually the ambient scope at bind time) is prepended to
+    every key, so a subtree bound deep inside a model maps to the same
+    canonical names ``program_model`` derived from the full params tree.
+    """
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        artifacts, is_leaf=lambda x: isinstance(x, ProgrammedLinear)
+    )
+    out: Dict[str, ProgrammedLinear] = {}
+    for path, art in flat:
+        if not isinstance(art, ProgrammedLinear):
+            continue
+        rel = join_path(path)
+        key = "/".join(p for p in (prefix, rel) if p)
+        out[key] = art
+    return out
+
+
+_BIND = threading.local()  # .maps: list of {name -> ProgrammedLinear}
+
+
+@contextlib.contextmanager
+def _push_bind_map(m: Dict[str, "ProgrammedLinear"]):
     stack = getattr(_BIND, "maps", None)
     if stack is None:
         stack = _BIND.maps = []
@@ -367,29 +441,55 @@ def bind_artifacts(params: Any, artifacts: Any):
         stack.pop()
 
 
-def active_artifact_for(w: jnp.ndarray) -> Optional[ProgrammedLinear]:
-    """Artifact bound to this exact parameter object, if any.
+@contextlib.contextmanager
+def bind_artifacts(artifacts: Any):
+    """Bind a (sub)tree of artifacts by name for the dynamic scope.
 
-    Consulted by ``crossbar_linear``.  Lookup is by object identity — the
-    leaf of the params pytree the model was compiled from (eager), or the
-    tracer standing for it inside a ``bind_artifacts`` scope (jit/scan).
-    A shape guard protects against id reuse after garbage collection; a
-    stacked artifact never serves a 2-D weight directly.
+    Keys are the subtree's own paths joined under the *current*
+    ``name_scope`` — so ``model._run_stage``'s layer scan, which executes
+    its body under ``name_scope("stage{i}")``, binds each per-iteration
+    artifact slice to exactly the key the call sites inside the layer will
+    ask for.  Later binds shadow earlier ones (innermost wins), which is
+    how a per-expert slice bound inside the MoE expert scan takes
+    precedence over the still-stacked per-layer binding outside it.
+    """
+    if artifacts is None:
+        yield
+        return
+    m = artifact_names(artifacts, prefix="/".join(getattr(_SCOPE, "stack", [])))
+    with _push_bind_map(m):
+        yield
+
+
+def active_artifact_for(
+    name: str, shape: Optional[Tuple[int, ...]] = None
+) -> Optional[ProgrammedLinear]:
+    """Artifact bound to this canonical name in the dynamic scope, if any.
+
+    Consulted by ``crossbar_linear`` (which passes the weight's shape).
+    The shape guard does double duty: it rejects a still-stacked artifact
+    when a 2-D weight asks (the enclosing scan hasn't sliced it yet — keep
+    looking at outer binds), and it rejects stale bindings when two
+    different tensors legitimately share a name (e.g. the embedding table
+    vs its transposed LM-head artifact under the tied-head scheme).
     """
     for m in reversed(getattr(_BIND, "maps", [])):
-        art = m.get(id(w))
-        if art is not None and not art.stacked and art.shape == tuple(w.shape):
+        art = m.get(name)
+        if art is not None and (shape is None or art.shape == tuple(shape)):
             return art
     return None
 
 
 # The projection leaves routed through models.layers.crossbar_linear — the
 # call sites that can consume an artifact: attention q/k/v/o and the MLA kv
-# down-projection, the dense-MLP wi/wo, and the untied LM head.  (MoE expert
-# stacks are (L, E, dm, ff) after layer stacking — 4-D, rejected by the
-# ndim guard below — and a tied LM head multiplies a per-call transpose of
-# the embedding table, which has no stable leaf identity to bind.)
-_CROSSBAR_CONSUMERS = ("wq", "wk", "wv", "wo", "w_kv_down", "wi", "head")
+# down-projection, the dense-MLP wi/wo, the MoE expert bank wi/wg/wo plus
+# router and shared-expert projections, and the untied LM head.  (A tied LM
+# head serves from the transposed embedding artifact that
+# ``program_model(tie_lm_head=True)`` compiles under the embedding's name.)
+_CROSSBAR_CONSUMERS = (
+    "wq", "wk", "wv", "wo", "w_kv_down", "wi", "head",
+    "wg", "router", "shared_wi", "shared_wg", "shared_wo",
+)
 
 
 def _path_names(path: Tuple[Any, ...]) -> Tuple[str, ...]:
@@ -400,16 +500,17 @@ def _matmul_leaf(path: Tuple[Any, ...], leaf: Any) -> bool:
     """Default predicate: which param leaves go onto crossbars.
 
     Allowlist of the projection names ``crossbar_linear`` actually serves
-    (attention q/k/v/o, the MLA kv down-projection, dense-MLP wi/wo, the
-    untied LM head), as 2-D matrices or 3-D scan-stacked ``(L, K, N)``.  An
-    allowlist — rather than excluding known non-matmuls — keeps stacked
+    (attention q/k/v/o, the MLA kv down-projection, dense-MLP wi/wo, MoE
+    router/experts/shared experts, the untied LM head), as 2-D matrices,
+    3-D scan-stacked ``(L, K, N)``, or 4-D expert banks ``(L, E, K, N)``.
+    An allowlist — rather than excluding known non-matmuls — keeps stacked
     per-layer *vectors* (ssm ``conv_b``, ``D_skip``: ``(L, din)`` after
     stacking, indistinguishable from a small weight matrix by shape alone)
     from being miscompiled into unusable artifacts, and avoids paying
     write-verify programming + 8x ``g_eff`` memory for leaves no crossbar
     call site consumes.  Override with ``leaf_filter`` for exotic layouts.
     """
-    if not isinstance(leaf, jnp.ndarray) or leaf.ndim not in (2, 3):
+    if not isinstance(leaf, jnp.ndarray) or leaf.ndim not in (2, 3, 4):
         return False
     if not jnp.issubdtype(leaf.dtype, jnp.floating):
         return False
@@ -435,24 +536,23 @@ def stacked_only(artifacts: Any) -> Any:
 class ProgrammedModel:
     """A pytree of ProgrammedLinear artifacts mirroring a params pytree.
 
-    Holds the compiled chips plus an identity map from the *build-time*
-    parameter leaves, so eager forwards resolve immediately; ``bind(params)``
-    pushes a temporary map for a different-but-congruent params tree — in
-    particular the tracers seen while ``jax.jit`` traces a forward pass.
+    The tree shape mirrors the params so stage subtrees can ride the layer
+    scan; ``by_name`` is the canonical path-keyed table every lookup
+    resolves through.  Nothing here references parameter *objects* — a
+    ProgrammedModel built once serves any congruent params tree (copies,
+    donated buffers, restored checkpoints) and survives every jit retrace.
     """
 
-    def __init__(self, artifacts: Any, params: Optional[Any] = None):
+    def __init__(self, artifacts: Any):
         self.artifacts = artifacts
-        self._build_map: Dict[int, ProgrammedLinear] = (
-            _id_map_of(params, artifacts) if params is not None else {}
-        )
-        self._keepalive = params  # ids stay valid while the model lives
+        self.by_name: Dict[str, ProgrammedLinear] = artifact_names(artifacts)
 
-    def bind(self, params: Any):
-        """Associate artifacts with ``params``' leaves for the dynamic scope
-        (see ``bind_artifacts``); use around jitted forwards so traced
-        weights resolve to their artifacts."""
-        return bind_artifacts(params, self.artifacts)
+    def bind(self):
+        """Bind every artifact by name for the dynamic scope (must be
+        entered at top-level model scope, e.g. around a jitted forward).
+        Pushes the precomputed ``by_name`` table directly — no per-call
+        tree reflatten in the serving hot loop."""
+        return _push_bind_map(self.by_name)
 
     def subtree(self, key: str) -> Any:
         """Artifact subtree for one top-level params key (e.g. "stage0")."""
@@ -461,47 +561,35 @@ class ProgrammedModel:
         except (KeyError, TypeError, IndexError):
             return None
 
-    def lookup(self, w: jnp.ndarray) -> Optional[ProgrammedLinear]:
-        art = active_artifact_for(w)
-        if art is not None:
-            return art
-        art = self._build_map.get(id(w))
-        if art is not None and not art.stacked and art.shape == tuple(w.shape):
+    def lookup(
+        self, name: str, shape: Optional[Tuple[int, ...]] = None
+    ) -> Optional[ProgrammedLinear]:
+        """Artifact for a canonical name, optionally shape-checked."""
+        art = self.by_name.get(name)
+        if art is not None and (shape is None or art.shape == tuple(shape)):
             return art
         return None
 
     @property
     def n_compiled(self) -> int:
-        return sum(
-            1
-            for a in jax.tree_util.tree_leaves(
-                self.artifacts, is_leaf=lambda x: isinstance(x, ProgrammedLinear)
-            )
-            if isinstance(a, ProgrammedLinear)
-        )
+        return len(self.by_name)
 
     def reports(self) -> Dict[str, ProgramReport]:
-        """Path -> write-verify report for every compiled leaf that has one."""
-        out: Dict[str, ProgramReport] = {}
-        flat, _ = jax.tree_util.tree_flatten_with_path(
-            self.artifacts, is_leaf=lambda x: isinstance(x, ProgrammedLinear)
-        )
-        for path, art in flat:
-            if isinstance(art, ProgrammedLinear) and art.report is not None:
-                out[jax.tree_util.keystr(path)] = art.report
-        return out
+        """Name -> write-verify report for every compiled leaf that has one."""
+        return {
+            name: art.report
+            for name, art in self.by_name.items()
+            if art.report is not None
+        }
 
     def repair_reports(self) -> Dict[str, Any]:
-        """Path -> spare-column ``RepairReport`` (or per-layer tuple for
+        """Name -> spare-column ``RepairReport`` (or per-layer tuple for
         stacked leaves) for every compiled leaf that was repaired."""
-        out: Dict[str, Any] = {}
-        flat, _ = jax.tree_util.tree_flatten_with_path(
-            self.artifacts, is_leaf=lambda x: isinstance(x, ProgrammedLinear)
-        )
-        for path, art in flat:
-            if isinstance(art, ProgrammedLinear) and art.repair is not None:
-                out[jax.tree_util.keystr(path)] = art.repair
-        return out
+        return {
+            name: art.repair
+            for name, art in self.by_name.items()
+            if art.repair is not None
+        }
 
 
 def program_model(
@@ -512,6 +600,7 @@ def program_model(
     *,
     fast: bool = True,
     with_report: bool = False,
+    tie_lm_head: bool = False,
     leaf_filter: Optional[Callable[[Tuple[Any, ...], Any], bool]] = None,
 ) -> ProgrammedModel:
     """Walk a param pytree and compile every matmul-shaped leaf.
@@ -519,18 +608,77 @@ def program_model(
     The whole-model programming pass: one ``program_layer`` per selected
     leaf, so an inference run (or a serving engine) works against a single
     fixed programmed chip.  ``leaf_filter(path, leaf) -> bool`` overrides
-    the default 2-D-float-non-embedding predicate.
+    the default projection-name predicate.
+
+    ``tie_lm_head=True`` additionally compiles the **transpose** of every
+    2-D ``tokens`` embedding leaf and binds it to the embedding's own name
+    — the tied LM head (``x @ tokens.T``) then serves from one artifact
+    programmed at deploy time instead of reprogramming the transpose in
+    every decode step (name-keyed binding is what makes this possible: a
+    per-call transpose has no stable object identity, but it does have a
+    name).  The (D, V) artifact shares the key with the (V, D) embedding
+    leaf; shape-checked lookup keeps the two uses apart.
     """
     pred = leaf_filter if leaf_filter is not None else _matmul_leaf
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
-    arts = [
-        program_layer(
-            leaf, spec, device, adc_cfg, fast=fast, with_report=with_report
+    arts = []
+    for path, leaf in flat:
+        action = _program_action(path, leaf, pred, tie_lm_head)
+        arts.append(
+            program_layer(
+                leaf.T if action == "transpose" else leaf,
+                spec, device, adc_cfg, fast=fast, with_report=with_report,
+            )
+            if action is not None
+            else None
         )
-        if pred(path, leaf)
-        else None
-        for path, leaf in flat
-    ]
     artifacts = jax.tree_util.tree_unflatten(treedef, arts)
-    return ProgrammedModel(artifacts, params=params)
+    return ProgrammedModel(artifacts)
+
+
+def _program_action(path, leaf, pred, tie_lm_head: bool) -> Optional[str]:
+    """What ``program_model`` does with this param leaf: "program" the leaf,
+    "transpose" it first (tied-head ``tokens`` embeddings), or None when it
+    stays digital.  A pure decision — nothing is materialized, so shape-only
+    consumers (``expected_artifact_names``) stay allocation-free."""
+    names = _path_names(path)
+    if (
+        tie_lm_head
+        and names
+        and names[-1] == "tokens"
+        and isinstance(leaf, jnp.ndarray)
+        and leaf.ndim == 2
+        and jnp.issubdtype(leaf.dtype, jnp.floating)
+    ):
+        return "transpose"
+    if pred(path, leaf):
+        return "program"
+    return None
+
+
+def expected_artifact_names(
+    params: Any,
+    *,
+    tie_lm_head: bool = False,
+    leaf_filter: Optional[Callable[[Tuple[Any, ...], Any], bool]] = None,
+) -> Dict[str, Tuple[int, ...]]:
+    """{canonical name: servable shape} ``program_model`` would compile —
+    without programming anything.
+
+    The validation counterpart of ``program_model``: a restored artifact
+    store can be cross-checked against the model it is about to serve
+    (``ServingEngine(restore_artifacts=...)`` does) so a stale or
+    mismatched store fails loudly at construction instead of silently
+    degrading every lookup to per-call programming.
+    """
+    pred = leaf_filter if leaf_filter is not None else _matmul_leaf
+    out: Dict[str, Tuple[int, ...]] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        action = _program_action(path, leaf, pred, tie_lm_head)
+        if action is not None:
+            shape = tuple(leaf.shape)
+            out[join_path(path)] = (
+                tuple(reversed(shape)) if action == "transpose" else shape
+            )
+    return out

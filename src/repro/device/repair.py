@@ -39,7 +39,7 @@ bit-identical to the unrepaired path.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -301,20 +301,45 @@ def apply_repair(g_eff_primary: jnp.ndarray, plan: Optional[RepairPlan]) -> jnp.
 
 
 def repaired_effective_cells(
-    w_codes_biased: jnp.ndarray, spec: CrossbarSpec, cfg: dm.DeviceConfig
-) -> Tuple[jnp.ndarray, Optional[RepairPlan]]:
-    """Program + repair in one pass: (repaired g_eff, plan).
+    w_codes_biased: jnp.ndarray,
+    spec: CrossbarSpec,
+    cfg: dm.DeviceConfig,
+    *,
+    with_report: bool = False,
+) -> Tuple[jnp.ndarray, Optional[RepairPlan], Optional[Any]]:
+    """Program + repair in one pass: (repaired g_eff, plan, report).
 
     Equivalent to ``effective_cell_codes(wb, spec, cfg)`` but also returns
     the plan (spare block, gather table, saliences) for callers — notably
     ``programmed.program_layer`` — that record the repair; the programming
     intermediates are shared with the planner, never recomputed.
+
+    This is the **single derivation site** for the programming
+    intermediates.  ``with_report=True`` swaps the trace-safe fixed-
+    iteration pulse loop for ``program.write_verify`` — identical stage
+    keys, so the cells are bit-identical (pinned by
+    ``test_programming_is_deterministic``) — and returns its convergence
+    ``ProgramReport`` as the third element (None otherwise).
     """
-    g_eff, target, tag, masks = dm._programmed_effective(w_codes_biased, spec, cfg)
+    if with_report:
+        from repro.device.program import write_verify
+
+        target = dm.target_cell_codes(w_codes_biased, spec)
+        tag = dm._slab_tag(w_codes_biased)
+        masks = dm.fault_masks(cfg, target.shape, tag)
+        g, report = write_verify(
+            w_codes_biased, spec, cfg, target=target, tag=tag, masks=masks
+        )
+        g_eff = dm.read_effective_codes(g, spec, cfg)
+    else:
+        g_eff, target, tag, masks = dm._programmed_effective(
+            w_codes_biased, spec, cfg
+        )
+        report = None
     plan = plan_repair(
         w_codes_biased, spec, cfg, target=target, tag=tag, primary_masks=masks
     )
-    return apply_repair(g_eff, plan), plan
+    return apply_repair(g_eff, plan), plan, report
 
 
 def repair_report(plan: Optional[RepairPlan]) -> Optional[RepairReport]:

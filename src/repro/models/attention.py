@@ -205,9 +205,9 @@ def attention_block(
     window = cfg.sliding_window if kind == "attn_local" else 0
     scale = cfg.attn_scale if cfg.attn_scale else dh**-0.5
 
-    q = crossbar_linear(x, params["wq"]).reshape(B, S, H, dh)
-    k = crossbar_linear(x, params["wk"]).reshape(B, S, KV, dh)
-    v = crossbar_linear(x, params["wv"]).reshape(B, S, KV, dh)
+    q = crossbar_linear(x, params["wq"], name="wq").reshape(B, S, H, dh)
+    k = crossbar_linear(x, params["wk"], name="wk").reshape(B, S, KV, dh)
+    v = crossbar_linear(x, params["wv"], name="wv").reshape(B, S, KV, dh)
     q = shard(q, "batch", None, "heads", None)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
@@ -229,7 +229,7 @@ def attention_block(
         )
         new_cache = {"k": kc, "v": vc}
 
-    y = crossbar_linear(out.reshape(B, S, H * dh), params["wo"])
+    y = crossbar_linear(out.reshape(B, S, H * dh), params["wo"], name="wo")
     return shard(y, "batch", None, None), new_cache
 
 
@@ -254,12 +254,12 @@ def _mla_block(params, x, cfg: ModelConfig, positions, cache, decode_pos):
     H, dh, rope_d, lora = cfg.n_heads, cfg.head_dim, cfg.qk_rope_dim, cfg.kv_lora_rank
     scale = (dh + rope_d) ** -0.5
 
-    q = crossbar_linear(x, params["wq"]).reshape(B, S, H, dh + rope_d)
+    q = crossbar_linear(x, params["wq"], name="wq").reshape(B, S, H, dh + rope_d)
     q = shard(q, "batch", None, "heads", None)
     q_nope, q_rope = q[..., :dh], q[..., dh:]
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
 
-    kvd = crossbar_linear(x, params["w_kv_down"])  # (B, S, lora + rope)
+    kvd = crossbar_linear(x, params["w_kv_down"], name="w_kv_down")  # (B, S, lora + rope)
     latent, k_rope = kvd[..., :lora], kvd[..., lora:]
     k_rope = apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)[..., 0, :]
 
@@ -335,5 +335,5 @@ def _mla_block(params, x, cfg: ModelConfig, positions, cache, decode_pos):
         _, outs = jax.lax.scan(body, None, (qa, qr, jnp.arange(nc)))
         out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
 
-    y = crossbar_linear(out.reshape(B, S, H * dh).astype(x.dtype), params["wo"])
+    y = crossbar_linear(out.reshape(B, S, H * dh).astype(x.dtype), params["wo"], name="wo")
     return shard(y, "batch", None, None), new_cache

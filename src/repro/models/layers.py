@@ -261,7 +261,7 @@ def mlp(params, x: jnp.ndarray, kind: str) -> jnp.ndarray:
     # wi/wo route through crossbar_linear so an enabled CrossbarMode (and
     # the programmed/repaired artifact path) covers the FFN, not just the
     # attention projections; with the mode disabled this is a plain matmul
-    h = crossbar_linear(x, params["wi"])
+    h = crossbar_linear(x, params["wi"], name="wi")
     h = shard(h, "batch", None, "mlp")
     if kind in ("swiglu", "geglu"):
         u, g = jnp.split(h, 2, axis=-1)
@@ -273,7 +273,7 @@ def mlp(params, x: jnp.ndarray, kind: str) -> jnp.ndarray:
         h = jnp.square(jax.nn.relu(h))
     else:
         raise ValueError(kind)
-    y = crossbar_linear(h, params["wo"])
+    y = crossbar_linear(h, params["wo"], name="wo")
     return shard(y, "batch", None, None)
 
 
@@ -313,19 +313,23 @@ def embed(params, tokens: jnp.ndarray, scale: bool, d_model: int) -> jnp.ndarray
     return x
 
 
-def lm_head(table_or_w, x: jnp.ndarray, tied: bool, cap: float = 0.0) -> jnp.ndarray:
+def lm_head(
+    table_or_w,
+    x: jnp.ndarray,
+    tied: bool,
+    cap: float = 0.0,
+    name: Optional[str] = None,
+) -> jnp.ndarray:
     # the LM head is the model's largest single projection; routing it
     # through crossbar_linear completes full-model crossbar coverage.  A
-    # *tied* head multiplies a per-call transpose of the embedding table —
-    # no stable leaf identity to bind a programmed artifact to — so putting
-    # it on the crossbar would rerun the whole programming pipeline (fault
-    # draw, write-verify, repair planning) inside every decode step,
-    # breaking the engine's program-once guarantee; tied heads therefore
-    # stay digital (ROADMAP: name-keyed artifact binding would lift this)
-    if tied:
-        logits = x @ table_or_w.T
-    else:
-        logits = crossbar_linear(x, table_or_w)
+    # *tied* head multiplies a transpose of the embedding table — the
+    # transpose view has no stable object identity, but it has a stable
+    # *name*, so ``program_model(tie_lm_head=True)`` compiles the transpose
+    # once at deploy time and name-keyed lookup serves it here; without an
+    # artifact the per-call crossbar path programs the transpose like any
+    # other unprogrammed projection.
+    w = table_or_w.T if tied else table_or_w
+    logits = crossbar_linear(x, w, name=name)
     logits = shard(logits, "batch", None, "vocab")
     if cap:
         logits = softcap(logits.astype(jnp.float32), cap)
@@ -339,11 +343,14 @@ def lm_head(table_or_w, x: jnp.ndarray, tied: bool, cap: float = 0.0) -> jnp.nda
 @dataclasses.dataclass(frozen=True)
 class CrossbarMode:
     """When enabled, every weight-bearing matmul — attention projections,
-    dense-MLP wi/wo and the (untied) LM head — runs through the Newton
-    bit-sliced crossbar datapath (Pallas kernel; interpret-mode on CPU)
-    instead of XLA matmul; activation-activation products (attention
-    scores/values) and tied LM heads (a per-call transpose, see ``lm_head``)
-    stay digital (tests/test_models_smoke.py pins the coverage).
+    dense-MLP wi/wo, the MoE router/experts/shared experts, and the LM head
+    (tied or untied; a tied head runs the embedding transpose, see
+    ``lm_head``) — runs through the Newton bit-sliced crossbar datapath
+    (Pallas kernel; interpret-mode on CPU) instead of XLA matmul; only
+    activation-activation products (attention scores/values) stay digital
+    (tests/test_models_smoke.py pins the coverage on dense and MoE
+    configs).  Exception: ``shard_map`` expert/TP bodies see rank-local
+    weight shards and stay digital for now — loudly (``note_crossbar_gap``).
 
     ``device`` (a ``repro.device.DeviceConfig``) additionally routes the
     matmul through the memristor non-ideality pipeline — stuck cells,
@@ -351,18 +358,79 @@ class CrossbarMode:
     under realistic devices is one context manager away.
 
     ``programmed`` (a ``repro.device.programmed.ProgrammedModel``) is the
-    program-once steady-state path: projections whose weight matches a
+    program-once steady-state path: projections whose *name* resolves a
     compiled artifact skip quantization-scale reductions, fault redraw and
-    write-verify entirely and serve from the fixed programmed chip; weights
-    without an artifact fall back to the program-every-call path above."""
+    write-verify entirely and serve from the fixed programmed chip; names
+    without an artifact fall back to the program-every-call path above —
+    and, because a silent fallback misreports crossbar coverage and skips
+    the device model, every such miss is counted
+    (``crossbar_misses()``) and ``strict=True`` turns it into an error."""
 
     enabled: bool = False
     fast: bool = True  # fused exact kernel (full-resolution ADC)
     device: Optional[Any] = None  # repro.device.DeviceConfig
     programmed: Optional[Any] = None  # repro.device.programmed.ProgrammedModel
+    strict: bool = False  # raise on artifact miss when ``programmed`` is set
 
 
 _CROSSBAR = CrossbarMode()
+
+# Artifact-miss accounting: every crossbar_linear call that falls back to
+# per-call programming *while a ProgrammedModel is active* records the name
+# it failed to resolve.  Misses are recorded at trace time (a cached jit
+# executable traces once), so "zero misses over a traced forward" is the
+# invariant tests assert.  Stored as {name: count} — bounded by the number
+# of distinct projection names, never by call volume, so a long-running
+# eager loop with a persistent miss cannot grow memory.
+_MISSES = threading.local()  # .counts: dict[str, int], insertion-ordered
+
+
+def _record_crossbar_miss(name: str) -> None:
+    counts = getattr(_MISSES, "counts", None)
+    if counts is None:
+        counts = _MISSES.counts = {}
+    counts[name] = counts.get(name, 0) + 1
+
+
+def crossbar_misses() -> Tuple[str, ...]:
+    """Distinct names that resolved no artifact under an active
+    ProgrammedModel, in first-miss order (``crossbar_miss_counts`` for
+    per-name totals)."""
+    return tuple(getattr(_MISSES, "counts", {}))
+
+
+def crossbar_miss_counts() -> Dict[str, int]:
+    """{name: times missed} under an active ProgrammedModel."""
+    return dict(getattr(_MISSES, "counts", {}))
+
+
+def reset_crossbar_misses() -> None:
+    _MISSES.counts = {}
+
+
+def note_crossbar_gap(name: str) -> None:
+    """Record that a weight-bearing computation stayed digital under an
+    active ProgrammedModel.
+
+    For paths ``crossbar_linear`` cannot serve yet — the ``shard_map``
+    expert bodies see rank-local weight shards that no global artifact
+    matches (ROADMAP: per-rank artifact sharding) — the coverage gap must
+    still be *loud*: it counts as a miss and raises under strict mode,
+    never silently misreporting crossbar coverage.  No-op when no
+    ProgrammedModel is active (digital/per-call runs are not gaps).
+    """
+    if not _CROSSBAR.enabled or _CROSSBAR.programmed is None:
+        return
+    from repro.device import programmed as prog
+
+    key = prog.scoped_name(name)
+    _record_crossbar_miss(key)
+    if _CROSSBAR.strict:
+        raise LookupError(
+            f"crossbar coverage gap: {key!r} runs digitally inside a mesh-"
+            "sharded path (rank-local weight shards cannot resolve global "
+            "artifacts); shard the artifacts per rank or drop strict mode."
+        )
 
 
 def current_crossbar() -> CrossbarMode:
@@ -381,32 +449,88 @@ def crossbar_mode(mode: CrossbarMode):
         _CROSSBAR = prev
 
 
-def crossbar_linear(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+def _resolve_crossbar_artifact(name: str, shape) -> Tuple[Optional[str], Optional[Any]]:
+    """(canonical key, artifact-or-None) for a scoped name + exact shape —
+    the single derivation site for the key, shared by the hit and miss
+    paths of ``crossbar_linear``.
+
+    Resolution order: the dynamic ``bind_artifacts`` stack (innermost wins
+    — this is where scan-sliced per-layer and per-expert bindings live),
+    then the active ``CrossbarMode.programmed`` model's canonical
+    ``by_name`` table.
+    """
+    from repro.device import programmed as prog
+
+    key = prog.scoped_name(name)
+    art = prog.active_artifact_for(key, tuple(shape))
+    if art is None and _CROSSBAR.programmed is not None:
+        art = _CROSSBAR.programmed.lookup(key, tuple(shape))
+    return key, art
+
+
+def lookup_crossbar_artifact(name: str, shape) -> Optional[Any]:
+    """Resolve a programmed artifact by scoped name + exact shape (see
+    ``_resolve_crossbar_artifact``).  Returns None when the mode is
+    disabled or nothing matches.  ``shape`` may be a still-stacked shape
+    (the MoE expert path fetches its ``(E, K, N)`` bank this way before
+    slicing it)."""
+    if not _CROSSBAR.enabled:
+        return None
+    return _resolve_crossbar_artifact(name, shape)[1]
+
+
+def crossbar_linear(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    name: Optional[str] = None,
+    *,
+    strict: Optional[bool] = None,
+) -> jnp.ndarray:
     """y = x @ w, optionally through the crossbar datapath (W16A16).
 
     Activations are offset-encoded (crossbar inputs are unsigned; the offset
     is corrected digitally — see ``core.crossbar.signed_vmm_limbs``).
 
-    If a programmed artifact is bound for ``w`` (via
-    ``CrossbarMode.programmed`` or an enclosing ``ProgrammedModel.bind``),
-    the steady-state program-once path serves the call: quantize input ->
-    Pallas kernel -> dequantize, with scales / effective cells / correction
-    column sums all precomputed at programming time.  Otherwise the weight
-    is programmed on the fly (the original per-call pipeline)."""
+    ``name`` is the call site's local parameter name (e.g. "wq"); joined
+    with the ambient ``device.programmed.name_scope`` stack it forms the
+    canonical artifact key.  If a programmed artifact resolves for that key
+    (via an enclosing ``bind_artifacts`` scope or
+    ``CrossbarMode.programmed``), the steady-state program-once path serves
+    the call: quantize input -> Pallas kernel -> dequantize, with scales /
+    effective cells / correction column sums all precomputed at programming
+    time.  Otherwise the weight is programmed on the fly (the per-call
+    pipeline) — and if a ProgrammedModel *is* active, that fallback is a
+    **miss**: it is counted (``crossbar_misses()``), and ``strict=True``
+    (per call, or via ``CrossbarMode.strict``) raises instead of silently
+    serving digital-grade results the operator believes are programmed."""
     if not _CROSSBAR.enabled:
         return x @ w
-    from repro.device import programmed as prog
     from repro.kernels import ops as kops
 
-    if _CROSSBAR.programmed is not None:
-        art = _CROSSBAR.programmed.lookup(w)  # bind-stack first, then build map
-    else:
-        art = prog.active_artifact_for(w)
+    key = art = None
+    if name is not None:
+        key, art = _resolve_crossbar_artifact(name, w.shape)
     if art is not None:
+        from repro.device import programmed as prog
+
         # x passed as-is: programmed_linear offset-encodes in x.dtype before
         # casting, mirroring the fallback below op-for-op (pre-casting bf16
         # activations here would break bit-identity between the two paths)
         return prog.programmed_linear(x, art).astype(x.dtype)
+
+    if _CROSSBAR.programmed is not None:
+        if key is None:
+            key = f"<unnamed {tuple(int(d) for d in w.shape)}>"
+        _record_crossbar_miss(key)
+        strict_now = _CROSSBAR.strict if strict is None else strict
+        if strict_now:
+            raise LookupError(
+                f"crossbar artifact miss: {key!r} (shape "
+                f"{tuple(int(d) for d in w.shape)}) resolves no programmed "
+                "artifact — the call would silently fall back to per-call "
+                "programming.  Program the leaf (program_model leaf_filter / "
+                "tie_lm_head), fix the call-site name, or drop strict mode."
+            )
 
     shift = jnp.min(x)
     xs = (x - shift).astype(jnp.float32)  # non-negative

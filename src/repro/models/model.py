@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, StageSpec
+from repro.device.programmed import bind_artifacts, name_scope
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
@@ -107,32 +108,37 @@ def _apply_block(
 ):
     h = rms_norm(x, params["norm1"], cfg.norm_eps)
     new_entry = None
-    if kind.startswith("attn"):
-        h, new_entry = attn_mod.attention_block(
-            params["mixer"], h, cfg, kind, positions, cache_entry, decode_pos
-        )
-    elif kind == "mamba":
-        h, new_entry = ssm_mod.mamba_block(
-            params["mixer"], h, cfg, cache_entry, decode=decode_pos is not None
-        )
-    elif kind == "mlstm":
-        h, new_entry = xlstm_mod.mlstm_block(
-            params["mixer"], h, cfg, cache_entry, decode=decode_pos is not None
-        )
-    elif kind == "slstm":
-        h, new_entry = xlstm_mod.slstm_block(
-            params["mixer"], h, cfg, cache_entry, decode=decode_pos is not None
-        )
+    # name_scope pushes the param path components ("mixer"/"ffn", with
+    # "stage{i}"/"b{i}" pushed by the callers) so crossbar_linear call sites
+    # can address their programmed artifacts by canonical joined name
+    with name_scope("mixer"):
+        if kind.startswith("attn"):
+            h, new_entry = attn_mod.attention_block(
+                params["mixer"], h, cfg, kind, positions, cache_entry, decode_pos
+            )
+        elif kind == "mamba":
+            h, new_entry = ssm_mod.mamba_block(
+                params["mixer"], h, cfg, cache_entry, decode=decode_pos is not None
+            )
+        elif kind == "mlstm":
+            h, new_entry = xlstm_mod.mlstm_block(
+                params["mixer"], h, cfg, cache_entry, decode=decode_pos is not None
+            )
+        elif kind == "slstm":
+            h, new_entry = xlstm_mod.slstm_block(
+                params["mixer"], h, cfg, cache_entry, decode=decode_pos is not None
+            )
     if cfg.post_norm:
         h = rms_norm(h, params["norm1_post"], cfg.norm_eps)
     x = x + h
 
     if "norm2" in params:
         h = rms_norm(x, params["norm2"], cfg.norm_eps)
-        if use_moe:
-            h = moe_mod.moe_ffn(params["ffn"], h, cfg)
-        else:
-            h = mlp(params["ffn"], h, cfg.mlp_kind)
+        with name_scope("ffn"):
+            if use_moe:
+                h = moe_mod.moe_ffn(params["ffn"], h, cfg)
+            else:
+                h = mlp(params["ffn"], h, cfg.mlp_kind)
         if cfg.post_norm:
             h = rms_norm(h, params["norm2_post"], cfg.norm_eps)
         x = x + h
@@ -265,17 +271,18 @@ def _run_stage(
         h = carry
         lp, cache_layer, ap = xs
         # bind this layer's programmed-crossbar artifacts (scan-sliced in
-        # lockstep with the params) so crossbar_linear serves steady-state
-        from repro.device.programmed import bind_artifacts
-
-        with bind_artifacts(lp, ap):
+        # lockstep with the params) so crossbar_linear serves steady-state;
+        # keys are joined under the caller's "stage{i}" name scope
+        with bind_artifacts(ap):
             new_entries = {}
             for i, kind in enumerate(spec.kinds):
                 entry = cache_layer[f"b{i}"] if cache_layer is not None else None
-                h, ne = _apply_block(
-                    lp[f"b{i}"], h, cfg, kind, bool(spec.moe[i]) and cfg.moe_experts > 0,
-                    positions, entry, decode_pos,
-                )
+                with name_scope(f"b{i}"):
+                    h, ne = _apply_block(
+                        lp[f"b{i}"], h, cfg, kind,
+                        bool(spec.moe[i]) and cfg.moe_experts > 0,
+                        positions, entry, decode_pos,
+                    )
                 if cache_layer is not None:
                     new_entries[f"b{i}"] = ne
             if decode_pos is None and h.shape[1] > 1:
@@ -319,8 +326,13 @@ def _embed_input(params, cfg: ModelConfig, inp) -> jnp.ndarray:
 def _logits(params, cfg: ModelConfig, x) -> jnp.ndarray:
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     if cfg.tie_embeddings and cfg.frontend == "token":
-        return lm_head(params["embed"]["tokens"], x, tied=True, cap=cfg.logit_softcap)
-    return lm_head(params["head"], x, tied=False, cap=cfg.logit_softcap)
+        # the tied head serves from the transposed artifact that
+        # program_model(tie_lm_head=True) binds under the embedding's name
+        return lm_head(
+            params["embed"]["tokens"], x, tied=True, cap=cfg.logit_softcap,
+            name="embed/tokens",
+        )
+    return lm_head(params["head"], x, tied=False, cap=cfg.logit_softcap, name="head")
 
 
 def forward(params, cfg: ModelConfig, inp, positions=None) -> jnp.ndarray:
@@ -330,10 +342,11 @@ def forward(params, cfg: ModelConfig, inp, positions=None) -> jnp.ndarray:
     if positions is None:
         positions = jnp.arange(S)
     for si, spec in enumerate(cfg.stages):
-        x, _ = _run_stage(
-            params[f"stage{si}"], x, cfg, spec, positions, remat=cfg.remat,
-            artifacts_stage=_stage_artifacts(si),
-        )
+        with name_scope(f"stage{si}"):
+            x, _ = _run_stage(
+                params[f"stage{si}"], x, cfg, spec, positions, remat=cfg.remat,
+                artifacts_stage=_stage_artifacts(si),
+            )
     return _logits(params, cfg, x)
 
 
@@ -351,10 +364,11 @@ def loss_fn(params, cfg: ModelConfig, batch) -> jnp.ndarray:
     S = x.shape[1]
     positions = jnp.arange(S)
     for si, spec in enumerate(cfg.stages):
-        x, _ = _run_stage(
-            params[f"stage{si}"], x, cfg, spec, positions, remat=cfg.remat,
-            artifacts_stage=_stage_artifacts(si),
-        )
+        with name_scope(f"stage{si}"):
+            x, _ = _run_stage(
+                params[f"stage{si}"], x, cfg, spec, positions, remat=cfg.remat,
+                artifacts_stage=_stage_artifacts(si),
+            )
     targets = batch["targets"]
     mask = batch.get("mask", jnp.ones(targets.shape, jnp.float32))
 
@@ -393,10 +407,11 @@ def prefill(params, cfg: ModelConfig, inp, cache):
     positions = jnp.arange(S)
     new_cache = []
     for si, spec in enumerate(cfg.stages):
-        x, nc = _run_stage(
-            params[f"stage{si}"], x, cfg, spec, positions, cache_stage=cache[si],
-            remat=False, artifacts_stage=_stage_artifacts(si),
-        )
+        with name_scope(f"stage{si}"):
+            x, nc = _run_stage(
+                params[f"stage{si}"], x, cfg, spec, positions, cache_stage=cache[si],
+                remat=False, artifacts_stage=_stage_artifacts(si),
+            )
         new_cache.append(nc)
     logits = _logits(params, cfg, x[:, -1:])
     return logits[:, 0], new_cache
@@ -410,10 +425,11 @@ def decode_step(params, cfg: ModelConfig, inp, pos, cache):
     positions = pos[:, None] if pos.ndim == 1 else jnp.asarray([0]) + pos
     new_cache = []
     for si, spec in enumerate(cfg.stages):
-        x, nc = _run_stage(
-            params[f"stage{si}"], x, cfg, spec, positions, cache_stage=cache[si],
-            decode_pos=pos, remat=False, artifacts_stage=_stage_artifacts(si),
-        )
+        with name_scope(f"stage{si}"):
+            x, nc = _run_stage(
+                params[f"stage{si}"], x, cfg, spec, positions, cache_stage=cache[si],
+                decode_pos=pos, remat=False, artifacts_stage=_stage_artifacts(si),
+            )
         new_cache.append(nc)
     logits = _logits(params, cfg, x)
     return logits[:, 0], new_cache

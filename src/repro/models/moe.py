@@ -28,7 +28,15 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import Init, current_mesh, shard
+from repro.models.layers import (
+    Init,
+    crossbar_linear,
+    current_crossbar,
+    current_mesh,
+    lookup_crossbar_artifact,
+    note_crossbar_gap,
+    shard,
+)
 
 
 def init_moe(ini: Init, cfg: ModelConfig):
@@ -68,12 +76,62 @@ def _act(u, g, kind: str):
     return jnp.square(jax.nn.relu(u))
 
 
-def _expert_ffn(h: jnp.ndarray, wi, wg, wo, kind: str) -> jnp.ndarray:
-    """h: (E, C, D); wi/wg: (E, D, F); wo: (E, F, D)."""
-    u = jnp.einsum("ecd,edf->ecf", h, wi)
-    g = jnp.einsum("ecd,edf->ecf", h, wg) if wg is not None else None
-    a = _act(u, g, kind)
-    return jnp.einsum("ecf,efd->ecd", a, wo)
+def _expert_ffn(h: jnp.ndarray, wi, wg, wo, kind: str, crossbar_ok: bool = True) -> jnp.ndarray:
+    """h: (E, C, D); wi/wg: (E, D, F); wo: (E, F, D).
+
+    ``crossbar_ok=False`` marks calls from inside ``shard_map`` bodies,
+    where the weights are rank-local shards that no global artifact can
+    match — those stay digital (pre-crossbar behavior), but the coverage
+    gap is recorded loudly (``note_crossbar_gap``: counted miss, fatal
+    under strict) instead of silently misreporting crossbar coverage.
+    """
+    if not current_crossbar().enabled or not crossbar_ok:
+        if not crossbar_ok:
+            for n, w in (("wi", wi), ("wg", wg), ("wo", wo)):
+                if w is not None:
+                    note_crossbar_gap(n)
+        u = jnp.einsum("ecd,edf->ecf", h, wi)
+        g = jnp.einsum("ecd,edf->ecf", h, wg) if wg is not None else None
+        a = _act(u, g, kind)
+        return jnp.einsum("ecf,efd->ecd", a, wo)
+    return _expert_ffn_crossbar(h, wi, wg, wo, kind)
+
+
+def _expert_ffn_crossbar(h: jnp.ndarray, wi, wg, wo, kind: str) -> jnp.ndarray:
+    """The expert FFN on the crossbar datapath: one scan over experts.
+
+    Each expert's (D, F) / (F, D) projection is an independent weight slab
+    and maps onto its own crossbars, so the batched einsum decomposes into
+    per-expert ``crossbar_linear`` calls — HLO size stays E-independent via
+    ``lax.scan``.  When expert-stacked programmed artifacts are bound for
+    this layer (the ``(E, K, N)`` banks ``program_layer`` compiles from 4-D
+    ``(L, E, K, N)`` leaves, layer-sliced by the stage scan), the scan
+    slices them per expert and rebinds, so every expert serves steady-state
+    from its own programmed chip; otherwise the per-call pipeline programs
+    each expert slice on the fly, exactly like any other unprogrammed
+    projection.
+    """
+    from repro.device.programmed import bind_artifacts
+
+    arts = {}
+    for n, w in (("wi", wi), ("wg", wg), ("wo", wo)):
+        if w is None:
+            continue
+        art = lookup_crossbar_artifact(n, w.shape)  # expert-stacked (E, K, N)
+        if art is not None:
+            arts[n] = art
+
+    def body(carry, xs):
+        he, wie, wge, woe, arte = xs
+        with bind_artifacts(arte):
+            u = crossbar_linear(he, wie, name="wi")
+            g = crossbar_linear(he, wge, name="wg") if wge is not None else None
+            a = _act(u, g, kind)
+            ye = crossbar_linear(a, woe, name="wo")
+        return carry, ye
+
+    _, y = jax.lax.scan(body, 0, (h, wi, wg, wo, arts))
+    return y
 
 
 def _dispatch_compute(
@@ -86,6 +144,7 @@ def _dispatch_compute(
     lo: jnp.ndarray,  # first global expert id owned locally
     capacity: int,
     mlp_kind: str,
+    crossbar_ok: bool = True,
 ) -> jnp.ndarray:
     """Capacity-bounded dispatch -> expert FFN -> weighted combine.
 
@@ -118,14 +177,26 @@ def _dispatch_compute(
         .set(flat_gate[order] * keep.astype(flat_gate.dtype))
     )
     buf = xf[tok_slot[:n_slots]].reshape(E_loc, capacity, -1)
-    out = _expert_ffn(buf, wi, wg, wo, mlp_kind)
+    out = _expert_ffn(buf, wi, wg, wo, mlp_kind, crossbar_ok=crossbar_ok)
     contrib = out.reshape(n_slots, -1) * gate_slot[:n_slots, None].astype(out.dtype)
     y = jnp.zeros_like(xf).at[tok_slot[:n_slots]].add(contrib.astype(xf.dtype))
     return y
 
 
-def _route(x: jnp.ndarray, router_w: jnp.ndarray, cfg: ModelConfig):
-    logits = (x @ router_w.astype(x.dtype)).astype(jnp.float32)
+def _route(x: jnp.ndarray, router_w: jnp.ndarray, cfg: ModelConfig,
+           crossbar_ok: bool = True):
+    # the router is a weight-bearing projection like any other: under an
+    # enabled CrossbarMode it runs on the crossbar datapath (programmed or
+    # per-call), so routing decisions are made from the analog logits the
+    # deployed chip would actually produce.  Inside shard_map bodies it
+    # stays digital (crossbar_ok=False) and the gap is recorded loudly.
+    if crossbar_ok:
+        logits = crossbar_linear(x, router_w.astype(x.dtype), name="router").astype(
+            jnp.float32
+        )
+    else:
+        note_crossbar_gap("router")
+        logits = (x @ router_w.astype(x.dtype)).astype(jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)
     gates, idx = jax.lax.top_k(probs, cfg.moe_top_k)
     gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
@@ -182,7 +253,7 @@ def _moe_alltoall(params, x, cfg: ModelConfig, mesh, batch_axes):
     def body(xl, rw, wi_l, wg_l, wo_l):
         Bl, Sl, _ = xl.shape
         xf = xl.reshape(-1, D)
-        idx, gates, _ = _route(xl, rw, cfg)
+        idx, gates, _ = _route(xl, rw, cfg, crossbar_ok=False)
         tok_slot, gate_slot = _dispatch_indices(
             idx.reshape(-1, cfg.moe_top_k), gates.reshape(-1, cfg.moe_top_k), E, cap
         )
@@ -193,7 +264,7 @@ def _moe_alltoall(params, x, cfg: ModelConfig, mesh, batch_axes):
         # now (n_ranks * E_loc * cap, D) = this rank's experts, all sources
         h = buf.reshape(n_ranks, E_loc, cap, D).transpose(1, 0, 2, 3)
         h = h.reshape(E_loc, n_ranks * cap, D)
-        out = _expert_ffn(h, wi_l, wg_l, wo_l, cfg.mlp_kind)
+        out = _expert_ffn(h, wi_l, wg_l, wo_l, cfg.mlp_kind, crossbar_ok=False)
         out = out.reshape(E_loc, n_ranks, cap, D).transpose(1, 0, 2, 3)
         out = out.reshape(n_ranks, E_loc * cap, D)
         out = jax.lax.all_to_all(out, "model", split_axis=0, concat_axis=0, tiled=True)
@@ -233,6 +304,12 @@ def _moe_expert_tp(params, x, cfg: ModelConfig, mesh, batch_axes):
     def body(xl, rw_l, wi_l, wg_l, wo_l):
         # xl: (B_loc, S, D/mr); rw_l: (D/mr, E); wi_l/wg_l: (E_dp, D/mr, F);
         # wo_l: (E_dp, F/mr, D)
+        # every projection here contracts over a mesh-sharded dim, so the
+        # weights are rank-local shards no global artifact matches: the
+        # whole body stays digital, and under a ProgrammedModel that
+        # coverage gap is recorded loudly (counted miss, fatal in strict)
+        for gap in ("router", "wi", "wo") + (() if wg_l is None else ("wg",)):
+            note_crossbar_gap(gap)
         Bl, Sl, Dl = xl.shape
         xf = xl.reshape(-1, Dl)
         logits = jax.lax.psum(
@@ -342,7 +419,7 @@ def moe_ffn(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
 
         def body(xl, rw, wi_l, wg_l, wo_l):
             Bl, Sl, _ = xl.shape
-            idx, gates, _ = _route(xl, rw, cfg)
+            idx, gates, _ = _route(xl, rw, cfg, crossbar_ok=False)
             rank = jax.lax.axis_index("model")
             lo = rank.astype(jnp.int32) * (E // model_size)
             y = _dispatch_compute(
@@ -355,6 +432,7 @@ def moe_ffn(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
                 lo,
                 cap,
                 cfg.mlp_kind,
+                crossbar_ok=False,  # rank-local expert shards, see _expert_ffn
             ).reshape(Bl, Sl, D)
             return jax.lax.psum(y, "model")
 
@@ -374,13 +452,17 @@ def moe_ffn(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
             xs = shard(x, "batch", "act_seq", None)
         else:
             xs = x
-        u = xs @ params["shared_wi"]
-        g = xs @ params["shared_wg"] if "shared_wg" in params else None
+        u = crossbar_linear(xs, params["shared_wi"], name="shared_wi")
+        g = (
+            crossbar_linear(xs, params["shared_wg"], name="shared_wg")
+            if "shared_wg" in params
+            else None
+        )
         if cfg.moe_dispatch != "alltoall":
             u = shard(u, "batch", None, "mlp")
             g = shard(g, "batch", None, "mlp") if g is not None else None
         h = _act(u, g, cfg.mlp_kind)
-        y = y + h @ params["shared_wo"]
+        y = y + crossbar_linear(h, params["shared_wo"], name="shared_wo")
     if cfg.moe_dispatch == "alltoall":
         return shard(y, "batch", "act_seq", None)
     return shard(y, "batch", None, None)

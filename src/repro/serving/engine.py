@@ -19,9 +19,18 @@ at construction (``repro.device.programmed.program_model``) — the paper's
 program-once premise as a serving feature.  Every prefill/decode then runs
 the steady-state artifact path inside the jitted step functions: one fixed
 noisy chip across the whole engine lifetime, no per-call reprogramming.
-``spare_cols=`` exposes the fault-aware spare-column repair budget
-(``device.repair``) at deploy time; ``repair_reports()`` summarizes what
-the planner remapped.
+Artifacts are name-keyed, so MoE expert banks and tied LM heads serve from
+the crossbar too (the tied head from a transpose programmed once at
+construction).  ``spare_cols=`` exposes the fault-aware spare-column repair
+budget (``device.repair``) at deploy time; ``repair_reports()`` summarizes
+what the planner remapped.
+
+Persistence: ``save_artifacts(dir)`` writes the programmed chip —
+effective cells, frozen scales, write-verify reports, spare blocks and
+gather tables — through ``repro.checkpoint``; a later
+``ServingEngine(..., restore_artifacts=dir)`` restores the *same* chip
+bit-for-bit and skips reprogramming entirely (restart latency is file I/O,
+not write-verify).
 """
 from __future__ import annotations
 
@@ -67,6 +76,7 @@ class ServingEngine:
         seed: int = 0,
         crossbar: Optional[CrossbarMode] = None,
         spare_cols: Optional[int] = None,
+        restore_artifacts: Optional[str] = None,
     ):
         self.cfg = cfg
         self.params = params
@@ -74,7 +84,7 @@ class ServingEngine:
         self.max_seq = max_seq
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
-        self.crossbar = self._program_crossbars(crossbar, spare_cols)
+        self.crossbar = self._program_crossbars(crossbar, spare_cols, restore_artifacts)
         self.cache = model_lib.init_cache(cfg, max_batch, max_seq, dtype=jnp.float32)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.pos = np.zeros(max_batch, np.int32)  # position of next write
@@ -83,14 +93,17 @@ class ServingEngine:
         self._rid = itertools.count()
         self._decode = jax.jit(
             lambda p, t, pos, c: self._with_crossbar(
-                p, lambda: model_lib.decode_step(p, self.cfg, t, pos, c)
+                lambda: model_lib.decode_step(p, self.cfg, t, pos, c)
             )
         )
         self._prefills: Dict[int, object] = {}
 
     # ------------------------------------------------------------------
     def _program_crossbars(
-        self, crossbar: Optional[CrossbarMode], spare_cols: Optional[int] = None
+        self,
+        crossbar: Optional[CrossbarMode],
+        spare_cols: Optional[int] = None,
+        restore_artifacts: Optional[str] = None,
     ):
         """Program-once compilation of the model's weights (deploy time).
 
@@ -104,7 +117,57 @@ class ServingEngine:
         spare-column repair budget at deploy time: the fault-aware planner
         (``device.repair``) then remaps the worst stuck-cell columns of
         every projection into programmed spares before serving begins.
+
+        ``restore_artifacts`` restores a previously ``save_artifacts``-ed
+        programmed chip instead of reprogramming: the name-keyed artifact
+        store is loaded bit-for-bit (fault fields, write-verify reports,
+        repair tables included) and no ``program_layer`` call runs.
         """
+        if restore_artifacts is not None:
+            if crossbar is None or not crossbar.enabled:
+                raise ValueError(
+                    "restore_artifacts= needs crossbar serving enabled "
+                    "(pass crossbar=CrossbarMode(enabled=True, ...))"
+                )
+            if crossbar.programmed is not None:
+                raise ValueError(
+                    "restore_artifacts= with prebuilt CrossbarMode.programmed "
+                    "artifacts: pick one source of truth"
+                )
+            if spare_cols is not None:
+                # 0 included: an explicit disable can no more be applied to
+                # a baked chip than a new budget can — silently serving the
+                # repaired artifacts would ignore the operator's override
+                raise ValueError(
+                    "spare_cols= cannot rebudget a restored chip (not even "
+                    "to 0): the repair plan was baked in when the artifacts "
+                    "were programmed — reprogram with the desired budget"
+                )
+            from repro.checkpoint import restore_programmed
+            from repro.device.programmed import expected_artifact_names
+
+            prog = restore_programmed(restore_artifacts)
+            # a stale or mismatched store would resolve no artifacts and
+            # silently degrade every projection to per-call reprogramming —
+            # the exact silent fallback this engine exists to prevent, so
+            # cross-check the store against what this model would program
+            expected = expected_artifact_names(
+                self.params,
+                tie_lm_head=(self.cfg.tie_embeddings and self.cfg.frontend == "token"),
+            )
+            bad = sorted(
+                name for name, shape in expected.items()
+                if prog.lookup(name, shape) is None
+            )
+            if bad:
+                raise ValueError(
+                    f"restored artifact store at {restore_artifacts!r} does not "
+                    f"match this model: {len(bad)}/{len(expected)} projections "
+                    f"missing or shape-mismatched ({', '.join(bad[:5])}"
+                    + (", ..." if len(bad) > 5 else "")
+                    + ") — was it saved from a different model/config?"
+                )
+            return dataclasses.replace(crossbar, programmed=prog)
         # spare_cols=0 means "no repair" and is a no-op wherever repair could
         # not happen anyway; a *positive* budget that cannot take effect is a
         # misconfiguration — silently serving unrepaired while the operator
@@ -138,8 +201,27 @@ class ServingEngine:
                 crossbar = dataclasses.replace(crossbar, device=device)
         from repro.device.programmed import program_model
 
-        prog = program_model(self.params, device=device, fast=crossbar.fast)
+        prog = program_model(
+            self.params,
+            device=device,
+            fast=crossbar.fast,
+            # tied LM heads serve from a transpose programmed once, bound to
+            # the embedding's name (name-keyed binding makes this possible)
+            tie_lm_head=(self.cfg.tie_embeddings and self.cfg.frontend == "token"),
+        )
         return dataclasses.replace(crossbar, programmed=prog)
+
+    def save_artifacts(self, directory: str) -> str:
+        """Persist the programmed chip so a restart can restore instead of
+        reprogram (``ServingEngine(..., restore_artifacts=directory)``)."""
+        if self.crossbar is None or self.crossbar.programmed is None:
+            raise ValueError(
+                "no programmed artifacts to save: construct the engine with "
+                "crossbar=CrossbarMode(enabled=True, ...) first"
+            )
+        from repro.checkpoint import save_programmed
+
+        return save_programmed(directory, self.crossbar.programmed)
 
     def repair_reports(self):
         """Path -> spare-column ``RepairReport`` for every repaired
@@ -148,13 +230,15 @@ class ServingEngine:
             return {}
         return self.crossbar.programmed.repair_reports()
 
-    def _with_crossbar(self, params, fn):
-        """Run ``fn`` under the engine's crossbar mode, with programmed
-        artifacts bound to ``params``' leaves (works at jit trace time)."""
+    def _with_crossbar(self, fn):
+        """Run ``fn`` under the engine's crossbar mode, with the programmed
+        model's name-keyed artifact table bound for the dynamic scope
+        (works at jit trace time — lookups resolve by name, not by leaf
+        identity, so any congruent params tree serves)."""
         if self.crossbar is None:
             return fn()
         bind = (
-            self.crossbar.programmed.bind(params)
+            self.crossbar.programmed.bind()
             if self.crossbar.programmed is not None
             else contextlib.nullcontext()
         )
@@ -171,7 +255,7 @@ class ServingEngine:
         if bucket not in self._prefills:
             def fn(params, tokens, cache):
                 return self._with_crossbar(
-                    params, lambda: model_lib.prefill(params, self.cfg, tokens, cache)
+                    lambda: model_lib.prefill(params, self.cfg, tokens, cache)
                 )
             self._prefills[bucket] = jax.jit(fn)
         return self._prefills[bucket]

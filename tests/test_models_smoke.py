@@ -180,6 +180,29 @@ def test_moe_capacity_drops_are_bounded():
     assert float(jnp.linalg.norm(y - y_inf)) / denom < 0.35
 
 
+def count_dots(closed) -> int:
+    """Plain-XLA dot_generals in a traced computation, Pallas calls excluded
+    (they ARE the crossbar datapath)."""
+
+    def walk(jaxpr) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                continue  # the crossbar datapath itself
+            if eqn.primitive.name == "dot_general":
+                n += 1
+            for v in eqn.params.values():
+                for sub in (v if isinstance(v, (list, tuple)) else (v,)):
+                    inner = getattr(sub, "jaxpr", None)
+                    if hasattr(inner, "eqns"):
+                        n += walk(inner)
+                    elif hasattr(sub, "eqns"):
+                        n += walk(sub)
+        return n
+
+    return walk(closed.jaxpr)
+
+
 def test_no_plain_xla_matmuls_on_crossbar_path(monkeypatch):
     """Under an enabled CrossbarMode every weight-bearing matmul — attention
     q/k/v/o, MLP wi/wo, and the LM head — routes through crossbar_linear
@@ -197,31 +220,12 @@ def test_no_plain_xla_matmuls_on_crossbar_path(monkeypatch):
     consumed = []
     real = L.crossbar_linear
 
-    def spy(x, w):
+    def spy(x, w, name=None, **kw):
         consumed.append(tuple(int(d) for d in w.shape))
-        return real(x, w)
+        return real(x, w, name=name, **kw)
 
     monkeypatch.setattr(L, "crossbar_linear", spy)
     monkeypatch.setattr(A, "crossbar_linear", spy)
-
-    def count_dots(closed) -> int:
-        def walk(jaxpr) -> int:
-            n = 0
-            for eqn in jaxpr.eqns:
-                if eqn.primitive.name == "pallas_call":
-                    continue  # the crossbar datapath itself
-                if eqn.primitive.name == "dot_general":
-                    n += 1
-                for v in eqn.params.values():
-                    for sub in (v if isinstance(v, (list, tuple)) else (v,)):
-                        inner = getattr(sub, "jaxpr", None)
-                        if hasattr(inner, "eqns"):
-                            n += walk(inner)
-                        elif hasattr(sub, "eqns"):
-                            n += walk(sub)
-            return n
-
-        return walk(closed.jaxpr)
 
     def trace(mode):
         consumed.clear()
@@ -244,3 +248,133 @@ def test_no_plain_xla_matmuls_on_crossbar_path(monkeypatch):
     # ... and each routed site removed exactly one plain-XLA dot_general;
     # what remains is the weightless attention pair
     assert on == off - n_routed == 2, (on, off)
+
+
+def test_no_plain_xla_matmuls_on_moe_crossbar_path():
+    """The MoE + tied-head coverage criterion (ISSUE 4): on a small MoE
+    config with crossbar mode enabled, the only dot_generals left in the
+    traced forward are the two weightless attention products — the router,
+    the per-expert wi/wg/wo bank, and the *tied* LM head all route through
+    crossbar_linear (the expert bank via the per-expert scan, the tied head
+    via the transpose that name-keyed binding can serve)."""
+    from benchmarks.noise_sweep import tiny_moe_lm_config
+    from repro.models import layers as L
+
+    cfg = tiny_moe_lm_config()
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    tokens = jnp.zeros((1, 4), jnp.int32)
+
+    def trace(mode):
+        with L.crossbar_mode(mode):
+            return jax.make_jaxpr(lambda p, t: M.forward(p, cfg, t))(params, tokens)
+
+    off = count_dots(trace(L.CrossbarMode(enabled=False)))
+    on = count_dots(trace(L.CrossbarMode(enabled=True, fast=True)))
+    # digital reference: 4 attention projections + router + 3 expert einsums
+    # (wi/wg/wo) + tied head + the 2 weightless attention products = 11;
+    # enabled, only the weightless attention pair remains
+    assert off == 11, off
+    assert on == 2, on
+
+
+def test_programmed_moe_forward_zero_misses_and_strict():
+    """A fully programmed MoE model (tie_lm_head=True) serves every
+    projection from an artifact: zero crossbar misses over a traced forward
+    (strict mode would raise on the first one), and the programmed forward
+    matches the per-call path to float-fusion tolerance."""
+    from benchmarks.noise_sweep import tiny_moe_lm_config
+    from repro.device import program_model
+    from repro.models import layers as L
+
+    cfg = tiny_moe_lm_config()
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    tokens = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, size=(1, 4))
+    )
+    with L.crossbar_mode(L.CrossbarMode(enabled=True, fast=True)):
+        y_percall = M.forward(params, cfg, tokens)
+
+    prog = program_model(params, tie_lm_head=True)
+    # coverage: attention q/k/v/o + router + expert wi/wg/wo + tied head
+    assert prog.n_compiled == 9, sorted(prog.by_name)
+    assert "embed/tokens" in prog.by_name
+    assert prog.by_name["stage0/b0/ffn/wi"].w_codes.ndim == 4  # (L, E, K, N)
+    L.reset_crossbar_misses()
+    with L.crossbar_mode(
+        L.CrossbarMode(enabled=True, fast=True, programmed=prog, strict=True)
+    ):
+        y_prog = M.forward(params, cfg, tokens)
+    assert L.crossbar_misses() == ()
+    np.testing.assert_allclose(
+        np.asarray(y_prog), np.asarray(y_percall), rtol=1e-4, atol=1e-4
+    )
+    # ... and without tie_lm_head the tied head IS a miss, loudly
+    prog_no_tie = program_model(params, tie_lm_head=False)
+    L.reset_crossbar_misses()
+    with L.crossbar_mode(
+        L.CrossbarMode(enabled=True, fast=True, programmed=prog_no_tie)
+    ):
+        M.forward(params, cfg, tokens)
+    assert "embed/tokens" in L.crossbar_misses()
+    with pytest.raises(LookupError):
+        with L.crossbar_mode(
+            L.CrossbarMode(enabled=True, fast=True, programmed=prog_no_tie, strict=True)
+        ):
+            M.forward(params, cfg, tokens)
+    L.reset_crossbar_misses()
+
+
+def test_moe_engine_save_restore_serve_round_trip(tmp_path):
+    """ISSUE 4 acceptance: save -> restore -> serve is bit-identical to the
+    original programmed MoE engine with zero reprogramming calls — the
+    restored chip carries the same effective cells, fault realizations,
+    write-verify reports and repair tables."""
+    from benchmarks.noise_sweep import tiny_moe_lm_config
+    from repro.device import DeviceConfig
+    from repro.models.layers import CrossbarMode
+    from repro.serving.engine import ServingEngine
+    import repro.device.programmed as P
+
+    cfg = tiny_moe_lm_config()
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    dev = DeviceConfig(
+        sigma=0.05, p_stuck_on=2e-3, p_stuck_off=2e-3, write_verify_iters=2,
+        spare_cols=2, seed=3,
+    )
+    eng = ServingEngine(
+        cfg, params, max_batch=1, max_seq=16,
+        crossbar=CrossbarMode(enabled=True, device=dev),
+    )
+    eng.submit(np.array([1, 2, 3], np.int32), max_new_tokens=2)
+    out1 = eng.run_until_done()[0].generated
+
+    eng.save_artifacts(str(tmp_path))
+    real_program_layer = P.program_layer
+    calls = []
+
+    def counting(*a, **k):
+        calls.append(a)
+        return real_program_layer(*a, **k)
+
+    P.program_layer = counting
+    try:
+        eng2 = ServingEngine(
+            cfg, params, max_batch=1, max_seq=16,
+            crossbar=CrossbarMode(enabled=True, device=dev),
+            restore_artifacts=str(tmp_path),
+        )
+    finally:
+        P.program_layer = real_program_layer
+    assert calls == []  # zero reprogramming on restore
+
+    from repro.device.programmed import artifacts_equal
+
+    a1, a2 = eng.crossbar.programmed.by_name, eng2.crossbar.programmed.by_name
+    assert set(a1) == set(a2)
+    for n in a1:
+        assert artifacts_equal(a1[n], a2[n]), n
+        assert a1[n].repair == a2[n].repair, n
+
+    eng2.submit(np.array([1, 2, 3], np.int32), max_new_tokens=2)
+    out2 = eng2.run_until_done()[0].generated
+    assert out1 == out2 and len(out1) == 2

@@ -1,0 +1,341 @@
+"""Name-keyed artifact binding (ISSUE 4 tentpole).
+
+The old id-keyed binding silently orphaned every artifact the moment the
+params pytree was copied — ``jax.device_put``, buffer donation, an optimizer
+step, a checkpoint restore — downgrading crossbar serving to plain XLA
+matmul with no error.  These tests pin the fix: binding is by canonical
+parameter *name*, so it survives pytree copies, fresh jit traces and
+transposed views; misses are counted and (under strict mode) fatal; MoE
+expert banks program as per-expert stacked artifacts bit-identical to
+standalone programming; and the whole programmed chip round-trips through
+the ``repro.checkpoint`` artifact store bit-for-bit.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import restore_programmed, save_programmed
+from repro.device import (
+    DeviceConfig,
+    bind_artifacts,
+    name_scope,
+    program_layer,
+    program_model,
+    programmed_linear,
+    scoped_name,
+)
+from repro.models.layers import (
+    CrossbarMode,
+    crossbar_linear,
+    crossbar_misses,
+    crossbar_mode,
+    reset_crossbar_misses,
+)
+
+DEV = DeviceConfig(sigma=0.1, p_stuck_on=1e-3, p_stuck_off=1e-3, write_verify_iters=4)
+
+
+@pytest.fixture(autouse=True)
+def _clean_miss_counter():
+    reset_crossbar_misses()
+    yield
+    reset_crossbar_misses()
+
+
+def _params(seed=0, K=128, N=16):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(4, K)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32))
+    return x, {"wq": w}
+
+
+# ---------------------------------------------------------------------------
+# Binding survives everything id-keying did not
+# ---------------------------------------------------------------------------
+
+def test_binding_survives_pytree_copies():
+    """device_put and a tree_map copy produce fresh leaf objects; name-keyed
+    lookup still serves the artifact, bit-identically — both broke the old
+    id-keyed binding (silent digital fallback)."""
+    x, params = _params()
+    prog = program_model(params, device=DEV)
+    mode = CrossbarMode(enabled=True, device=DEV, programmed=prog)
+    with crossbar_mode(mode):
+        y0 = crossbar_linear(x, params["wq"], name="wq")
+    for copy in (jax.device_put(params), jax.tree.map(lambda a: a + 0, params)):
+        with crossbar_mode(mode):
+            y = crossbar_linear(x, copy["wq"], name="wq")
+        np.testing.assert_array_equal(np.asarray(y0), np.asarray(y))
+    assert crossbar_misses() == ()
+
+
+def test_binding_survives_fresh_jit_trace():
+    """Every retrace sees new tracers; the name key is trace-invariant, so
+    both independently-jitted wrappers serve the programmed path with zero
+    misses (misses are recorded at trace time)."""
+    x, params = _params(1)
+    prog = program_model(params, device=DEV)
+    mode = CrossbarMode(enabled=True, device=DEV, programmed=prog, strict=True)
+
+    @jax.jit
+    def f1(p, xin):
+        with crossbar_mode(mode):
+            return crossbar_linear(xin, p["wq"], name="wq")
+
+    @jax.jit
+    def f2(p, xin):
+        with crossbar_mode(mode):
+            return crossbar_linear(xin, p["wq"], name="wq") * 1.0
+
+    a = np.asarray(f1(params, x))
+    b = np.asarray(f2(jax.device_put(params), x))  # copied params, new trace
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+    assert crossbar_misses() == ()
+
+
+def test_binding_survives_transpose_view():
+    """A per-call transpose has no stable object identity — the tied-head
+    case.  Programming the transpose once and looking it up by the source
+    leaf's name serves it regardless of which transpose view is passed."""
+    x, params = _params(2, K=64, N=48)
+    table = params["wq"].T  # pretend (V, D) embedding; head weight is its .T
+    prog = program_model({"tokens": table}, device=DEV, tie_lm_head=True)
+    assert prog.n_compiled == 1 and "tokens" in prog.by_name
+    with crossbar_mode(CrossbarMode(enabled=True, device=DEV)):
+        y_percall = crossbar_linear(x, table.T)
+    with crossbar_mode(
+        CrossbarMode(enabled=True, device=DEV, programmed=prog, strict=True)
+    ):
+        y1 = crossbar_linear(x, table.T, name="tokens")
+        y2 = crossbar_linear(x, jnp.asarray(np.asarray(table)).T, name="tokens")
+    np.testing.assert_array_equal(np.asarray(y_percall), np.asarray(y1))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    assert crossbar_misses() == ()
+
+
+def test_scoped_names_and_shadowing():
+    """Keys join the ambient name_scope stack; inner binds shadow outer ones
+    (how per-expert slices override the stacked per-layer binding)."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(np.abs(rng.normal(size=(2, 32))).astype(np.float32))
+    w1 = jnp.asarray(rng.normal(size=(32, 8)).astype(np.float32))
+    w2 = jnp.asarray(rng.normal(size=(32, 8)).astype(np.float32))
+    a1 = program_layer(w1, device=DEV)
+    a2 = program_layer(w2, device=DEV)
+    with name_scope("stage0"):
+        assert scoped_name("wq") == "stage0/wq"
+        with bind_artifacts({"wq": a1}):
+            with crossbar_mode(CrossbarMode(enabled=True, device=DEV)):
+                y_outer = crossbar_linear(x, w1, name="wq")
+                with bind_artifacts({"wq": a2}):  # shadow
+                    y_inner = crossbar_linear(x, w2, name="wq")
+    np.testing.assert_array_equal(
+        np.asarray(y_outer), np.asarray(programmed_linear(x, a1))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(y_inner), np.asarray(programmed_linear(x, a2))
+    )
+
+
+def test_miss_counter_and_strict_mode():
+    """A programmed model that resolves no artifact for a call is a counted
+    miss (the old behavior was a *silent* digital fallback); strict mode —
+    per-call or via CrossbarMode — raises instead."""
+    x, params = _params(4)
+    prog = program_model(params, device=DEV)
+    mode = CrossbarMode(enabled=True, device=DEV, programmed=prog)
+    w_other = jnp.asarray(
+        np.random.default_rng(5).normal(size=(128, 16)).astype(np.float32)
+    )
+    with crossbar_mode(mode):
+        crossbar_linear(x, w_other, name="not_compiled")
+        crossbar_linear(x, w_other)  # nameless call under a programmed model
+    assert crossbar_misses() == ("not_compiled", "<unnamed (128, 16)>")
+    with pytest.raises(LookupError):
+        with crossbar_mode(mode):
+            crossbar_linear(x, w_other, name="not_compiled", strict=True)
+    with pytest.raises(LookupError):
+        with crossbar_mode(
+            CrossbarMode(enabled=True, device=DEV, programmed=prog, strict=True)
+        ):
+            crossbar_linear(x, w_other, name="not_compiled")
+    # without a programmed model there is nothing to miss
+    reset_crossbar_misses()
+    with crossbar_mode(CrossbarMode(enabled=True, strict=True)):
+        crossbar_linear(x, w_other, name="not_compiled")
+    assert crossbar_misses() == ()
+
+
+# ---------------------------------------------------------------------------
+# Per-expert MoE artifacts
+# ---------------------------------------------------------------------------
+
+def test_expert_stacked_artifact_bit_identical_to_standalone():
+    """A 4-D (L, E, K, N) expert bank compiles to per-expert artifacts that
+    are bit-identical — cells, scales, reports — to programming each expert
+    slab standalone, and each serves bit-identically."""
+    rng = np.random.default_rng(6)
+    ws = jnp.asarray(rng.normal(size=(2, 3, 64, 8)).astype(np.float32))
+    x = jnp.asarray(np.abs(rng.normal(size=(4, 64))).astype(np.float32))
+    bank = program_layer(ws, device=DEV, with_report=True)
+    assert bank.stacked and bank.shape == (2, 3, 64, 8)
+    assert bank.g_eff.shape[:2] == (2, 3)
+    for l in range(2):
+        for e in range(3):
+            direct = program_layer(ws[l, e], device=DEV, with_report=True)
+            sliced = bank.layer(l).layer(e)
+            np.testing.assert_array_equal(
+                np.asarray(sliced.g_eff), np.asarray(direct.g_eff)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(sliced.w_scale), np.asarray(direct.w_scale)
+            )
+            assert bank.report[l][e] == direct.report
+            np.testing.assert_array_equal(
+                np.asarray(programmed_linear(x, sliced)),
+                np.asarray(programmed_linear(x, direct)),
+            )
+
+
+# ---------------------------------------------------------------------------
+# Artifact serialization round-trip
+# ---------------------------------------------------------------------------
+
+def test_artifact_store_round_trip_bit_identical(tmp_path):
+    """save_programmed -> restore_programmed restores the *same chip*:
+    every array leaf bit-identical (g_eff fault realizations included),
+    write-verify and repair reports equal, names and tree layout intact."""
+    rng = np.random.default_rng(7)
+    params = {
+        "stage0": {
+            "b0": {"wq": jnp.asarray(rng.normal(size=(2, 128, 16)).astype(np.float32))}
+        },
+        "head": jnp.asarray(rng.normal(size=(128, 32)).astype(np.float32)),
+    }
+    dev = DEV.replace(p_stuck_on=5e-3, p_stuck_off=5e-3, spare_cols=8)
+    prog = program_model(params, device=dev, with_report=True)
+    assert prog.n_compiled == 2
+    save_programmed(str(tmp_path), prog)
+    back = restore_programmed(str(tmp_path))
+    assert set(back.by_name) == set(prog.by_name)
+    from repro.device.programmed import ARTIFACT_ARRAY_FIELDS, artifacts_equal
+
+    assert all(artifacts_equal(prog.by_name[n], back.by_name[n]) for n in prog.by_name)
+    for name, art in prog.by_name.items():
+        rart = back.by_name[name]
+        for f in ARTIFACT_ARRAY_FIELDS:
+            v, rv = getattr(art, f), getattr(rart, f)
+            if v is None:
+                assert rv is None, (name, f)
+                continue
+            assert v.dtype == rv.dtype, (name, f)
+            np.testing.assert_array_equal(np.asarray(v), np.asarray(rv), err_msg=(name, f))
+        assert art.spec == rart.spec and art.adc_cfg == rart.adc_cfg
+        assert art.fast == rart.fast
+        assert art.report == rart.report
+        assert art.repair == rart.repair
+    # tree layout supports the stage subtree path _run_stage scans
+    assert back.subtree("stage0")["b0"]["wq"].stacked
+    # restored chips serve bit-identically to freshly programmed ones
+    x = jnp.asarray(np.abs(rng.normal(size=(2, 128))).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(programmed_linear(x, prog.by_name["head"])),
+        np.asarray(programmed_linear(x, back.by_name["head"])),
+    )
+
+
+def test_restore_programmed_missing_dir(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_programmed(str(tmp_path / "nope"))
+
+
+def test_engine_restore_validates_store(tmp_path):
+    """A stale or mismatched artifact store must fail engine construction
+    loudly — silently resolving zero artifacts would degrade every
+    projection to per-call reprogramming (review finding, ISSUE 4)."""
+    from benchmarks.noise_sweep import tiny_lm_config
+    from repro.models import model as M
+    from repro.serving.engine import ServingEngine
+
+    # a store programmed from a *different* model
+    other = {"wq": jnp.asarray(np.random.default_rng(8).normal(size=(8, 4)).astype(np.float32))}
+    save_programmed(str(tmp_path), program_model(other))
+
+    cfg = tiny_lm_config()
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    with pytest.raises(ValueError, match="does not match this model"):
+        ServingEngine(
+            cfg, params, max_batch=1, max_seq=16,
+            crossbar=CrossbarMode(enabled=True), restore_artifacts=str(tmp_path),
+        )
+
+
+def test_expected_artifact_names_mirrors_program_model():
+    from repro.device.programmed import expected_artifact_names
+
+    rng = np.random.default_rng(9)
+    params = {
+        "embed": {"tokens": jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))},
+        "stage0": {"b0": {"wq": jnp.asarray(rng.normal(size=(2, 16, 8)).astype(np.float32)),
+                          "norm1": jnp.asarray(rng.normal(size=(2, 16)).astype(np.float32))}},
+    }
+    for tie in (False, True):
+        prog = program_model(params, tie_lm_head=tie)
+        exp = expected_artifact_names(params, tie_lm_head=tie)
+        assert set(exp) == set(prog.by_name)
+        assert all(prog.by_name[n].shape == s for n, s in exp.items())
+    assert expected_artifact_names(params, tie_lm_head=True)["embed/tokens"] == (16, 32)
+
+
+def test_save_programmed_overwrite_preserves_store(tmp_path):
+    """Overwriting a store swaps atomically: the previous store is never
+    deleted before the new one is in place, and the result is readable."""
+    x, params = _params(10, K=32, N=8)
+    prog = program_model(params, device=DEV)
+    save_programmed(str(tmp_path), prog)
+    save_programmed(str(tmp_path), prog)  # overwrite in place
+    back = restore_programmed(str(tmp_path))
+    np.testing.assert_array_equal(
+        np.asarray(back.by_name["wq"].g_eff), np.asarray(prog.by_name["wq"].g_eff)
+    )
+
+
+def test_note_crossbar_gap():
+    """Mesh-sharded paths that cannot serve from artifacts (rank-local
+    weight shards) must still be loud: note_crossbar_gap counts a miss
+    under a ProgrammedModel and raises under strict mode."""
+    from repro.models.layers import note_crossbar_gap
+
+    x, params = _params(11)
+    prog = program_model(params, device=DEV)
+    with crossbar_mode(CrossbarMode(enabled=True)):
+        note_crossbar_gap("wi")  # no programmed model: not a gap
+    assert crossbar_misses() == ()
+    with crossbar_mode(CrossbarMode(enabled=True, programmed=prog)):
+        with name_scope("stage0"):
+            note_crossbar_gap("wi")
+    assert crossbar_misses() == ("stage0/wi",)
+    with pytest.raises(LookupError):
+        with crossbar_mode(CrossbarMode(enabled=True, programmed=prog, strict=True)):
+            note_crossbar_gap("wi")
+
+
+def test_restore_falls_back_to_interrupted_swap_states(tmp_path):
+    """A crash inside save_programmed's two-rename swap leaves the store
+    under 'programmed.tmp' (complete, not yet renamed) or 'programmed.old'
+    (previous chip renamed aside); restore must use them instead of forcing
+    a full reprogram."""
+    import os
+
+    x, params = _params(12, K=32, N=8)
+    prog = program_model(params, device=DEV)
+    save_programmed(str(tmp_path), prog)
+    base = os.path.join(str(tmp_path), "programmed")
+    for suffix in (".tmp", ".old"):
+        os.rename(base, base + suffix)
+        back = restore_programmed(str(tmp_path))
+        np.testing.assert_array_equal(
+            np.asarray(back.by_name["wq"].g_eff), np.asarray(prog.by_name["wq"].g_eff)
+        )
+        os.rename(base + suffix, base)

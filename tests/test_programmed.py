@@ -112,7 +112,7 @@ def test_crossbar_linear_programmed_bit_identical():
     with crossbar_mode(CrossbarMode(enabled=True, device=DEV)):
         y_percall = crossbar_linear(x, w)
     with crossbar_mode(CrossbarMode(enabled=True, device=DEV, programmed=prog)):
-        y_prog = crossbar_linear(x, params["wq"])
+        y_prog = crossbar_linear(x, params["wq"], name="wq")
     np.testing.assert_array_equal(np.asarray(y_percall), np.asarray(y_prog))
 
 
@@ -128,7 +128,7 @@ def test_crossbar_linear_programmed_bit_identical_bf16():
     with crossbar_mode(CrossbarMode(enabled=True, device=DEV)):
         y_percall = crossbar_linear(x, w)
     with crossbar_mode(CrossbarMode(enabled=True, device=DEV, programmed=prog)):
-        y_prog = crossbar_linear(x, params["wq"])
+        y_prog = crossbar_linear(x, params["wq"], name="wq")
     assert y_prog.dtype == x.dtype
     np.testing.assert_array_equal(
         np.asarray(y_percall, np.float32), np.asarray(y_prog, np.float32)
@@ -148,8 +148,8 @@ def test_programmed_bind_under_jit():
 
     @jax.jit
     def fwd_prog(p, xin):
-        with prog.bind(p), crossbar_mode(CrossbarMode(enabled=True, device=DEV)):
-            return crossbar_linear(xin, p["wq"])
+        with prog.bind(), crossbar_mode(CrossbarMode(enabled=True, device=DEV)):
+            return crossbar_linear(xin, p["wq"], name="wq")
 
     @jax.jit
     def fwd_percall(p, xin):

@@ -269,12 +269,57 @@ def test_mapper_fault_provisioning_inflates_allocation():
         assert prov.spare_cols == mapper.provision_spare_cols(
             1e-2, arch.NEWTON_CHIP.conv_tile.ima.xbar_spec
         ) > 0
-        assert prov.spare_cells_frac == pytest.approx(prov.spare_cols / 128)
-        # spares are allocated-but-unmappable: more crossbars, lower utilization
-        assert sum(m.crossbars for m in prov.layers) > sum(m.crossbars for m in base.layers)
+        # unified layout (device.repair model): spares append past each
+        # group's data columns, so the group fan-out — hence the crossbar
+        # count — is spare-independent, but every allocated crossbar grows
+        # by rows x spare_cols physical cells
+        assert prov.spare_cells_frac == pytest.approx(
+            prov.spare_cols / (128 + prov.spare_cols)
+        )
+        assert sum(m.crossbars for m in prov.layers) == sum(
+            m.crossbars for m in base.layers
+        )
         assert prov.crossbar_underutilization > base.crossbar_underutilization
         # throughput provisioning is not affected by column sparing
         assert prov.throughput_samples_s == base.throughput_samples_s
+
+
+def test_spare_placement_models_agree():
+    """Cross-module pin of the unified spare-placement layout: the mapper
+    and ``device.repair`` provision the same groups — ``ceil(N /
+    spec.cols)`` column groups, each with its full ``spec.cols`` data
+    columns plus ``spare_cols`` appended spares — so the mapper's
+    allocated spare cells for a slab equal the cells the repair planner
+    programs into its spare block (per bit-slice)."""
+    from repro.core import arch, mapper
+    from repro.core.workloads import Layer, Network
+
+    spec = arch.NEWTON_CHIP.conv_tile.ima.xbar_spec
+    s = 8
+    dev = DeviceConfig(p_stuck_on=5e-3, p_stuck_off=5e-3, spare_cols=s, seed=0)
+    N = 2 * spec.cols + 40  # 3 column groups, last partial
+    groups = -(-N // spec.cols)
+    assert spare_budget(N, spec, dev) == s * groups
+
+    net = Network(
+        "one-fc", [Layer(name="fc", kind="fc", rows=spec.rows, cols=N, pixels=1)]
+    )
+    rep = mapper.map_network(net, arch.NEWTON_CHIP, spare_cols=s)
+    m = rep.layers[0]
+    # same group fan-out: the mapper allocates exactly `groups` column
+    # groups per replica (full `spec.cols` data width each, no carving)
+    assert m.crossbars == groups * spec.n_slices * m.replication
+    assert rep.spare_cols == s
+    assert rep.spare_cells_frac == pytest.approx(s / (spec.cols + s))
+
+    # the repair planner's programmed spare block covers exactly the cells
+    # the mapper provisioned: rows x (s per group) x groups, per slice
+    rng = np.random.default_rng(0)
+    wb = jnp.asarray(rng.integers(0, 1 << spec.weight_bits, size=(spec.rows, N)))
+    plan = plan_repair(wb, spec, dev)
+    assert plan.g_spare.shape == (spec.n_slices, spec.rows, s * groups)
+    mapper_spare_cells = groups * spec.rows * s
+    assert plan.g_spare.shape[1] * plan.g_spare.shape[2] == mapper_spare_cells
 
 
 def test_provision_spare_cols_monotone_and_capped():
