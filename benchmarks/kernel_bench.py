@@ -315,6 +315,75 @@ def moe_programmed_bench() -> Dict[str, float]:
     }
 
 
+def sharded_programmed_bench() -> Dict[str, float]:
+    """Per-rank artifact sharding (ISSUE 5 tentpole): rank-local serving.
+
+    An (E, K, N) expert bank is programmed once as the global chip, then
+    sliced per rank along the expert axis (``local_artifact`` — the same
+    slicing the shard_map in_specs perform on the fly).  Two invariants:
+
+    * ``bit_exact`` — every rank's slice serves exactly the outputs the
+      global chip produces for its experts (slicing is a pure relabeling of
+      which crossbars live where; the EP mesh forward being bit-identical
+      to single-device rests on this);
+    * ``speedup_x >= 5`` — rank-local *programmed* steady state vs the
+      rank-local per-call device pipeline, the same program-once floor as
+      every other bench: sharding must not leak programming-time work
+      (fault draw, write-verify, scale reductions) back into the serving
+      hot path.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.device.programmed import local_artifact
+
+    rng = np.random.default_rng(5)
+    E, B, K, N, ranks = 8, 8, 256, 64, 4
+    xs = jnp.asarray(np.abs(rng.normal(size=(E, B, K))).astype(np.float32))
+    ws = jnp.asarray(rng.normal(size=(E, K, N)).astype(np.float32))
+    dev = DeviceConfig(
+        sigma=0.1, p_stuck_on=1e-3, p_stuck_off=1e-3, write_verify_iters=8
+    )
+    bank = program_layer(ws, device=dev)  # the global chip
+    E_loc = E // ranks
+    locs = [
+        local_artifact(bank, P("model", None, None), {"model": ranks}, {"model": r})
+        for r in range(ranks)
+    ]
+
+    # the sharding invariant: rank-local serving == global-chip serving
+    exact = True
+    for r in range(ranks):
+        for i in range(E_loc):
+            e = r * E_loc + i
+            y_loc = programmed_matmul(xs[e], locs[r].layer(i), interpret=True)
+            y_glob = programmed_matmul(xs[e], bank.layer(e), interpret=True)
+            exact &= bool(jnp.array_equal(y_loc, y_glob))
+
+    # one rank's serving latency: per-call device pipeline vs programmed
+    def percall_rank0():
+        return [
+            ops.crossbar_matmul(xs[e], ws[e], device=dev, interpret=True)
+            for e in range(E_loc)
+        ]
+
+    def steady_rank0():
+        return [
+            programmed_matmul(xs[i], locs[0].layer(i), interpret=True)
+            for i in range(E_loc)
+        ]
+
+    t_percall = _time(lambda: jax.block_until_ready(percall_rank0()))
+    t_steady = _time(lambda: jax.block_until_ready(steady_rank0()))
+    return {
+        "percall_us": t_percall,
+        "steady_state_us": t_steady,
+        "speedup_x": t_percall / t_steady,
+        "bit_exact": float(exact),
+        "ranks": float(ranks),
+        "experts_per_rank": float(E_loc),
+    }
+
+
 ALL = [
     ("kernel_crossbar", crossbar_kernel_bench),
     ("kernel_programmed", programmed_kernel_bench),
@@ -322,4 +391,5 @@ ALL = [
     ("kernel_repaired", repaired_kernel_bench),
     ("kernel_artifact_store", artifact_store_bench),
     ("kernel_moe_programmed", moe_programmed_bench),
+    ("kernel_sharded_programmed", sharded_programmed_bench),
 ]

@@ -37,6 +37,7 @@ HEADLINE = [
     ("kernel_repaired", "recovery_frac", "higher"),
     ("kernel_artifact_store", "bit_exact", "higher"),
     ("kernel_moe_programmed", "bit_exact", "higher"),
+    ("kernel_sharded_programmed", "bit_exact", "higher"),
 ]
 REGRESSION_TOL = 0.20
 
@@ -53,6 +54,7 @@ ABSOLUTE_FLOORS = {
     ("kernel_programmed", "speedup_x"): 5.0,
     ("kernel_repaired", "speedup_x"): 5.0,
     ("kernel_moe_programmed", "speedup_x"): 5.0,
+    ("kernel_sharded_programmed", "speedup_x"): 5.0,
     ("kernel_artifact_store", "restore_speedup_x"): 2.0,
 }
 

@@ -3,6 +3,12 @@
 #
 #   scripts/run_tests.sh            fast tier (default: slow marker excluded)
 #   scripts/run_tests.sh --all      everything, including @pytest.mark.slow
+#                                   and the full @pytest.mark.dist mesh tier
+#   scripts/run_tests.sh --dist     distributed tier only: every forced-host-
+#                                   device-count mesh test (test_distributed,
+#                                   test_sharded_artifacts), slow members
+#                                   included — the tier that pins programmed
+#                                   crossbar serving under shard_map EP/TP
 #   scripts/run_tests.sh --bench    fast kernel-benchmark tier; runs the
 #                                   BENCH_kernels.json --check regression gate
 #                                   by default: fails on a >20% regression of
@@ -20,8 +26,21 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-}" == "--all" ]]; then
   shift
-  # later -m overrides the "not slow" default from pytest.ini addopts
-  exec python -m pytest -q -m "" "$@"
+  # later -m overrides the "not slow" default from pytest.ini addopts; the
+  # empty expression selects everything, dist tier included — CI cannot
+  # skip the mesh tier silently, and a marker typo that deselected it
+  # would fail the collection count guard below
+  python -m pytest -q -m "" "$@"
+  # guard: the dist tier must actually have been collected (an accidental
+  # testpaths/marker change that drops the mesh tier should fail loudly)
+  python -m pytest -q -m dist --collect-only >/dev/null
+  exit 0
+fi
+if [[ "${1:-}" == "--dist" ]]; then
+  shift
+  # -m dist overrides the "not slow" default: the whole mesh tier runs,
+  # slow members included
+  exec python -m pytest -q -m dist "$@"
 fi
 if [[ "${1:-}" == "--bench" ]]; then
   shift

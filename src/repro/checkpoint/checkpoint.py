@@ -156,6 +156,34 @@ def _decode_aux(obj):
     raise ValueError(f"unknown artifact aux kind: {kind!r}")
 
 
+def _encode_pspec(spec) -> list:
+    """JSON-encode a PartitionSpec's entries (None / str / tuple-of-str)."""
+    return [list(e) if isinstance(e, tuple) else e for e in spec]
+
+
+def _decode_pspec(entries):
+    from jax.sharding import PartitionSpec as P
+
+    return P(*[tuple(e) if isinstance(e, list) else e for e in entries])
+
+
+def _artifact_shardings(art) -> Optional[Dict[str, list]]:
+    """{field: encoded spec} for every array leaf carrying a non-trivial
+    NamedSharding — how the chip was deployed across the mesh.  None when
+    the artifact is unplaced/replicated (single-device chips)."""
+    from jax.sharding import NamedSharding
+
+    from repro.device.programmed import ARTIFACT_ARRAY_FIELDS
+
+    out = {}
+    for f in ARTIFACT_ARRAY_FIELDS:
+        v = getattr(art, f)
+        sh = getattr(v, "sharding", None) if v is not None else None
+        if isinstance(sh, NamedSharding) and any(e is not None for e in sh.spec):
+            out[f] = _encode_pspec(sh.spec)
+    return out or None
+
+
 def save_programmed(directory: str, prog, metadata: Optional[dict] = None) -> str:
     """Atomically persist a ``ProgrammedModel`` under ``<dir>/programmed/``.
 
@@ -164,6 +192,13 @@ def save_programmed(directory: str, prog, metadata: Optional[dict] = None) -> st
     ``ADCConfig``, the kernel-path flag and the write-verify/repair reports.
     Restoring yields a bit-identical chip — same effective cells, same
     fault realizations, same routing tables.
+
+    Mesh-sharded chips (``device.programmed.shard_artifacts``) additionally
+    record each array leaf's PartitionSpec, so ``restore_programmed(...,
+    mesh=)`` re-places every shard where the serving deployment had it —
+    the per-rank store round-trips through one canonical global file set
+    (each rank's slice is a view of the saved array under the recorded
+    spec; single-host saves stay fully addressable).
     """
     import dataclasses as dc
 
@@ -193,6 +228,7 @@ def save_programmed(directory: str, prog, metadata: Optional[dict] = None) -> st
             "fast": bool(art.fast),
             "report": _encode_aux(art.report),
             "repair": _encode_aux(art.repair),
+            "sharding": _artifact_shardings(art),
         }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -209,19 +245,39 @@ def save_programmed(directory: str, prog, metadata: Optional[dict] = None) -> st
     return final
 
 
-def restore_programmed(directory: str):
+def restore_programmed(directory: str, mesh=None):
     """Load a ``save_programmed`` store back into a ``ProgrammedModel``.
 
     The artifact tree is rebuilt as nested dicts from the canonical names,
     so stage subtrees ride the layer scan exactly as freshly programmed
     ones do; no parameter tree is needed — name-keyed binding resolves
     against whatever congruent params the model is served with.
+
+    ``mesh``: re-place each array leaf with the PartitionSpec recorded at
+    save time (specs whose axes the mesh lacks, or whose dims no longer
+    divide, degrade to replicated per entry) — a serving restart on the
+    deployment mesh restores the *sharded* chip directly, paying file I/O
+    plus one device_put per shard instead of write-verify reprogramming.
     """
     import jax.numpy as jnp
+    from jax.sharding import NamedSharding
 
     from repro.core.adc import ADCConfig
     from repro.core.crossbar import CrossbarSpec
-    from repro.device.programmed import ProgrammedLinear, ProgrammedModel
+    from repro.device.programmed import (
+        ProgrammedLinear,
+        ProgrammedModel,
+        dividing_pspec,
+    )
+
+    def _placed(arr, encoded_spec):
+        if mesh is None or encoded_spec is None:
+            return jnp.asarray(arr)
+        # the same degrade-to-replicated rule placement used at save time
+        # (device.programmed.dividing_pspec), so restore re-places shards
+        # exactly where the deployment had them
+        fixed = dividing_pspec(_decode_pspec(encoded_spec), arr.shape, mesh.shape)
+        return jax.device_put(arr, NamedSharding(mesh, fixed))
 
     base = os.path.join(directory, "programmed")
     # a crash inside save_programmed's two-rename swap can leave the store
@@ -239,8 +295,9 @@ def restore_programmed(directory: str):
         manifest = json.load(f)
     tree: Dict[str, Any] = {}
     for name, info in manifest["artifacts"].items():
+        shardings = info.get("sharding") or {}
         with np.load(os.path.join(d, info["file"])) as z:
-            arrays = {k: jnp.asarray(z[k]) for k in z.files}
+            arrays = {k: _placed(z[k], shardings.get(k)) for k in z.files}
         art = ProgrammedLinear(
             w_codes=arrays["w_codes"],
             g_eff=arrays.get("g_eff"),

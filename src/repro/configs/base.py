@@ -109,8 +109,10 @@ class ModelConfig:
     scan_layers: bool = True
     # Parallel layout: "tp" (default: TP/SP/EP over the model axis),
     # "pure_dp" (model axis as extra data parallelism — fastest for small
-    # models on the fixed production mesh), or "expert_tp" (weights-
-    # stationary MoE serving).  See §Perf.
+    # models on the fixed production mesh), "expert_tp" (weights-
+    # stationary MoE serving), or "ep_only" (experts sharded over the model
+    # axis, everything else replicated — programmed crossbar serving on a
+    # mesh is bit-identical to the single-device chip).  See §Perf.
     layout: str = "tp"
     # Layout override for decode/serving cells (e.g. "expert_tp": training
     # moves weights (FSDP) because tokens >> weights; decode moves

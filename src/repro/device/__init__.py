@@ -47,11 +47,18 @@ from repro.device.repair import (  # noqa: F401
 from repro.device.programmed import (  # noqa: F401
     ProgrammedLinear,
     ProgrammedModel,
+    artifact_arrays,
+    artifact_shard_specs,
     bind_artifacts,
+    consumed_artifact_names,
+    local_artifact,
     name_scope,
     program_layer,
     program_model,
     programmed_linear,
     programmed_matmul,
+    reset_consumed_artifact_names,
     scoped_name,
+    shard_artifacts,
+    with_arrays,
 )

@@ -314,7 +314,15 @@ def programmed_matmul(
     if art.x_scale is not None:
         x_scale = art.x_scale
     else:
-        x_scale = jnp.maximum(jnp.max(x), 1e-9) / ((1 << spec.input_bits) - 1)
+        # barrier: one canonical x_scale value feeds both the quantize and
+        # the dequantize — without it XLA duplicates this cheap computation
+        # into both consumer fusions, where it may lower differently (e.g.
+        # divide vs reciprocal-multiply) and perturb the dequantize by an
+        # output ULP; bit-identity across eager/jit/shard_map is a contract
+        # here (tests/test_sharded_artifacts.py pins it on an 8-rank mesh)
+        x_scale = jax.lax.optimization_barrier(
+            jnp.maximum(jnp.max(x), 1e-9) / ((1 << spec.input_bits) - 1)
+        )
     xq = quantize_input(x, spec, x_scale)
     if art.g_eff is not None:
         yq = noisy_vmm_pallas(
@@ -331,13 +339,20 @@ def programmed_matmul(
             xq, art.w_codes, spec, adc_cfg=art.adc_cfg, interpret=interpret,
             skip_zero_planes=skip_zero_planes,
         )
-    return yq.astype(jnp.float32) * (x_scale * art.w_scale * (2.0 ** spec.drop_lsb))
+    # dequantize with a pinned association order: the barrier keeps XLA's
+    # algebraic simplifier from reassociating the scalar chain (folding
+    # w_scale into the 2^drop constant under jit, which rounds differently
+    # than the eager left-to-right product) — eager, jit and shard_map
+    # executions of one artifact must dequantize bit-identically
+    scale = jax.lax.optimization_barrier(x_scale * art.w_scale)
+    return yq.astype(jnp.float32) * (scale * (2.0 ** spec.drop_lsb))
 
 
 def programmed_linear(
     x: jnp.ndarray,
     art: ProgrammedLinear,
     interpret: Optional[bool] = None,
+    colsum: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Signed-activation ``x @ w`` against a programmed artifact.
 
@@ -346,11 +361,274 @@ def programmed_linear(
     with the weight column sums — except the column sums come precomputed
     from the artifact (written once at programming time, as real hardware
     does) instead of a per-call ``sum(w, axis=0)`` reduction.
+
+    ``colsum`` overrides ``art.w_colsum`` — the per-rank partial-sum path
+    needs it: a contraction-sharded (K-sharded) artifact holds only this
+    rank's rows, so the offset correction must use the *local* rows' column
+    sums (the all-reduce of ``shift_r * colsum_r`` across ranks then
+    reconstitutes the full correction exactly — offset encoding decomposes
+    over row blocks).
     """
     shift = jnp.min(x)
-    xs = (x - shift).astype(jnp.float32)
+    # barriers pin the rounding points of the offset-encode chain: without
+    # them XLA is free to fuse the subtraction into the downstream quantize
+    # divide (or the dequantize multiply and the correction into an FMA),
+    # and those contractions round differently depending on how the
+    # *surrounding* graph fuses — eager, jit and shard_map executions of the
+    # same artifact must agree bit-for-bit (the distributed test tier pins
+    # this across an 8-device mesh)
+    xs = jax.lax.optimization_barrier((x - shift).astype(jnp.float32))
     y = programmed_matmul(xs, art, interpret=interpret)
-    return y + shift.astype(jnp.float32) * art.w_colsum
+    cs = art.w_colsum if colsum is None else colsum
+    y, corr = jax.lax.optimization_barrier((y, shift.astype(jnp.float32) * cs))
+    return y + corr
+
+
+# ---------------------------------------------------------------------------
+# Per-rank artifact sharding (mesh serving)
+# ---------------------------------------------------------------------------
+#
+# A multi-chip deployment is a mapping constraint in the paper's sense: the
+# weight's PartitionSpec says which crossbars live on which rank.  Artifacts
+# must shard *with* the weights they shadow — same specs, sliced consistently
+# across every array leaf — so a ``shard_map`` body can rebuild a rank-local
+# ``ProgrammedLinear`` from rank-local array shards and serve programmed.
+#
+# Axis semantics per artifact field (w_codes is the weight, (…stack, K, N)):
+#   * stacking axes (L layers / E experts) — slice every leaf; each (K, N)
+#     slab stays intact, so expert-parallel serving is bit-identical;
+#   * N (output columns) — column-separable: cells, colsums and gather
+#     tables slice cleanly (``local_artifact`` re-indexes repair tables to
+#     local column coordinates);
+#   * K (contraction rows) — rank-local *rows of the global chip*: servable
+#     as partial sums (quantization is elementwise in w, so sliced rows of
+#     ``w_codes``/``g_eff`` ARE the rows the global chip programmed), but
+#     ``w_colsum`` is a full-K reduction and cannot be sliced — the caller
+#     must supply local column sums (``programmed_linear(colsum=...)``).
+
+
+def _pspec_entries(wspec, ndim: int) -> Tuple[Any, ...]:
+    """Normalize a PartitionSpec (possibly shorter than ndim) to entries."""
+    entries = tuple(wspec) if wspec is not None else ()
+    if len(entries) > ndim:
+        raise ValueError(f"spec {wspec} longer than weight rank {ndim}")
+    return entries + (None,) * (ndim - len(entries))
+
+
+def artifact_shard_specs(art: ProgrammedLinear, wspec) -> Dict[str, Any]:
+    """{array field: PartitionSpec} matching the shadowed weight's spec.
+
+    ``wspec`` is the weight's PartitionSpec ((…stack, K, N) axes).  Every
+    array leaf of the artifact gets the spec that slices it consistently
+    with the weight: stacking axes map one-to-one, ``g_eff``/``g_spare``
+    keep their bit-plane axis replicated, column-shaped leaves follow N.
+    The returned dict is exactly what ``shard_map`` ``in_specs`` (via
+    ``artifact_arrays``) or ``NamedSharding`` placement needs.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    nd = art.w_codes.ndim
+    entries = _pspec_entries(wspec, nd)
+    stack, kspec, nspec = entries[:-2], entries[-2], entries[-1]
+    specs = {
+        "w_codes": P(*stack, kspec, nspec),
+        "g_eff": P(*stack, None, kspec, nspec),
+        # w_colsum has no K axis — under K-sharding it stays the *global*
+        # correction term (a K-sharded chip's per-rank partial colsums
+        # cannot live in the artifact; the partial-sum serving path
+        # overrides it via ``programmed_linear(colsum=)``)
+        "w_colsum": P(*stack, nspec),
+        "w_scale": P(*stack),
+        "x_scale": P(*stack),
+        # the spare block is a per-group column *budget*, not logical output
+        # columns — keep it whole on every rank that holds the group's rows
+        "g_spare": P(*stack, None, kspec, None),
+        "out_gather": P(*stack, nspec),
+    }
+    return {f: specs[f] for f in ARTIFACT_ARRAY_FIELDS if getattr(art, f) is not None}
+
+
+def dividing_pspec(spec, shape, axis_sizes) -> Any:
+    """Degrade non-dividing PartitionSpec entries to replicated.
+
+    The one shared rule for "can this dim actually shard here": an entry
+    is kept only if every named axis exists in ``axis_sizes`` (a mesh's
+    ``.shape`` mapping) and the axes' total size divides the dim; anything
+    else becomes None.  ``shard_artifacts`` placement, checkpoint
+    ``restore_programmed`` re-placement and ``local_artifact`` slicing all
+    route through this, so a chip is re-placed on restore exactly where
+    the deployment put it — the three sites can never drift apart.
+    """
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    fixed = []
+    for dim, ax in zip(shape, _pspec_entries(spec, len(shape))):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        if any(a not in axis_sizes for a in axes):
+            fixed.append(None)
+            continue
+        size = int(np.prod([axis_sizes[a] for a in axes]))
+        fixed.append(ax if dim % size == 0 else None)
+    return P(*fixed)
+
+
+def artifact_arrays(art: ProgrammedLinear) -> Dict[str, jnp.ndarray]:
+    """{field: array} for every non-None array leaf (shard_map input tree)."""
+    return {
+        f: getattr(art, f)
+        for f in ARTIFACT_ARRAY_FIELDS
+        if getattr(art, f) is not None
+    }
+
+
+def with_arrays(template: ProgrammedLinear, arrays: Dict[str, jnp.ndarray]) -> ProgrammedLinear:
+    """Rebuild an artifact from (rank-local) arrays + a template's static aux.
+
+    The inverse of ``artifact_arrays``: the ``shard_map`` body receives the
+    sliced arrays as inputs, closes over the global artifact as the aux
+    template, and rebinds.  Reports describe the *global* chip and are
+    dropped — a rank-local view must not masquerade as the full record.
+    """
+    missing = {
+        f: None for f in ARTIFACT_ARRAY_FIELDS if f not in arrays
+    }
+    return dataclasses.replace(
+        template, report=None, repair=None, **arrays, **missing
+    )
+
+
+def shard_artifacts(prog: "ProgrammedModel", mesh, specs: Dict[str, Any]) -> "ProgrammedModel":
+    """Place every artifact's arrays on ``mesh`` with its weight's spec.
+
+    ``specs`` maps canonical artifact names to the shadowed weight's
+    PartitionSpec (missing names stay replicated).  Non-dividing dims fall
+    back to replicated per entry — mirroring ``layers.named_sharding_tree``
+    — so a spec tuned for the production mesh degrades gracefully on a
+    smaller test mesh.  Returns a new ProgrammedModel (same tree layout,
+    same aux); under jit/GSPMD the placed arrays serve distributed instead
+    of replicating the 8x ``g_eff`` planes onto every device, and a
+    ``shard_map`` body receiving them with matching in_specs pays no
+    resharding.
+    """
+    from jax.sharding import NamedSharding
+
+    def _place(name: str, art: ProgrammedLinear) -> ProgrammedLinear:
+        wspec = specs.get(name)
+        if wspec is None:
+            return art
+        child_specs = artifact_shard_specs(art, wspec)
+        placed = {
+            f: jax.device_put(
+                getattr(art, f),
+                NamedSharding(
+                    mesh,
+                    dividing_pspec(
+                        child_specs[f], getattr(art, f).shape, mesh.shape
+                    ),
+                ),
+            )
+            for f in child_specs
+        }
+        return dataclasses.replace(art, **placed)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        prog.artifacts, is_leaf=lambda x: isinstance(x, ProgrammedLinear)
+    )
+    leaves = [
+        _place(join_path(path), leaf) if isinstance(leaf, ProgrammedLinear) else leaf
+        for path, leaf in flat
+    ]
+    return ProgrammedModel(jax.tree_util.tree_unflatten(treedef, leaves))
+
+
+def local_artifact(
+    art: ProgrammedLinear,
+    wspec,
+    axis_sizes: Dict[str, int],
+    coords: Dict[str, int],
+) -> ProgrammedLinear:
+    """Materialize one rank's slice of an artifact (host-side, numpy).
+
+    ``axis_sizes`` gives the mesh extent of every named axis in ``wspec``;
+    ``coords`` is this rank's coordinate per axis.  Every array leaf is
+    sliced along the weight's sharded axes; when N (output columns) is
+    sharded and the artifact carries repair tables, ``out_gather`` is
+    re-indexed to *local* column coordinates and ``g_spare`` is compacted to
+    the spares local columns actually use — the per-rank hardware record a
+    physically partitioned deployment would hold.  This is the validation /
+    persistence counterpart of ``shard_artifacts`` (which places global
+    arrays); serving correctness never depends on it because ``g_eff``
+    already holds the repaired layout.
+    """
+    import numpy as np
+
+    child_specs = artifact_shard_specs(art, wspec)
+
+    def _block(entry, dim: int):
+        # entry comes pre-normalized through dividing_pspec: non-dividing
+        # or unknown-axis entries are already None (replicated)
+        if entry is None:
+            return slice(None)
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = int(np.prod([axis_sizes[a] for a in axes]))
+        idx = 0
+        for a in axes:  # row-major linearization, like mesh device order
+            idx = idx * axis_sizes[a] + coords[a]
+        step = dim // size
+        return slice(idx * step, (idx + 1) * step)
+
+    def _slice(a, spec):
+        a = np.asarray(jax.device_get(a))
+        fixed = dividing_pspec(spec, a.shape, axis_sizes)
+        sl = tuple(_block(e, d) for e, d in zip(fixed, a.shape))
+        return a[sl]
+
+    arrays = {f: _slice(getattr(art, f), child_specs[f]) for f in child_specs}
+    # repair re-indexing keys off the *normalized* N entry: if the column
+    # dim could not shard (axis unknown / non-dividing), out_gather was not
+    # sliced above and must keep its global coordinates
+    nspec = tuple(dividing_pspec(wspec, art.w_codes.shape, axis_sizes))[-1]
+    if nspec is not None and art.out_gather is not None:
+        n_cols = int(art.w_codes.shape[-1])
+        size = int(np.prod([axis_sizes[a] for a in (nspec if isinstance(nspec, tuple) else (nspec,))]))
+        n_loc = n_cols // size
+        gather = arrays["out_gather"]
+        lead = gather.shape[:-1]
+        gather = gather.reshape(-1, gather.shape[-1]).copy()
+        spare = arrays["g_spare"]
+        sp_lead = spare.shape[:-3] if spare.ndim > 3 else ()
+        spare2 = spare.reshape((-1,) + spare.shape[-3:]) if spare.ndim > 3 else spare[None]
+        new_spares = []
+        for i in range(gather.shape[0]):
+            row = gather[i]
+            used: list = []
+            for j in range(n_loc):
+                g = int(row[j])
+                if g < n_cols:
+                    # data column: repair only ever redirects a column to
+                    # a spare, so the global value is this column's own
+                    # physical position — locally that is just j
+                    row[j] = j
+                else:
+                    b = g - n_cols
+                    if b not in used:
+                        used.append(b)
+                    row[j] = n_loc + used.index(b)
+            new_spares.append(spare2[i][..., used] if used else spare2[i][..., :0])
+        width = max((s.shape[-1] for s in new_spares), default=0)
+        padded = [
+            np.pad(s, [(0, 0)] * (s.ndim - 1) + [(0, width - s.shape[-1])])
+            for s in new_spares
+        ]
+        spare_out = np.stack(padded).reshape(sp_lead + padded[0].shape) if sp_lead else padded[0]
+        arrays["out_gather"] = gather.reshape(lead + (gather.shape[-1],))
+        arrays["g_spare"] = spare_out
+    arrays = {f: jnp.asarray(v) for f, v in arrays.items()}
+    return with_arrays(art, arrays)
 
 
 # ---------------------------------------------------------------------------
@@ -424,6 +702,35 @@ def artifact_names(artifacts: Any, prefix: str = "") -> Dict[str, "ProgrammedLin
         key = "/".join(p for p in (prefix, rel) if p)
         out[key] = art
     return out
+
+
+# Consumption accounting: every crossbar_linear call that *serves* from an
+# artifact records the canonical name it resolved.  Together with the miss
+# counter (models.layers) this gives the structural name-set check: after a
+# traced forward, the names a ProgrammedModel emitted must equal the names
+# the model consumed — a renamed layer or an artifact nothing serves is
+# caught as a set mismatch even when no lookup ever *misses* (an orphaned
+# artifact produces zero misses; only the consumption side exposes it).
+# Recorded at trace time, bounded by distinct names, thread-local like the
+# miss counter.
+_CONSUMED = threading.local()  # .names: dict[str, None] (insertion-ordered set)
+
+
+def record_artifact_consumed(name: str) -> None:
+    names = getattr(_CONSUMED, "names", None)
+    if names is None:
+        names = _CONSUMED.names = {}
+    names[name] = None
+
+
+def consumed_artifact_names() -> Tuple[str, ...]:
+    """Canonical names served from artifacts since the last reset, in
+    first-consumption order."""
+    return tuple(getattr(_CONSUMED, "names", {}))
+
+
+def reset_consumed_artifact_names() -> None:
+    _CONSUMED.names = {}
 
 
 _BIND = threading.local()  # .maps: list of {name -> ProgrammedLinear}
@@ -573,6 +880,44 @@ class ProgrammedModel:
     @property
     def n_compiled(self) -> int:
         return len(self.by_name)
+
+    @property
+    def emitted_names(self) -> frozenset:
+        """The canonical name set ``program_model`` emitted — the contract a
+        forward pass must consume exactly (``verify_consumed``)."""
+        return frozenset(self.by_name)
+
+    def verify_consumed(self, consumed: Optional[Any] = None) -> None:
+        """Assert a traced forward consumed exactly the emitted name set.
+
+        ``consumed`` defaults to the ambient consumption record
+        (``consumed_artifact_names()`` since the last reset).  Raises
+        ``LookupError`` on any emitted artifact no call site served —
+        the drift mode the miss counter can *never* catch: a renamed layer
+        (or a leaf_filter that compiles a dead leaf) produces an orphaned
+        artifact and zero misses, because nothing ever looks its name up.
+        Names consumed but not emitted are reported alongside (they come
+        from ad-hoc ``bind_artifacts`` scopes and usually accompany a
+        rename).
+        """
+        got = frozenset(consumed_artifact_names() if consumed is None else consumed)
+        unconsumed = self.emitted_names - got
+        unexpected = got - self.emitted_names
+        if unconsumed:
+            raise LookupError(
+                "programmed-artifact name-set drift: "
+                f"{len(unconsumed)}/{len(self.by_name)} emitted artifacts were "
+                f"never consumed by the forward ({', '.join(sorted(unconsumed)[:5])}"
+                + (", ..." if len(unconsumed) > 5 else "")
+                + ")"
+                + (
+                    f"; consumed-but-not-emitted: {', '.join(sorted(unexpected)[:5])}"
+                    if unexpected
+                    else ""
+                )
+                + " — a layer was renamed, or program_model compiled a leaf "
+                "no call site serves."
+            )
 
     def reports(self) -> Dict[str, ProgramReport]:
         """Name -> write-verify report for every compiled leaf that has one."""

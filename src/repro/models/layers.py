@@ -86,6 +86,24 @@ def layout_overrides(cfg) -> Dict[str, Any]:
             "experts": None,
             "act_seq": None,
         }
+    if getattr(cfg, "layout", "") == "ep_only":
+        # Expert-parallel-only serving: the MoE expert banks shard over
+        # "model"; every other tensor (and every activation constraint)
+        # stays replicated.  The digital parts of the graph then compile
+        # identically to single-device, which makes programmed crossbar
+        # serving on a mesh *bit-identical* to the single-device chip —
+        # the distributed test tier pins exactly this
+        # (tests/test_sharded_artifacts.py).
+        return {
+            "batch": None,
+            "seq_shard": None,
+            "vocab": None,
+            "heads": None,
+            "kv_heads": None,
+            "mlp": None,
+            "d_inner": None,
+            "act_seq": None,
+        }
     if getattr(cfg, "layout", "") == "expert_tp":
         # Weights-stationary MoE serving: experts sharded over "data",
         # expert FFN contraction dims TP-sharded over "model" — no FSDP
@@ -349,8 +367,11 @@ class CrossbarMode:
     (Pallas kernel; interpret-mode on CPU) instead of XLA matmul; only
     activation-activation products (attention scores/values) stay digital
     (tests/test_models_smoke.py pins the coverage on dense and MoE
-    configs).  Exception: ``shard_map`` expert/TP bodies see rank-local
-    weight shards and stay digital for now — loudly (``note_crossbar_gap``).
+    configs).  ``shard_map`` expert-/tensor-parallel bodies serve too:
+    artifacts shard with the weights they shadow
+    (``device.programmed.shard_artifacts``), the bodies rebind rank-local
+    slices by name, and expert-parallel serving stays bit-identical to
+    single-device (tests/test_sharded_artifacts.py).
 
     ``device`` (a ``repro.device.DeviceConfig``) additionally routes the
     matmul through the memristor non-ideality pipeline — stuck cells,
@@ -408,16 +429,25 @@ def reset_crossbar_misses() -> None:
     _MISSES.counts = {}
 
 
+def restore_crossbar_misses(counts: Dict[str, int]) -> None:
+    """Overwrite the miss record with a snapshot from
+    ``crossbar_miss_counts`` — for internal traces (e.g. the engine's
+    construction-time coverage check) that must not leave their own
+    trace-time misses behind for an operator to misread."""
+    _MISSES.counts = dict(counts)
+
+
 def note_crossbar_gap(name: str) -> None:
     """Record that a weight-bearing computation stayed digital under an
     active ProgrammedModel.
 
-    For paths ``crossbar_linear`` cannot serve yet — the ``shard_map``
-    expert bodies see rank-local weight shards that no global artifact
-    matches (ROADMAP: per-rank artifact sharding) — the coverage gap must
-    still be *loud*: it counts as a miss and raises under strict mode,
-    never silently misreporting crossbar coverage.  No-op when no
-    ProgrammedModel is active (digital/per-call runs are not gaps).
+    Since per-rank artifact sharding, the ``shard_map`` EP/TP bodies serve
+    from rank-local artifact slices, so this fires only when a body finds
+    *no* artifact to rebind (a partially-programmed model, a stale store):
+    the coverage gap must still be loud — it counts as a miss and raises
+    under strict mode, never silently misreporting crossbar coverage.
+    No-op when no ProgrammedModel is active (digital/per-call runs are not
+    gaps).
     """
     if not _CROSSBAR.enabled or _CROSSBAR.programmed is None:
         return
@@ -428,8 +458,10 @@ def note_crossbar_gap(name: str) -> None:
     if _CROSSBAR.strict:
         raise LookupError(
             f"crossbar coverage gap: {key!r} runs digitally inside a mesh-"
-            "sharded path (rank-local weight shards cannot resolve global "
-            "artifacts); shard the artifacts per rank or drop strict mode."
+            "sharded path — no programmed artifact was bound for it to "
+            "rebind per rank (a partially-programmed model or a stale "
+            "artifact store); program the missing leaf (program_model "
+            "leaf_filter), refresh the store, or drop strict mode."
         )
 
 
@@ -513,6 +545,10 @@ def crossbar_linear(
     if art is not None:
         from repro.device import programmed as prog
 
+        # consumption record for the structural name-set check: after a
+        # traced forward, ProgrammedModel.verify_consumed compares the
+        # emitted name set against exactly these hits
+        prog.record_artifact_consumed(key)
         # x passed as-is: programmed_linear offset-encodes in x.dtype before
         # casting, mirroring the fallback below op-for-op (pre-casting bf16
         # activations here would break bit-identity between the two paths)

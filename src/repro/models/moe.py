@@ -76,20 +76,16 @@ def _act(u, g, kind: str):
     return jnp.square(jax.nn.relu(u))
 
 
-def _expert_ffn(h: jnp.ndarray, wi, wg, wo, kind: str, crossbar_ok: bool = True) -> jnp.ndarray:
+def _expert_ffn(h: jnp.ndarray, wi, wg, wo, kind: str) -> jnp.ndarray:
     """h: (E, C, D); wi/wg: (E, D, F); wo: (E, F, D).
 
-    ``crossbar_ok=False`` marks calls from inside ``shard_map`` bodies,
-    where the weights are rank-local shards that no global artifact can
-    match — those stay digital (pre-crossbar behavior), but the coverage
-    gap is recorded loudly (``note_crossbar_gap``: counted miss, fatal
-    under strict) instead of silently misreporting crossbar coverage.
+    Inside ``shard_map`` bodies the weights are rank-local expert shards;
+    per-rank artifact sharding rebinds the matching rank-local artifact
+    slices by name before this runs, so the crossbar path below serves
+    expert-parallel ranks exactly like the single-device path (each
+    expert's (D, F) slab is intact on its owner rank — bit-identical).
     """
-    if not current_crossbar().enabled or not crossbar_ok:
-        if not crossbar_ok:
-            for n, w in (("wi", wi), ("wg", wg), ("wo", wo)):
-                if w is not None:
-                    note_crossbar_gap(n)
+    if not current_crossbar().enabled:
         u = jnp.einsum("ecd,edf->ecf", h, wi)
         g = jnp.einsum("ecd,edf->ecf", h, wg) if wg is not None else None
         a = _act(u, g, kind)
@@ -134,6 +130,46 @@ def _expert_ffn_crossbar(h: jnp.ndarray, wi, wg, wo, kind: str) -> jnp.ndarray:
     return y
 
 
+# ---------------------------------------------------------------------------
+# Per-rank artifact plumbing for shard_map bodies
+# ---------------------------------------------------------------------------
+
+def _artifact_shard_inputs(entries):
+    """Stage this layer's programmed artifacts for ``shard_map`` passing.
+
+    ``entries``: ``(name, weight, weight_pspec)`` per projection the body
+    serves.  For every name that resolves a bound artifact (the stage scan
+    binds the layer-sliced banks just outside this call), returns parallel
+    dicts: ``arrays`` (the artifact's array leaves — a shard_map input
+    pytree), ``specs`` (matching in_specs, derived from the *weight's*
+    PartitionSpec so artifact shards track weight shards axis-for-axis) and
+    ``templates`` (the global artifacts, closed over for their static aux).
+    Names with no artifact are simply absent — the body notes the gap
+    loudly if a ProgrammedModel is active.
+    """
+    from repro.device import programmed as prog
+
+    arrays, specs, templates = {}, {}, {}
+    for name, w, wspec in entries:
+        if w is None:
+            continue
+        art = lookup_crossbar_artifact(name, w.shape)
+        if art is None:
+            continue
+        arrays[name] = prog.artifact_arrays(art)
+        specs[name] = prog.artifact_shard_specs(art, wspec)
+        templates[name] = art
+    return arrays, specs, templates
+
+
+def _rebind_rank_artifacts(templates, arrays):
+    """Rebuild rank-local artifacts from shard_map-sliced arrays (inside the
+    body) keyed by the same call-site names the global binding used."""
+    from repro.device import programmed as prog
+
+    return {n: prog.with_arrays(templates[n], arrays[n]) for n in arrays}
+
+
 def _dispatch_compute(
     xf: jnp.ndarray,  # (N, D) tokens
     top_idx: jnp.ndarray,  # (N, k) global expert ids
@@ -144,7 +180,6 @@ def _dispatch_compute(
     lo: jnp.ndarray,  # first global expert id owned locally
     capacity: int,
     mlp_kind: str,
-    crossbar_ok: bool = True,
 ) -> jnp.ndarray:
     """Capacity-bounded dispatch -> expert FFN -> weighted combine.
 
@@ -177,26 +212,21 @@ def _dispatch_compute(
         .set(flat_gate[order] * keep.astype(flat_gate.dtype))
     )
     buf = xf[tok_slot[:n_slots]].reshape(E_loc, capacity, -1)
-    out = _expert_ffn(buf, wi, wg, wo, mlp_kind, crossbar_ok=crossbar_ok)
+    out = _expert_ffn(buf, wi, wg, wo, mlp_kind)
     contrib = out.reshape(n_slots, -1) * gate_slot[:n_slots, None].astype(out.dtype)
     y = jnp.zeros_like(xf).at[tok_slot[:n_slots]].add(contrib.astype(xf.dtype))
     return y
 
 
-def _route(x: jnp.ndarray, router_w: jnp.ndarray, cfg: ModelConfig,
-           crossbar_ok: bool = True):
+def _route(x: jnp.ndarray, router_w: jnp.ndarray, cfg: ModelConfig):
     # the router is a weight-bearing projection like any other: under an
     # enabled CrossbarMode it runs on the crossbar datapath (programmed or
     # per-call), so routing decisions are made from the analog logits the
-    # deployed chip would actually produce.  Inside shard_map bodies it
-    # stays digital (crossbar_ok=False) and the gap is recorded loudly.
-    if crossbar_ok:
-        logits = crossbar_linear(x, router_w.astype(x.dtype), name="router").astype(
-            jnp.float32
-        )
-    else:
-        note_crossbar_gap("router")
-        logits = (x @ router_w.astype(x.dtype)).astype(jnp.float32)
+    # deployed chip would actually produce.  Inside shard_map EP bodies the
+    # router weight is replicated and its (rebound) artifact serves whole.
+    logits = crossbar_linear(x, router_w.astype(x.dtype), name="router").astype(
+        jnp.float32
+    )
     probs = jax.nn.softmax(logits, axis=-1)
     gates, idx = jax.lax.top_k(probs, cfg.moe_top_k)
     gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
@@ -250,21 +280,36 @@ def _moe_alltoall(params, x, cfg: ModelConfig, mesh, batch_axes):
         P(batch_axes, "model", None) if B % dp == 0 else P(None, "model", None)
     )
 
-    def body(xl, rw, wi_l, wg_l, wo_l):
+    wg = params.get("wg")
+    e_spec = P("model", None, None)
+    # per-rank artifact sharding: the expert banks' artifacts slice along E
+    # with the weights (router stays replicated, its artifact whole), so the
+    # body serves programmed from rank-local chips instead of going digital
+    from repro.device.programmed import bind_artifacts
+
+    arts, aspecs, tmpl = _artifact_shard_inputs((
+        ("router", params["router"], P(None, None)),
+        ("wi", params["wi"], e_spec),
+        ("wg", wg, e_spec),
+        ("wo", params["wo"], e_spec),
+    ))
+
+    def body(xl, rw, wi_l, wg_l, wo_l, arts_l):
         Bl, Sl, _ = xl.shape
         xf = xl.reshape(-1, D)
-        idx, gates, _ = _route(xl, rw, cfg, crossbar_ok=False)
-        tok_slot, gate_slot = _dispatch_indices(
-            idx.reshape(-1, cfg.moe_top_k), gates.reshape(-1, cfg.moe_top_k), E, cap
-        )
-        buf = xf[tok_slot]  # (E * cap, D): rows for every (expert, slot)
-        # dispatch: slice per destination rank, exchange
-        buf = buf.reshape(n_ranks, E_loc * cap, D)
-        buf = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=0, tiled=True)
-        # now (n_ranks * E_loc * cap, D) = this rank's experts, all sources
-        h = buf.reshape(n_ranks, E_loc, cap, D).transpose(1, 0, 2, 3)
-        h = h.reshape(E_loc, n_ranks * cap, D)
-        out = _expert_ffn(h, wi_l, wg_l, wo_l, cfg.mlp_kind, crossbar_ok=False)
+        with bind_artifacts(_rebind_rank_artifacts(tmpl, arts_l)):
+            idx, gates, _ = _route(xl, rw, cfg)
+            tok_slot, gate_slot = _dispatch_indices(
+                idx.reshape(-1, cfg.moe_top_k), gates.reshape(-1, cfg.moe_top_k), E, cap
+            )
+            buf = xf[tok_slot]  # (E * cap, D): rows for every (expert, slot)
+            # dispatch: slice per destination rank, exchange
+            buf = buf.reshape(n_ranks, E_loc * cap, D)
+            buf = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=0, tiled=True)
+            # now (n_ranks * E_loc * cap, D) = this rank's experts, all sources
+            h = buf.reshape(n_ranks, E_loc, cap, D).transpose(1, 0, 2, 3)
+            h = h.reshape(E_loc, n_ranks * cap, D)
+            out = _expert_ffn(h, wi_l, wg_l, wo_l, cfg.mlp_kind)
         out = out.reshape(E_loc, n_ranks, cap, D).transpose(1, 0, 2, 3)
         out = out.reshape(n_ranks, E_loc * cap, D)
         out = jax.lax.all_to_all(out, "model", split_axis=0, concat_axis=0, tiled=True)
@@ -272,15 +317,16 @@ def _moe_alltoall(params, x, cfg: ModelConfig, mesh, batch_axes):
         y = jnp.zeros_like(xf).at[tok_slot].add(contrib.astype(xf.dtype))
         return y.reshape(Bl, Sl, D)
 
-    wg = params.get("wg")
-    e_spec = P("model", None, None)
     return shard_map(
         body,
         mesh=mesh,
-        in_specs=(x_spec, P(None, None), e_spec, None if wg is None else e_spec, e_spec),
+        in_specs=(
+            x_spec, P(None, None), e_spec, None if wg is None else e_spec, e_spec,
+            aspecs,
+        ),
         out_specs=x_spec,
         check_rep=False,
-    )(x, params["router"], params["wi"], wg, params["wo"])
+    )(x, params["router"], params["wi"], wg, params["wo"], arts)
 
 
 def _moe_expert_tp(params, x, cfg: ModelConfig, mesh, batch_axes):
@@ -301,20 +347,67 @@ def _moe_expert_tp(params, x, cfg: ModelConfig, mesh, batch_axes):
     # tokens: batch over data, D sharded over model (activations tiny)
     x_spec = P(batch_axes, None, "model") if B % dp == 0 else P(None, None, "model")
 
-    def body(xl, rw_l, wi_l, wg_l, wo_l):
+    wg = params.get("wg")
+    wspec_i = P("data", "model", None)
+    wspec_o = P("data", "model", None)
+    # per-rank artifact sharding, TP flavor: every projection here contracts
+    # over a mesh-sharded dim, so each rank holds *rows of the global chip*
+    # (experts additionally sharded over "data").  Rank-local artifacts
+    # serve partial sums — physically, row-split crossbar tiles whose
+    # results the existing psum/psum_scatter collectives accumulate
+    # digitally, exactly the paper's inter-tile reduction at cluster scale.
+    from repro.device.programmed import programmed_linear as _plin
+
+    arts, aspecs, tmpl = _artifact_shard_inputs((
+        ("router", params["router"], P("model", None)),
+        ("wi", params["wi"], wspec_i),
+        ("wg", wg, wspec_i),
+        ("wo", params["wo"], wspec_o),
+    ))
+
+    def body(xl, rw_l, wi_l, wg_l, wo_l, arts_l):
         # xl: (B_loc, S, D/mr); rw_l: (D/mr, E); wi_l/wg_l: (E_dp, D/mr, F);
         # wo_l: (E_dp, F/mr, D)
-        # every projection here contracts over a mesh-sharded dim, so the
-        # weights are rank-local shards no global artifact matches: the
-        # whole body stays digital, and under a ProgrammedModel that
-        # coverage gap is recorded loudly (counted miss, fatal in strict)
-        for gap in ("router", "wi", "wo") + (() if wg_l is None else ("wg",)):
-            note_crossbar_gap(gap)
+        from repro.device import programmed as _prog
+
+        local = _rebind_rank_artifacts(tmpl, arts_l)
+        for n in local:
+            # the TP partial path serves below via programmed_linear directly
+            # (crossbar_linear cannot express the colsum override), so record
+            # consumption here for the structural name-set check
+            _prog.record_artifact_consumed(_prog.scoped_name(n))
+
+        def _partial(xe, we, art):
+            # K-sharded programmed partial: the artifact's sliced rows are
+            # the rows the global chip programmed (quantization is
+            # elementwise in w); the offset correction must use the *local*
+            # rows' column sums — sum_r(shift_r * colsum_r) reconstitutes
+            # the full correction exactly under the caller's all-reduce
+            return _plin(xe, art, colsum=jnp.sum(we.astype(jnp.float32), axis=0))
+
+        def _bank(h, w_l, name):
+            # (E_dp, C, K_loc) @ (E_dp, K_loc, N) partial sums, per-expert
+            # scan so HLO size stays E-independent; collectives hoisted out
+            art = local.get(name)
+            if art is None:
+                note_crossbar_gap(name)
+                return jnp.einsum("ecd,edf->ecf", h, w_l)
+
+            def f(c, xs_):
+                he, we, ae = xs_
+                return c, _partial(he, we, ae).astype(he.dtype)
+
+            _, u = jax.lax.scan(f, 0, (h, w_l, art))
+            return u
+
         Bl, Sl, Dl = xl.shape
         xf = xl.reshape(-1, Dl)
-        logits = jax.lax.psum(
-            (xf @ rw_l.astype(xf.dtype)).astype(jnp.float32), "model"
-        )
+        if "router" in local:
+            part = _partial(xf, rw_l.astype(xf.dtype), local["router"])
+        else:
+            note_crossbar_gap("router")
+            part = (xf @ rw_l.astype(xf.dtype)).astype(jnp.float32)
+        logits = jax.lax.psum(part.astype(jnp.float32), "model")
         probs = jax.nn.softmax(logits, axis=-1)
         gates, idx = jax.lax.top_k(probs, cfg.moe_top_k)
         gates = (gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)).astype(xf.dtype)
@@ -325,15 +418,15 @@ def _moe_expert_tp(params, x, cfg: ModelConfig, mesh, batch_axes):
         h = buf.reshape(n_dr, E_dp, cap, Dl).transpose(1, 0, 2, 3).reshape(E_dp, n_dr * cap, Dl)
         # expert matmuls: contraction over the model-sharded D, then psum-
         # scatter onto the model-sharded F — weights never move
-        u = jnp.einsum("ecd,edf->ecf", h, wi_l)
+        u = _bank(h, wi_l, "wi")
         u = jax.lax.psum_scatter(u, "model", scatter_dimension=2, tiled=True)
         if wg_l is not None:
-            g = jnp.einsum("ecd,edf->ecf", h, wg_l)
+            g = _bank(h, wg_l, "wg")
             g = jax.lax.psum_scatter(g, "model", scatter_dimension=2, tiled=True)
         else:
             g = None
         a = _act(u, g, cfg.mlp_kind)  # (E_dp, slots, F/mr)
-        out = jnp.einsum("ecf,efd->ecd", a, wo_l)  # partial over F -> full D
+        out = _bank(a, wo_l, "wo")  # partial over F -> full D
         out = jax.lax.psum_scatter(out, "model", scatter_dimension=2, tiled=True)
         # back to sources
         out = out.reshape(E_dp, n_dr, cap, Dl).transpose(1, 0, 2, 3).reshape(n_dr, E_dp * cap, Dl)
@@ -342,9 +435,6 @@ def _moe_expert_tp(params, x, cfg: ModelConfig, mesh, batch_axes):
         y = jnp.zeros_like(xf).at[tok_slot].add(contrib.astype(xf.dtype))
         return y.reshape(Bl, Sl, Dl)
 
-    wg = params.get("wg")
-    wspec_i = P("data", "model", None)
-    wspec_o = P("data", "model", None)
     y = shard_map(
         body,
         mesh=mesh,
@@ -354,10 +444,11 @@ def _moe_expert_tp(params, x, cfg: ModelConfig, mesh, batch_axes):
             wspec_i,
             None if wg is None else wspec_i,
             wspec_o,
+            aspecs,
         ),
         out_specs=x_spec,
         check_rep=False,
-    )(x, params["router"], params["wi"], wg, params["wo"])
+    )(x, params["router"], params["wi"], wg, params["wo"], arts)
     return y
 
 
@@ -417,34 +508,50 @@ def moe_ffn(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
         cap = _capacity(n_local, cfg, E // model_size)
         x_spec = P(batch_axes, None, None) if B % dp == 0 else P(None, None, None)
 
-        def body(xl, rw, wi_l, wg_l, wo_l):
-            Bl, Sl, _ = xl.shape
-            idx, gates, _ = _route(xl, rw, cfg, crossbar_ok=False)
-            rank = jax.lax.axis_index("model")
-            lo = rank.astype(jnp.int32) * (E // model_size)
-            y = _dispatch_compute(
-                xl.reshape(-1, D),
-                idx.reshape(-1, cfg.moe_top_k),
-                gates.reshape(-1, cfg.moe_top_k),
-                wi_l,
-                wg_l,
-                wo_l,
-                lo,
-                cap,
-                cfg.mlp_kind,
-                crossbar_ok=False,  # rank-local expert shards, see _expert_ffn
-            ).reshape(Bl, Sl, D)
-            return jax.lax.psum(y, "model")
-
         wg = params.get("wg")
         e_spec = P("model", None, None)
+        # per-rank artifact sharding: each expert bank's artifact slices
+        # along E exactly like its weight, so every rank serves its local
+        # experts from the programmed chip — bit-identical to single-device
+        # (each expert's (D, F) slab is intact on its owner rank)
+        from repro.device.programmed import bind_artifacts
+
+        arts, aspecs, tmpl = _artifact_shard_inputs((
+            ("router", params["router"], P(None, None)),
+            ("wi", params["wi"], e_spec),
+            ("wg", wg, e_spec),
+            ("wo", params["wo"], e_spec),
+        ))
+
+        def body(xl, rw, wi_l, wg_l, wo_l, arts_l):
+            Bl, Sl, _ = xl.shape
+            with bind_artifacts(_rebind_rank_artifacts(tmpl, arts_l)):
+                idx, gates, _ = _route(xl, rw, cfg)
+                rank = jax.lax.axis_index("model")
+                lo = rank.astype(jnp.int32) * (E // model_size)
+                y = _dispatch_compute(
+                    xl.reshape(-1, D),
+                    idx.reshape(-1, cfg.moe_top_k),
+                    gates.reshape(-1, cfg.moe_top_k),
+                    wi_l,
+                    wg_l,
+                    wo_l,
+                    lo,
+                    cap,
+                    cfg.mlp_kind,
+                ).reshape(Bl, Sl, D)
+            return jax.lax.psum(y, "model")
+
         y = shard_map(
             body,
             mesh=mesh,
-            in_specs=(x_spec, P(None, None), e_spec, None if wg is None else e_spec, e_spec),
+            in_specs=(
+                x_spec, P(None, None), e_spec, None if wg is None else e_spec,
+                e_spec, aspecs,
+            ),
             out_specs=x_spec,
             check_rep=False,
-        )(x, params["router"], params["wi"], wg, params["wo"])
+        )(x, params["router"], params["wi"], wg, params["wo"], arts)
 
     if cfg.moe_shared_experts:
         if cfg.moe_dispatch == "alltoall":

@@ -31,6 +31,19 @@ gather tables — through ``repro.checkpoint``; a later
 ``ServingEngine(..., restore_artifacts=dir)`` restores the *same* chip
 bit-for-bit and skips reprogramming entirely (restart latency is file I/O,
 not write-verify).
+
+Mesh serving: pass ``mesh=`` (plus ``param_axes=`` from ``init_model``)
+and every jitted step runs under the mesh with the config's layout
+overrides, so the model's ``shard_map`` EP/TP paths engage; programmed
+artifacts are sharded with the same PartitionSpecs as the weights they
+shadow (``device.programmed.shard_artifacts``) and the bodies rebind
+rank-local slices by name — expert-parallel serving is bit-identical to
+the single-device chip (tests/test_sharded_artifacts.py).  Saved stores
+record the deployment sharding; restore re-places shards on the mesh.
+``verify_coverage`` (default on) runs the structural name-set check at
+construction: one abstract trace asserts the forward consumes exactly the
+emitted artifact name set, failing loudly on drift a miss counter cannot
+see (an orphaned artifact misses nothing — nothing ever looks it up).
 """
 from __future__ import annotations
 
@@ -77,6 +90,9 @@ class ServingEngine:
         crossbar: Optional[CrossbarMode] = None,
         spare_cols: Optional[int] = None,
         restore_artifacts: Optional[str] = None,
+        mesh=None,
+        param_axes=None,
+        verify_coverage: bool = True,
     ):
         self.cfg = cfg
         self.params = params
@@ -84,7 +100,16 @@ class ServingEngine:
         self.max_seq = max_seq
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
+        # mesh serving: every jitted step runs under ``use_mesh(mesh,
+        # layout_overrides(cfg))`` so the model's shard_map EP/TP paths
+        # engage; ``param_axes`` (the logical-axes tree from init_model)
+        # lets the engine shard programmed artifacts with the same specs as
+        # the weights they shadow (device.programmed.shard_artifacts)
+        self.mesh = mesh
+        self.param_axes = param_axes
         self.crossbar = self._program_crossbars(crossbar, spare_cols, restore_artifacts)
+        if verify_coverage:
+            self.verify_crossbar_coverage()
         self.cache = model_lib.init_cache(cfg, max_batch, max_seq, dtype=jnp.float32)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.pos = np.zeros(max_batch, np.int32)  # position of next write
@@ -146,7 +171,10 @@ class ServingEngine:
             from repro.checkpoint import restore_programmed
             from repro.device.programmed import expected_artifact_names
 
-            prog = restore_programmed(restore_artifacts)
+            # restore re-places shards on the engine's mesh from the specs
+            # recorded at save time; _shard_artifacts below re-derives from
+            # param_axes as well, so either source of truth suffices
+            prog = restore_programmed(restore_artifacts, mesh=self.mesh)
             # a stale or mismatched store would resolve no artifacts and
             # silently degrade every projection to per-call reprogramming —
             # the exact silent fallback this engine exists to prevent, so
@@ -167,7 +195,7 @@ class ServingEngine:
                     + (", ..." if len(bad) > 5 else "")
                     + ") — was it saved from a different model/config?"
                 )
-            return dataclasses.replace(crossbar, programmed=prog)
+            return dataclasses.replace(crossbar, programmed=self._shard_artifacts(prog))
         # spare_cols=0 means "no repair" and is a no-op wherever repair could
         # not happen anyway; a *positive* budget that cannot take effect is a
         # misconfiguration — silently serving unrepaired while the operator
@@ -209,7 +237,89 @@ class ServingEngine:
             # the embedding's name (name-keyed binding makes this possible)
             tie_lm_head=(self.cfg.tie_embeddings and self.cfg.frontend == "token"),
         )
-        return dataclasses.replace(crossbar, programmed=prog)
+        return dataclasses.replace(crossbar, programmed=self._shard_artifacts(prog))
+
+    def _shard_artifacts(self, prog):
+        """Place every artifact on the engine's mesh with its weight's spec.
+
+        No-op without a mesh or without ``param_axes`` (artifacts stay
+        replicated — the shard_map bodies still slice them per rank on the
+        fly, so correctness never depends on placement, only memory/traffic
+        does: an unplaced 8-plane ``g_eff`` would otherwise be resident on
+        every device).
+        """
+        if self.mesh is None or self.param_axes is None or prog is None:
+            return prog
+        from jax.sharding import PartitionSpec as P
+
+        from repro.device.programmed import join_path, shard_artifacts
+        from repro.models.layers import layout_overrides, pspec, use_mesh
+
+        flat_axes = jax.tree_util.tree_flatten_with_path(
+            self.param_axes, is_leaf=lambda x: isinstance(x, tuple)
+        )[0]
+        axes_by_name = {join_path(p): a for p, a in flat_axes}
+        shapes_by_name = {
+            join_path(p): tuple(leaf.shape)
+            for p, leaf in jax.tree_util.tree_flatten_with_path(self.params)[0]
+        }
+        specs = {}
+        with use_mesh(self.mesh, layout_overrides(self.cfg)):
+            for name, art in prog.by_name.items():
+                axes = axes_by_name.get(name)
+                if axes is None:
+                    continue
+                spec = pspec(axes, self.mesh)
+                wshape = shapes_by_name.get(name)
+                if art.shape == wshape:
+                    specs[name] = spec
+                elif wshape is not None and art.shape == tuple(reversed(wshape)):
+                    # the tied-head artifact is the embedding's transpose,
+                    # programmed under the embedding's name: reverse the spec
+                    specs[name] = P(*reversed(tuple(spec) + (None,) * (len(wshape) - len(tuple(spec)))))
+        return shard_artifacts(prog, self.mesh, specs)
+
+    def verify_crossbar_coverage(self) -> None:
+        """Structural name-set check at construction (abstract trace only).
+
+        Traces one forward with ``jax.eval_shape`` under the engine's
+        crossbar mode and asserts the programmed model's emitted name set
+        was consumed exactly — a renamed layer or an artifact no call site
+        serves fails engine construction loudly, *before* the first request
+        (and before the miss counter could ever catch the orphaned-artifact
+        direction, which produces zero misses).  No kernels execute and
+        nothing is allocated.
+        """
+        if self.crossbar is None or self.crossbar.programmed is None:
+            return
+        from repro.device import programmed as prog_mod
+        from repro.models import layers as layers_mod
+        from repro.models import model as model_lib
+
+        if self.cfg.frontend == "token":
+            inp = jax.ShapeDtypeStruct((1, 4), jnp.int32)
+        else:
+            inp = jax.ShapeDtypeStruct((1, 4, self.cfg.d_model), jnp.float32)
+        # snapshot the ambient trace-time records: this internal trace must
+        # neither clobber a caller's in-flight consumption record nor leave
+        # its own misses behind for an operator to misread as serving-time
+        before_consumed = prog_mod.consumed_artifact_names()
+        before_misses = layers_mod.crossbar_miss_counts()
+        prog_mod.reset_consumed_artifact_names()
+        try:
+            jax.eval_shape(
+                lambda p, t: self._with_crossbar(
+                    lambda: model_lib.forward(p, self.cfg, t)
+                ),
+                self.params,
+                inp,
+            )
+            self.crossbar.programmed.verify_consumed()
+        finally:
+            prog_mod.reset_consumed_artifact_names()
+            for n in before_consumed:
+                prog_mod.record_artifact_consumed(n)
+            layers_mod.restore_crossbar_misses(before_misses)
 
     def save_artifacts(self, directory: str) -> str:
         """Persist the programmed chip so a restart can restore instead of
@@ -231,18 +341,22 @@ class ServingEngine:
         return self.crossbar.programmed.repair_reports()
 
     def _with_crossbar(self, fn):
-        """Run ``fn`` under the engine's crossbar mode, with the programmed
-        model's name-keyed artifact table bound for the dynamic scope
-        (works at jit trace time — lookups resolve by name, not by leaf
-        identity, so any congruent params tree serves)."""
-        if self.crossbar is None:
-            return fn()
-        bind = (
-            self.crossbar.programmed.bind()
-            if self.crossbar.programmed is not None
-            else contextlib.nullcontext()
-        )
-        with crossbar_mode(self.crossbar), bind:
+        """Run ``fn`` under the engine's mesh and crossbar mode, with the
+        programmed model's name-keyed artifact table bound for the dynamic
+        scope (works at jit trace time — lookups resolve by name, not by
+        leaf identity, so any congruent params tree serves).  With a mesh,
+        the model's shard_map EP/TP paths engage and their bodies rebind
+        rank-local artifact slices."""
+        with contextlib.ExitStack() as stack:
+            if self.mesh is not None:
+                from repro.models.layers import layout_overrides, use_mesh
+
+                stack.enter_context(use_mesh(self.mesh, layout_overrides(self.cfg)))
+                stack.enter_context(self.mesh)
+            if self.crossbar is not None:
+                stack.enter_context(crossbar_mode(self.crossbar))
+                if self.crossbar.programmed is not None:
+                    stack.enter_context(self.crossbar.programmed.bind())
             return fn()
 
     # ------------------------------------------------------------------

@@ -18,6 +18,8 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+pytestmark = pytest.mark.dist
+
 
 def _run(code: str) -> dict:
     env = dict(os.environ)

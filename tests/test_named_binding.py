@@ -321,6 +321,105 @@ def test_note_crossbar_gap():
             note_crossbar_gap("wi")
 
 
+# ---------------------------------------------------------------------------
+# Structural name-set check (ISSUE 5 satellite)
+# ---------------------------------------------------------------------------
+
+def test_program_model_emits_and_forward_consumes_exactly():
+    """``program_model`` returns its emitted name set
+    (``ProgrammedModel.emitted_names``); a traced forward consumes exactly
+    that set (``verify_consumed`` passes, and the consumption record
+    matches name for name)."""
+    import jax.numpy as jnp
+
+    from benchmarks.noise_sweep import tiny_lm_config
+    from repro.device.programmed import (
+        consumed_artifact_names,
+        reset_consumed_artifact_names,
+    )
+    from repro.models import model as M
+
+    cfg = tiny_lm_config()
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    prog = program_model(params)
+    assert prog.emitted_names == frozenset(prog.by_name)
+    reset_consumed_artifact_names()
+    with crossbar_mode(CrossbarMode(enabled=True, fast=True, programmed=prog)):
+        jax.make_jaxpr(lambda p, t: M.forward(p, cfg, t))(
+            params, jnp.zeros((1, 4), jnp.int32)
+        )
+    assert frozenset(consumed_artifact_names()) == prog.emitted_names
+    prog.verify_consumed()
+    reset_consumed_artifact_names()
+
+
+def test_renamed_layer_raises_before_miss_counter_catches_it():
+    """Drift test: rename a layer between programming and serving.  The
+    orphaned artifacts produce **zero misses** — nothing ever looks their
+    names up — so the miss counter alone would report a fully-covered
+    forward while half the chip silently serves nothing.  The structural
+    check (``verify_consumed``) raises on exactly this."""
+    import jax.numpy as jnp
+
+    from benchmarks.noise_sweep import tiny_lm_config
+    from repro.device.programmed import reset_consumed_artifact_names
+    from repro.models import model as M
+
+    cfg = tiny_lm_config()
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    # programming sees a tree whose stage was renamed (stage0 -> stage0_v2):
+    # every block artifact is emitted under the renamed path
+    renamed = dict(params)
+    renamed["stage0_v2"] = renamed.pop("stage0")
+    prog = program_model(renamed)
+    assert any(n.startswith("stage0_v2/") for n in prog.emitted_names)
+
+    reset_crossbar_misses()
+    reset_consumed_artifact_names()
+    with crossbar_mode(CrossbarMode(enabled=True, fast=True, programmed=prog)):
+        jax.make_jaxpr(lambda p, t: M.forward(p, cfg, t))(
+            params, jnp.zeros((1, 4), jnp.int32)
+        )
+    # the head artifact (unrenamed) was consumed; the renamed block
+    # artifacts were not — and the *misses* only see the consuming side
+    with pytest.raises(LookupError, match="name-set drift"):
+        prog.verify_consumed()
+    reset_consumed_artifact_names()
+
+
+def test_engine_verify_coverage_fails_on_orphaned_artifact(tmp_path):
+    """ServingEngine runs the structural check at construction: a restored
+    store that *superset*-matches the model (every needed artifact present,
+    plus an orphan nothing serves) passes the shape cross-check but fails
+    ``verify_coverage`` — before the first request is ever admitted."""
+    import jax.numpy as jnp
+
+    from benchmarks.noise_sweep import tiny_lm_config
+    from repro.models import model as M
+    from repro.serving.engine import ServingEngine
+
+    cfg = tiny_lm_config()
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    # a store with every model projection plus one orphaned leaf
+    extra = dict(params)
+    extra["dead_branch"] = {
+        "wq": jnp.asarray(np.random.default_rng(0).normal(size=(8, 4)).astype(np.float32))
+    }
+    save_programmed(str(tmp_path), program_model(extra))
+    with pytest.raises(LookupError, match="name-set drift"):
+        ServingEngine(
+            cfg, params, max_batch=1, max_seq=16,
+            crossbar=CrossbarMode(enabled=True), restore_artifacts=str(tmp_path),
+        )
+    # the check is opt-out for exotic setups
+    eng = ServingEngine(
+        cfg, params, max_batch=1, max_seq=16,
+        crossbar=CrossbarMode(enabled=True), restore_artifacts=str(tmp_path),
+        verify_coverage=False,
+    )
+    assert eng.crossbar.programmed is not None
+
+
 def test_restore_falls_back_to_interrupted_swap_states(tmp_path):
     """A crash inside save_programmed's two-rename swap leaves the store
     under 'programmed.tmp' (complete, not yet renamed) or 'programmed.old'
