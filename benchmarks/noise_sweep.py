@@ -247,6 +247,163 @@ def model_fault_recovery(
     }
 
 
+def _programmed_logits(params, cfg, tokens, prog=None, fast=False) -> np.ndarray:
+    """Forward under the crossbar path: per-call ideal when ``prog`` is
+    None, else served from the bound programmed artifacts."""
+    from repro.models import model as M
+    from repro.models.layers import CrossbarMode, crossbar_mode
+
+    with crossbar_mode(CrossbarMode(enabled=True, fast=fast, programmed=prog)):
+        return np.asarray(M.forward(params, cfg, tokens), np.float32)
+
+
+UPTIMES_S = [0.0, 1e3, 1e5, 1e7]
+TEMPS_K = [300.0, 330.0, 360.0]
+
+
+def uptime_sweep(
+    times_s: Optional[List[float]] = None,
+    temps_k: Optional[List[float]] = None,
+    drift_nu: float = 0.05,
+    drift_ea_ev: float = 0.3,
+    sigma: float = 0.02,
+    seed: int = 0,
+    batch: int = 2,
+    seq: int = 8,
+) -> Dict:
+    """Accuracy-vs-uptime: the chip lifecycle's headline curve.
+
+    Programs the tiny LM once onto a drifting device, then ages the *same*
+    chip (``ProgrammedModel.at_time`` — no reprogramming) across a service
+    time grid, measuring logit MSE against the ideal crossbar datapath with
+    and without the free digital compensation
+    (``device.health.compensate_model``).  Aged error must grow
+    monotonically; compensation must recover most of it.
+
+    The temperature arm re-ages the same fresh chip under Arrhenius-scaled
+    drift (``DeviceConfig.temp_k`` / ``drift_ea_ev``): hotter chips sit
+    higher at every uptime, the 300 K row reproduces the base curve
+    (``effective_drift_nu`` is exactly ``drift_nu`` at the reference
+    temperature).
+    """
+    import jax
+
+    from repro.device.health import compensate_model
+    from repro.device.programmed import program_model
+    from repro.models import model as M
+
+    times_s = UPTIMES_S if times_s is None else times_s
+    temps_k = TEMPS_K if temps_k is None else temps_k
+    cfg = tiny_lm_config()
+    params, _ = M.init_model(jax.random.PRNGKey(seed), cfg, dtype=jnp.float32)
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(batch, seq)))
+    y_ideal = _programmed_logits(params, cfg, tokens)
+
+    def mse(prog) -> float:
+        y = _programmed_logits(params, cfg, tokens, prog=prog)
+        return float(np.mean((y - y_ideal) ** 2))
+
+    dev = DeviceConfig(sigma=sigma, drift_nu=drift_nu, seed=seed)
+    prog0 = program_model(params, device=dev, fast=False)
+    mse_fresh = mse(prog0)
+
+    uptime_curve = []
+    for t in times_s:
+        aged = prog0.at_time(t)
+        m_aged = mse(aged)
+        m_comp = mse(compensate_model(aged))
+        uptime_curve.append(
+            {
+                "t_service_s": t,
+                "logit_mse_aged": m_aged,
+                "logit_mse_compensated": m_comp,
+                "recovered_frac": (1.0 - m_comp / m_aged) if m_aged > 0 else 0.0,
+            }
+        )
+
+    # drift-vs-T: one fresh chip per temperature (identical cells — the
+    # temperature only scales the drift law, never the programming), aged to
+    # the same horizon; Arrhenius acceleration shows as MSE ordering in T
+    t_ref = times_s[-1] if times_s else 1e7
+    temp_curve = []
+    for T in temps_k:
+        dev_t = dev.replace(temp_k=T, drift_ea_ev=drift_ea_ev)
+        prog_t = program_model(params, device=dev_t, fast=False)
+        aged = prog_t.at_time(t_ref)
+        temp_curve.append(
+            {
+                "temp_k": T,
+                "drift_ea_ev": drift_ea_ev,
+                "t_service_s": t_ref,
+                "logit_mse_aged": mse(aged),
+            }
+        )
+
+    return {
+        "meta": {
+            "seed": seed,
+            "sigma": sigma,
+            "drift_nu": drift_nu,
+            "drift_ea_ev": drift_ea_ev,
+            "times_s": list(times_s),
+            "temps_k": list(temps_k),
+            "logit_mse_fresh": mse_fresh,
+        },
+        "uptime_curve": uptime_curve,
+        "drift_temp_curve": temp_curve,
+    }
+
+
+def model_drift_recovery(
+    t_service_s: float = 1e6,
+    drift_nu: float = 0.05,
+    sigma: float = 0.02,
+    seed: int = 0,
+    batch: int = 2,
+    seq: int = 8,
+) -> Dict[str, float]:
+    """End-to-end logit-MSE degradation under retention drift, compensation
+    on/off — the lifecycle counterpart of ``model_fault_recovery``.
+
+    Programs the tiny LM once, ages the chip ``t_service_s`` seconds, and
+    reports the fraction of aged logit MSE the free digital compensation
+    recovers with zero reprogramming — the repo's model-level acceptance
+    metric for the drift-compensation subsystem (floor 0.5, gated in
+    ``benchmarks.run --check`` via ``kernel_lifecycle``).
+    """
+    import jax
+
+    from repro.device.health import compensate_model
+    from repro.device.programmed import program_model
+    from repro.models import model as M
+
+    cfg = tiny_lm_config()
+    params, _ = M.init_model(jax.random.PRNGKey(seed), cfg, dtype=jnp.float32)
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(batch, seq)))
+    y_ideal = _programmed_logits(params, cfg, tokens)
+
+    dev = DeviceConfig(sigma=sigma, drift_nu=drift_nu, seed=seed)
+    prog = program_model(params, device=dev, fast=False)
+    aged = prog.at_time(t_service_s)
+    comp = compensate_model(aged)
+
+    def mse(p) -> float:
+        y = _programmed_logits(params, cfg, tokens, prog=p)
+        return float(np.mean((y - y_ideal) ** 2))
+
+    mse_fresh, mse_aged, mse_comp = mse(prog), mse(aged), mse(comp)
+    return {
+        "t_service_s": t_service_s,
+        "drift_nu": drift_nu,
+        "logit_mse_fresh": mse_fresh,
+        "logit_mse_aged": mse_aged,
+        "logit_mse_compensated": mse_comp,
+        "recovered_frac": (1.0 - mse_comp / mse_aged) if mse_aged > 0 else 0.0,
+    }
+
+
 def noise_sweep_bench(seed: int = 0) -> Dict[str, float]:
     """Compact entry for benchmarks.run: headline numbers only."""
     out = run_sweep(
@@ -275,11 +432,20 @@ def main() -> None:
     ap.add_argument("--n", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--spare-cols", type=int, default=REPAIR_SPARE_COLS)
+    ap.add_argument(
+        "--no-lifecycle", action="store_true",
+        help="skip the accuracy-vs-uptime / drift-vs-T model sweeps",
+    )
     args = ap.parse_args()
     out = run_sweep(
         batch=args.batch, k=args.k, n=args.n, seed=args.seed,
         spare_cols=args.spare_cols,
     )
+    if not args.no_lifecycle:
+        life = uptime_sweep(seed=args.seed)
+        out["uptime_curve"] = life["uptime_curve"]
+        out["drift_temp_curve"] = life["drift_temp_curve"]
+        out["meta"]["lifecycle"] = life["meta"]
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {args.out} (seed={args.seed})")
@@ -300,6 +466,18 @@ def main() -> None:
             f"  fault={row['fault_rate']:<6} repair={row['repair']:<3} "
             f"spares={row['spare_cols']:<4} rmse={row['rmse_ulp']:<10.3f}"
             + (f" recovered={rec:.3f}" if rec is not None else "")
+        )
+    for row in out.get("uptime_curve", []):
+        print(
+            f"  uptime={row['t_service_s']:<8g} "
+            f"mse_aged={row['logit_mse_aged']:<10.4g} "
+            f"mse_comp={row['logit_mse_compensated']:<10.4g} "
+            f"recovered={row['recovered_frac']:.3f}"
+        )
+    for row in out.get("drift_temp_curve", []):
+        print(
+            f"  T={row['temp_k']:<6g} uptime={row['t_service_s']:<8g} "
+            f"mse_aged={row['logit_mse_aged']:.4g}"
         )
 
 

@@ -38,6 +38,9 @@ HEADLINE = [
     ("kernel_artifact_store", "bit_exact", "higher"),
     ("kernel_moe_programmed", "bit_exact", "higher"),
     ("kernel_sharded_programmed", "bit_exact", "higher"),
+    ("kernel_lifecycle", "aged_monotone", "higher"),
+    ("kernel_lifecycle", "comp_recovery_frac", "higher"),
+    ("kernel_lifecycle", "refresh_bit_exact", "higher"),
 ]
 REGRESSION_TOL = 0.20
 
@@ -56,6 +59,12 @@ ABSOLUTE_FLOORS = {
     ("kernel_moe_programmed", "speedup_x"): 5.0,
     ("kernel_sharded_programmed", "speedup_x"): 5.0,
     ("kernel_artifact_store", "restore_speedup_x"): 2.0,
+    # lifecycle acceptance (ISSUE 7): a refreshed chip must return to bit
+    # identity exactly, and the free digital compensation must recover at
+    # least half the drift-accrued error with zero reprogramming
+    ("kernel_lifecycle", "refresh_bit_exact"): 1.0,
+    ("kernel_lifecycle", "comp_recovery_frac"): 0.5,
+    ("kernel_lifecycle", "aged_monotone"): 1.0,
 }
 
 

@@ -9,6 +9,10 @@
 #                                   test_sharded_artifacts), slow members
 #                                   included — the tier that pins programmed
 #                                   crossbar serving under shard_map EP/TP
+#   scripts/run_tests.sh --lifecycle  chip-lifecycle tier only: aging /
+#                                   health-monitor / compensation / hot-swap
+#                                   tests (@pytest.mark.lifecycle), slow
+#                                   members included
 #   scripts/run_tests.sh --bench    fast kernel-benchmark tier; runs the
 #                                   BENCH_kernels.json --check regression gate
 #                                   by default: fails on a >20% regression of
@@ -41,6 +45,12 @@ if [[ "${1:-}" == "--dist" ]]; then
   # -m dist overrides the "not slow" default: the whole mesh tier runs,
   # slow members included
   exec python -m pytest -q -m dist "$@"
+fi
+if [[ "${1:-}" == "--lifecycle" ]]; then
+  shift
+  # -m lifecycle overrides the "not slow" default: the whole lifecycle
+  # tier runs, slow members included
+  exec python -m pytest -q -m lifecycle "$@"
 fi
 if [[ "${1:-}" == "--bench" ]]; then
   shift

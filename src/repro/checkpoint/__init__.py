@@ -1,8 +1,11 @@
 from repro.checkpoint.checkpoint import (  # noqa: F401
     CheckpointManager,
+    PROGRAMMED_SLOTS,
+    active_slot,
     save_checkpoint,
     restore_checkpoint,
     restore_programmed,
     save_programmed,
+    swap_active,
     latest_step,
 )

@@ -184,14 +184,75 @@ def _artifact_shardings(art) -> Optional[Dict[str, list]]:
     return out or None
 
 
-def save_programmed(directory: str, prog, metadata: Optional[dict] = None) -> str:
+PROGRAMMED_SLOTS = ("A", "B")
+
+
+def _programmed_dir(directory: str, slot: Optional[str] = None) -> str:
+    """Store path for a slot: ``programmed`` (unslotted, the pre-lifecycle
+    layout) or ``programmed.slotA`` / ``programmed.slotB``."""
+    if slot is None:
+        return os.path.join(directory, "programmed")
+    if slot not in PROGRAMMED_SLOTS:
+        raise ValueError(f"slot must be one of {PROGRAMMED_SLOTS}, got {slot!r}")
+    return os.path.join(directory, f"programmed.slot{slot}")
+
+
+def _active_pointer(directory: str) -> str:
+    return os.path.join(directory, "programmed.ACTIVE")
+
+
+def active_slot(directory: str) -> Optional[str]:
+    """The slot the ACTIVE pointer names, or None (unslotted store)."""
+    try:
+        with open(_active_pointer(directory)) as f:
+            slot = f.read().strip()
+    except FileNotFoundError:
+        return None
+    if slot not in PROGRAMMED_SLOTS:
+        raise ValueError(f"corrupt ACTIVE pointer: {slot!r}")
+    return slot
+
+
+def swap_active(directory: str, slot: str) -> str:
+    """Atomically point the store at ``slot`` (the hot-swap commit point).
+
+    The pointer is one short file, replaced with ``os.replace`` — readers
+    see either the old slot or the new one, never a torn state, and the
+    inactive slot's files are untouched (the refresh that wrote them can be
+    rolled back by pointing the other way).
+    """
+    if slot not in PROGRAMMED_SLOTS:
+        raise ValueError(f"slot must be one of {PROGRAMMED_SLOTS}, got {slot!r}")
+    if not os.path.isfile(
+        os.path.join(_programmed_dir(directory, slot), "manifest.json")
+    ):
+        raise FileNotFoundError(
+            f"slot {slot} has no programmed store in {directory} — "
+            "save_programmed(..., slot=...) first"
+        )
+    ptr = _active_pointer(directory)
+    tmp = ptr + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(slot)
+    os.replace(tmp, ptr)
+    return slot
+
+
+def save_programmed(
+    directory: str,
+    prog,
+    metadata: Optional[dict] = None,
+    slot: Optional[str] = None,
+) -> str:
     """Atomically persist a ``ProgrammedModel`` under ``<dir>/programmed/``.
 
     One ``.npz`` per artifact (every non-None array leaf, exact dtypes) plus
     a manifest holding the name-keyed static aux: ``CrossbarSpec``,
-    ``ADCConfig``, the kernel-path flag and the write-verify/repair reports.
-    Restoring yields a bit-identical chip — same effective cells, same
-    fault realizations, same routing tables.
+    ``ADCConfig``, the kernel-path flag, the write-verify/repair reports,
+    and the lifecycle state (the programming ``DeviceConfig`` and the
+    chip's ``t_service_s`` service clock).  Restoring yields a
+    bit-identical chip — same effective cells, same fault realizations,
+    same routing tables, same age.
 
     Mesh-sharded chips (``device.programmed.shard_artifacts``) additionally
     record each array leaf's PartitionSpec, so ``restore_programmed(...,
@@ -199,13 +260,19 @@ def save_programmed(directory: str, prog, metadata: Optional[dict] = None) -> st
     the per-rank store round-trips through one canonical global file set
     (each rank's slice is a view of the saved array under the recorded
     spec; single-host saves stay fully addressable).
+
+    ``slot``: write into the double-buffered ``programmed.slotA`` /
+    ``programmed.slotB`` layout instead of the unslotted path.  A refresh
+    reprograms into the *inactive* slot while the active one keeps serving,
+    then commits with ``swap_active`` — the store is never without a
+    complete, servable chip.
     """
     import dataclasses as dc
 
     from repro.device.programmed import ARTIFACT_ARRAY_FIELDS
 
     os.makedirs(directory, exist_ok=True)
-    final = os.path.join(directory, "programmed")
+    final = _programmed_dir(directory, slot)
     tmp = final + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
@@ -229,6 +296,8 @@ def save_programmed(directory: str, prog, metadata: Optional[dict] = None) -> st
             "report": _encode_aux(art.report),
             "repair": _encode_aux(art.repair),
             "sharding": _artifact_shardings(art),
+            "device": (dc.asdict(art.device) if art.device is not None else None),
+            "t_service_s": float(art.t_service_s),
         }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -245,7 +314,7 @@ def save_programmed(directory: str, prog, metadata: Optional[dict] = None) -> st
     return final
 
 
-def restore_programmed(directory: str, mesh=None):
+def restore_programmed(directory: str, mesh=None, slot: Optional[str] = None):
     """Load a ``save_programmed`` store back into a ``ProgrammedModel``.
 
     The artifact tree is rebuilt as nested dicts from the canonical names,
@@ -258,12 +327,18 @@ def restore_programmed(directory: str, mesh=None):
     divide, degrade to replicated per entry) — a serving restart on the
     deployment mesh restores the *sharded* chip directly, paying file I/O
     plus one device_put per shard instead of write-verify reprogramming.
+
+    ``slot``: read a specific double-buffer slot.  Default (None) follows
+    the ``ACTIVE`` pointer when one exists — a restart after a hot-swap
+    refresh comes back up on the refreshed chip — and falls back to the
+    unslotted pre-lifecycle layout otherwise.
     """
     import jax.numpy as jnp
     from jax.sharding import NamedSharding
 
     from repro.core.adc import ADCConfig
     from repro.core.crossbar import CrossbarSpec
+    from repro.device.models import DeviceConfig
     from repro.device.programmed import (
         ProgrammedLinear,
         ProgrammedModel,
@@ -279,12 +354,18 @@ def restore_programmed(directory: str, mesh=None):
         fixed = dividing_pspec(_decode_pspec(encoded_spec), arr.shape, mesh.shape)
         return jax.device_put(arr, NamedSharding(mesh, fixed))
 
-    base = os.path.join(directory, "programmed")
-    # a crash inside save_programmed's two-rename swap can leave the store
-    # under ".tmp" (fully written — the manifest is the last file out — but
-    # not yet renamed) or only under ".old" (previous chip renamed aside);
-    # fall back in completeness order instead of forcing a reprogram
-    candidates = [base, base + ".tmp", base + ".old", directory]
+    if slot is None:
+        slot = active_slot(directory)
+    if slot is not None:
+        base = _programmed_dir(directory, slot)
+        candidates = [base, base + ".tmp", base + ".old"]
+    else:
+        base = os.path.join(directory, "programmed")
+        # a crash inside save_programmed's two-rename swap can leave the store
+        # under ".tmp" (fully written — the manifest is the last file out — but
+        # not yet renamed) or only under ".old" (previous chip renamed aside);
+        # fall back in completeness order instead of forcing a reprogram
+        candidates = [base, base + ".tmp", base + ".old", directory]
     d = next(
         (c for c in candidates if os.path.isfile(os.path.join(c, "manifest.json"))),
         None,
@@ -313,6 +394,14 @@ def restore_programmed(directory: str, mesh=None):
             g_spare=arrays.get("g_spare"),
             out_gather=arrays.get("out_gather"),
             repair=_decode_aux(info["repair"]),
+            comp_scale=arrays.get("comp_scale"),
+            # tolerant decode: pre-lifecycle manifests carry neither key
+            device=(
+                DeviceConfig(**info["device"])
+                if info.get("device") is not None
+                else None
+            ),
+            t_service_s=float(info.get("t_service_s", 0.0)),
         )
         node = tree
         parts = name.split("/")

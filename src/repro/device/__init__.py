@@ -21,17 +21,35 @@ Entry points:
     repair: rank columns by fault-weighted salience, remap the worst into a
     ``DeviceConfig.spare_cols`` budget of programmed spares (zero
     steady-state overhead; ``RepairReport`` records what moved).
+  * the **chip lifecycle**: ``age_artifact`` / ``artifact_at_time`` evolve a
+    programmed chip through the retention-drift power law without
+    reprogramming; ``health.health_check`` probes every bound artifact
+    against its frozen digital twin; ``health.fit_compensation`` refits the
+    free digital ``comp_scale`` correction; ``checkpoint`` slot A/B +
+    ``ServingEngine.hot_swap`` close the loop with a zero-downtime refresh.
 """
 from repro.device.models import (  # noqa: F401
     DeviceConfig,
     GEFF_FRAC_BITS,
     IDEAL_DEVICE,
+    drift_time_factor,
     effective_cell_codes,
+    effective_drift_nu,
     fault_masks,
     programmed_conductance,
     read_effective_codes,
     target_cell_codes,
     wants_repair,
+)
+from repro.device.health import (  # noqa: F401
+    HealthReport,
+    LayerHealth,
+    compensate_model,
+    digital_twin,
+    fit_compensation,
+    health_check,
+    layer_health,
+    probe_artifact,
 )
 from repro.device.program import ProgramReport, write_verify  # noqa: F401
 from repro.device.repair import (  # noqa: F401
@@ -47,6 +65,8 @@ from repro.device.repair import (  # noqa: F401
 from repro.device.programmed import (  # noqa: F401
     ProgrammedLinear,
     ProgrammedModel,
+    age_artifact,
+    artifact_at_time,
     artifact_arrays,
     artifact_shard_specs,
     bind_artifacts,

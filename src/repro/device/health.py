@@ -1,0 +1,262 @@
+"""Drift health monitoring and free digital compensation.
+
+A programmed chip decays in service (power-law retention drift —
+``models.drift_time_factor``), but the *digital* record it was programmed
+from is immortal: ``w_codes`` / ``w_colsum`` / the quantization scales never
+age.  That asymmetry is the whole lifecycle story:
+
+* **Monitor** (``probe_artifact`` / ``health_check``): push a small batch of
+  seeded non-negative probe vectors through the served (possibly aged)
+  datapath and through the artifact's *digital twin* — the same artifact
+  with every analog leaf stripped, so ``programmed_matmul`` serves the
+  ideal ``w_codes`` path.  The relative probe error is the chip's drift
+  health; a per-layer budget turns it into a flag the serving engine can
+  schedule refreshes from.
+
+* **Compensate** (``fit_compensation``): retention drift is almost exactly
+  a common conductance scale — in code space an aged cell reads
+  ``f*c + (f-1)*g_off/step`` with the additive term well under one write
+  grid step — so a *digital* per-column output rescale recovers most of
+  the error, for free: ``ProgrammedLinear.comp_scale`` lives outside the
+  chip and updating it costs no reprogramming.  The scale is the
+  closed-form power-law factor ``1/f`` refined by a per-column least
+  squares fit of the probe responses (the residual picks up clipping,
+  grid re-quantization and the additive offset term).
+
+* **Refresh** (``checkpoint.swap_active`` + ``ServingEngine.hot_swap``):
+  when compensation can no longer hold a layer under budget, reprogram
+  into the inactive store slot and swap — the only step that touches the
+  analog array.
+
+Everything here runs on the digital side at inference time; none of it
+perturbs the programmed cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.device import models as dm
+from repro.device.programmed import (
+    ProgrammedLinear,
+    ProgrammedModel,
+    programmed_matmul,
+)
+
+DEFAULT_PROBES = 16
+DEFAULT_BUDGET = 0.05  # relative RMS probe error a healthy layer stays under
+
+
+def digital_twin(art: ProgrammedLinear) -> ProgrammedLinear:
+    """The artifact's frozen digital reference.
+
+    Strips every analog leaf (``g_eff`` / ``g_spare`` / ``out_gather``) and
+    the compensation scales, so ``programmed_matmul`` serves the ideal
+    ``w_codes`` datapath — exactly what the chip was programmed to realize,
+    at any service time.  Quantization scales and spec are shared with the
+    real chip, so probe responses are comparable column by column.
+    """
+    return dataclasses.replace(
+        art,
+        g_eff=None,
+        g_spare=None,
+        out_gather=None,
+        comp_scale=None,
+        report=None,
+        repair=None,
+    )
+
+
+def probe_vectors(k: int, n_probes: int = DEFAULT_PROBES, seed: int = 0) -> jnp.ndarray:
+    """Seeded non-negative probe batch (n_probes, k).
+
+    Uniform on (0, 1]: ``programmed_matmul`` requires non-negative inputs
+    (the offset-encoded signed path is a wrapper), and a strictly positive
+    batch exercises every row of the chip.  Deterministic in (k, seed) so
+    monitor readings are comparable across checks and across hosts.
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), k)
+    return jax.random.uniform(
+        key, (n_probes, k), jnp.float32, minval=1.0 / (1 << 10), maxval=1.0
+    )
+
+
+def _leading_slices(art: ProgrammedLinear):
+    """Yield every servable (K, N) slice of a (possibly stacked) artifact."""
+    if not art.stacked:
+        yield art
+        return
+    for i in range(art.shape[0]):
+        yield from _leading_slices(art.layer(i))
+
+
+def probe_artifact(
+    art: ProgrammedLinear,
+    n_probes: int = DEFAULT_PROBES,
+    seed: int = 0,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(served, reference) probe responses, stacked over servable slices.
+
+    ``served`` runs the artifact as bound — aged cells, repair layout,
+    compensation scales, everything the inference path sees; ``reference``
+    runs the digital twin.  Shapes are (n_slices, n_probes, N).
+    """
+    xs = probe_vectors(int(art.shape[-2]), n_probes, seed)
+    served, ref = [], []
+    for sl in _leading_slices(art):
+        served.append(programmed_matmul(xs, sl, interpret=interpret))
+        ref.append(programmed_matmul(xs, digital_twin(sl), interpret=interpret))
+    return jnp.stack(served), jnp.stack(ref)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerHealth:
+    """One bound artifact's drift reading."""
+
+    name: str
+    rel_err: float  # ||served - reference|| / ||reference|| over the probes
+    mse: float
+    t_service_s: float
+    budget: float
+
+    @property
+    def over_budget(self) -> bool:
+        return self.rel_err > self.budget
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthReport:
+    """Per-layer drift health for a whole programmed model."""
+
+    layers: Tuple[LayerHealth, ...]
+    budget: float
+
+    @property
+    def flagged(self) -> Tuple[str, ...]:
+        """Names whose probe error crossed the budget — refresh candidates."""
+        return tuple(l.name for l in self.layers if l.over_budget)
+
+    @property
+    def worst(self) -> float:
+        return max((l.rel_err for l in self.layers), default=0.0)
+
+    @property
+    def healthy(self) -> bool:
+        return not self.flagged
+
+    def __repr__(self) -> str:  # compact operator view
+        return (
+            f"HealthReport(worst={self.worst:.4g}, budget={self.budget:g}, "
+            f"flagged={len(self.flagged)}/{len(self.layers)})"
+        )
+
+
+def layer_health(
+    name: str,
+    art: ProgrammedLinear,
+    n_probes: int = DEFAULT_PROBES,
+    seed: int = 0,
+    budget: float = DEFAULT_BUDGET,
+    interpret: Optional[bool] = None,
+) -> LayerHealth:
+    """Probe one artifact against its digital twin."""
+    served, ref = probe_artifact(art, n_probes, seed, interpret=interpret)
+    diff = served - ref
+    mse = float(jnp.mean(diff**2))
+    rel = float(
+        jnp.sqrt(jnp.sum(diff**2)) / jnp.maximum(jnp.sqrt(jnp.sum(ref**2)), 1e-12)
+    )
+    return LayerHealth(
+        name=name, rel_err=rel, mse=mse, t_service_s=art.t_service_s, budget=budget
+    )
+
+
+def health_check(
+    prog: ProgrammedModel,
+    n_probes: int = DEFAULT_PROBES,
+    seed: int = 0,
+    budget: float = DEFAULT_BUDGET,
+    interpret: Optional[bool] = None,
+) -> HealthReport:
+    """Probe every bound artifact; the serving engine's monitor entry point."""
+    layers = tuple(
+        layer_health(name, art, n_probes, seed, budget, interpret=interpret)
+        for name, art in sorted(prog.by_name.items())
+    )
+    return HealthReport(layers=layers, budget=budget)
+
+
+def closed_form_scale(art: ProgrammedLinear) -> float:
+    """The zero-probe compensation: inverse of the accrued power-law decay.
+
+    Conductance decays by ``f = drift_time_factor(device, 0, t_service_s)``
+    since programming, so multiplying the analog output by ``1/f`` undoes
+    the common-mode drift exactly (up to the additive ``(f-1)*g_off/step``
+    code offset and grid re-quantization, which the probe fit mops up).
+    """
+    if art.device is None or art.g_eff is None or art.t_service_s == 0.0:
+        return 1.0
+    return 1.0 / dm.drift_time_factor(art.device, 0.0, art.t_service_s)
+
+
+def fit_compensation(
+    art: ProgrammedLinear,
+    n_probes: int = DEFAULT_PROBES,
+    seed: int = 0,
+    interpret: Optional[bool] = None,
+) -> ProgrammedLinear:
+    """Refit the artifact's digital compensation scales — zero reprogramming.
+
+    Per output column, the least-squares scale aligning the served probe
+    response with the digital reference::
+
+        s_j = sum_i ref[i,j] * served[i,j] / sum_i served[i,j]^2
+
+    seeded by the closed-form power-law factor: the fit runs on the
+    ``1/f``-rescaled response, so the probe batch only has to resolve the
+    *residual* (clipping, re-quantization, the additive offset term) around
+    1.0 rather than the full decay.  Stacked artifacts get per-slice scale
+    rows — ``comp_scale`` carries the same leading axes as every other
+    leaf, so the layer/expert scans slice it like the cells.
+
+    The fit measures the chip *without* its current compensation (a refit
+    replaces, never compounds).  Degenerate columns (zero probe response)
+    keep the closed-form scale.
+    """
+    base = closed_form_scale(art)
+    xs = probe_vectors(int(art.shape[-2]), n_probes, seed)
+    lead = art.shape[:-2]
+
+    def _fit(sl: ProgrammedLinear) -> jnp.ndarray:
+        raw = dataclasses.replace(sl, comp_scale=None)
+        served = programmed_matmul(xs, raw, interpret=interpret) * base
+        ref = programmed_matmul(xs, digital_twin(sl), interpret=interpret)
+        num = jnp.sum(ref * served, axis=0)
+        den = jnp.sum(served * served, axis=0)
+        resid = jnp.where(den > 0.0, num / jnp.maximum(den, 1e-30), 1.0)
+        return jnp.asarray(base, jnp.float32) * resid
+
+    scales = jnp.stack([_fit(sl) for sl in _leading_slices(art)])
+    comp = scales.reshape(lead + (int(art.shape[-1]),))
+    return dataclasses.replace(art, comp_scale=comp)
+
+
+def compensate_model(
+    prog: ProgrammedModel,
+    n_probes: int = DEFAULT_PROBES,
+    seed: int = 0,
+    interpret: Optional[bool] = None,
+) -> ProgrammedModel:
+    """``fit_compensation`` over every noisy artifact (ideal chips have no
+    drift to compensate and keep ``comp_scale=None`` — bit-identical)."""
+    return prog.map_artifacts(
+        lambda a: (
+            fit_compensation(a, n_probes, seed, interpret=interpret)
+            if a.g_eff is not None
+            else a
+        )
+    )

@@ -60,6 +60,21 @@ class DeviceConfig:
     (``device.repair``): at programming time the worst fault-afflicted
     columns of a weight slab are remapped into spares drawn from their own
     seeded fault/variation fields.  Zero (the default) disables repair.
+
+    ``temp_k`` / ``drift_ea_ev`` make retention drift temperature-dependent:
+    the power-law exponent is scaled Arrhenius-style,
+    ``nu(T) = drift_nu * exp((Ea/kB) * (1/T_ref - 1/T))`` with
+    ``T_ref = 300 K`` — a hotter chip ages faster.  ``drift_ea_ev = 0`` (the
+    default) keeps drift temperature-independent bit-for-bit, so every
+    pre-existing config is unchanged.  (The AG2048 calibration folds
+    temperature into ``sigma``; this knob unfolds the retention component.)
+
+    ``chip`` is a physical chip identity mixed into every seeded draw
+    (faults, programming variation): two crossbars holding *identical*
+    weight slabs on the same ``seed`` draw identical non-idealities — fine
+    for one die, wrong for a fleet.  Giving each rank of a sharded
+    deployment its own ``chip`` index models chip-to-chip spread; ``chip=0``
+    (the default) reproduces the single-die draws bit-for-bit.
     """
 
     sigma: float = 0.0  # lognormal programming variation of ln(G)
@@ -74,6 +89,9 @@ class DeviceConfig:
     write_verify_iters: int = 1  # programming pulses (1 = open-loop write)
     write_verify_tol: float = 0.25  # verify tolerance, cell-code units
     spare_cols: int = 0  # spare columns per crossbar column group (repair)
+    temp_k: float = 300.0  # operating temperature (drift Arrhenius scaling)
+    drift_ea_ev: float = 0.0  # drift activation energy (eV); 0 = T-independent
+    chip: int = 0  # physical chip identity (decorrelates fleet draws)
     seed: int = 0
 
     def replace(self, **kw) -> "DeviceConfig":
@@ -94,7 +112,12 @@ IDEAL_DEVICE = DeviceConfig()
 
 
 def _stage_key(cfg: DeviceConfig, stage: str, tag: Optional[jnp.ndarray] = None) -> jax.Array:
-    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), _STAGES[stage])
+    key = jax.random.PRNGKey(cfg.seed)
+    if cfg.chip:
+        # fold only a nonzero chip identity so chip=0 draws stay
+        # bit-identical to every pre-fleet config (tests pin this)
+        key = jax.random.fold_in(key, cfg.chip)
+    key = jax.random.fold_in(key, _STAGES[stage])
     if tag is not None:
         key = jax.random.fold_in(key, tag)
     return key
@@ -174,12 +197,92 @@ def program_variation(g: jnp.ndarray, cfg: DeviceConfig, key: jax.Array) -> jnp.
     return g * jnp.exp(cfg.sigma * z)
 
 
+# Boltzmann constant in eV/K and the reference temperature the AG2048
+# drift exponent was calibrated at — ``effective_drift_nu`` is exactly
+# ``drift_nu`` at 300 K (exp(0) == 1.0, bit-for-bit).
+BOLTZMANN_EV_K = 8.617333262e-5
+DRIFT_T_REF_K = 300.0
+
+
+def effective_drift_nu(cfg: DeviceConfig) -> float:
+    """Temperature-scaled drift exponent (Arrhenius in 1/T).
+
+    ``nu(T) = drift_nu * exp((Ea/kB) * (1/T_ref - 1/T))``: retention loss is
+    thermally activated, so a chip above the 300 K reference drifts faster
+    and a cold one slower.  ``drift_ea_ev = 0`` or ``temp_k = 300`` return
+    ``drift_nu`` unchanged (exactly — the scale factor is 1.0).
+    """
+    if cfg.drift_ea_ev == 0.0 or cfg.temp_k == DRIFT_T_REF_K:
+        return cfg.drift_nu
+    scale = float(
+        jnp.exp(
+            (cfg.drift_ea_ev / BOLTZMANN_EV_K)
+            * (1.0 / DRIFT_T_REF_K - 1.0 / cfg.temp_k)
+        )
+    )
+    return cfg.drift_nu * scale
+
+
 def apply_drift(g: jnp.ndarray, cfg: DeviceConfig) -> jnp.ndarray:
     """Power-law retention loss; identity at t=0 or nu=0."""
-    if cfg.drift_nu == 0.0 or cfg.t_drift_s == 0.0:
+    nu = effective_drift_nu(cfg)
+    if nu == 0.0 or cfg.t_drift_s == 0.0:
         return g
-    factor = (1.0 + cfg.t_drift_s / cfg.t0_s) ** (-cfg.drift_nu)
+    factor = (1.0 + cfg.t_drift_s / cfg.t0_s) ** (-nu)
     return g * factor
+
+
+def drift_time_factor(cfg: DeviceConfig, t_from_s: float, t_to_s: float) -> float:
+    """Incremental conductance decay between two *service* times.
+
+    The power law is anchored at programming time: a chip programmed with
+    baked-in drift ``t_drift_s`` and now ``t`` seconds into service sits at
+    total elapsed time ``t_drift_s + t``, so the decay accrued between
+    service times ``t1 < t2`` is the ratio
+
+        ``((1 + (t_drift_s + t2)/t0) / (1 + (t_drift_s + t1)/t0)) ** -nu``
+
+    — exactly 1.0 when nothing drifts (``nu == 0`` or ``t1 == t2``), which
+    is what makes ``device.programmed`` aging a bit-identical no-op for
+    drift-free configs.  Composable: ``f(t1,t2) * f(t2,t3) == f(t1,t3)`` up
+    to float rounding, so repeated ``age()`` steps track ``at_time``.
+    """
+    nu = effective_drift_nu(cfg)
+    if nu == 0.0 or t_to_s == t_from_s:
+        return 1.0
+    if t_to_s < t_from_s:
+        raise ValueError(
+            f"cannot run service time backwards: {t_to_s} < {t_from_s} "
+            "(the fresh chip is gone; reprogram to rejuvenate)"
+        )
+    base = cfg.t_drift_s
+    return float(
+        ((1.0 + (base + t_to_s) / cfg.t0_s) / (1.0 + (base + t_from_s) / cfg.t0_s))
+        ** (-nu)
+    )
+
+
+def age_effective_codes(
+    codes: jnp.ndarray, spec: CrossbarSpec, cfg: DeviceConfig, factor: float
+) -> jnp.ndarray:
+    """Drift-evolve stored effective cell codes by a conductance decay factor.
+
+    The stored codes are the grid-quantized read-time view of the cell
+    conductances; aging maps them back through the level map
+    (``g = g_off + c * step``), decays the conductance by ``factor`` — the
+    power law acts on G, not on codes, so the code-space transform is the
+    affine ``f*c + (f-1)*g_off/step``, not a pure scale — and re-reads
+    through clip + grid quantization.  Exact (up to one re-quantization on
+    the 2**-GEFF_FRAC_BITS grid) for the closed-form IR-drop-free read
+    path; with line resistance it is the same first-order view the read
+    pipeline already commits to.  ``factor == 1.0`` must be short-circuited
+    by the caller — re-quantization is not a bit-exact identity.
+    """
+    step = code_step_siemens(spec, cfg)
+    g = cfg.g_off_s + codes.astype(jnp.float32) * step
+    aged = (g * factor - cfg.g_off_s) / step
+    aged = jnp.clip(aged, 0.0, float((1 << spec.cell_bits) - 1))
+    return quantize_code_grid(aged)
 
 
 def ir_drop_conductance(

@@ -87,6 +87,20 @@ class ProgrammedLinear:
         routing table.
       * ``out_gather``: (N,) int32 or None — physical column serving each
         logical output (j, or N + b for repaired columns).
+      * ``comp_scale``: (N,) float32 or None — drift-compensating *digital*
+        per-column output scales (``device.health.fit_compensation``).
+        They live outside the chip — updating them costs no reprogramming —
+        and are applied after the dequantize, before the offset-correction
+        colsum.  None (fresh chips) is a bit-exact no-op.
+
+    **Service time**: a programmed chip decays in service (power-law
+    retention drift).  ``age(dt_s)`` / ``at_time(t_s)`` return a
+    drift-evolved view of the same chip — ``g_eff``/``g_spare`` decayed
+    through the device's level map, ``t_service_s`` advanced — without
+    reprogramming; the digital record (``w_codes``, ``w_colsum``) is
+    immortal and stays the frozen reference the health monitor probes
+    against.  Aging a drift-free chip only advances the clock
+    (bit-identical arrays).
 
     A *stacked* artifact (from a ``(L, K, N)`` scan-stacked parameter leaf)
     carries a leading layer axis on every array; ``jax.lax.scan`` /
@@ -97,7 +111,10 @@ class ProgrammedLinear:
     layer-scaled ``CrossbarSpec`` (``drop_lsb`` already chosen for this K);
     ``adc_cfg`` / ``fast`` — which kernel path serves this artifact;
     ``report`` — optional write-verify ``ProgramReport``; ``repair`` —
-    optional ``repair.RepairReport`` (tuples of them for stacked artifacts).
+    optional ``repair.RepairReport`` (tuples of them for stacked artifacts);
+    ``device`` — the ``DeviceConfig`` the chip was programmed with (the
+    lifecycle layer needs its drift law and level map to age the chip);
+    ``t_service_s`` — seconds of service since programming.
     """
 
     w_codes: jnp.ndarray
@@ -112,10 +129,21 @@ class ProgrammedLinear:
     g_spare: Optional[jnp.ndarray] = None
     out_gather: Optional[jnp.ndarray] = None
     repair: Optional[Any] = None
+    comp_scale: Optional[jnp.ndarray] = None
+    device: Optional[dm.DeviceConfig] = None
+    t_service_s: float = 0.0
 
     @property
     def noisy(self) -> bool:
         return self.g_eff is not None
+
+    def age(self, dt_s: float) -> "ProgrammedLinear":
+        """Advance the chip ``dt_s`` seconds of service (drift-evolved view)."""
+        return age_artifact(self, dt_s)
+
+    def at_time(self, t_s: float) -> "ProgrammedLinear":
+        """The chip at absolute service time ``t_s >= t_service_s``."""
+        return artifact_at_time(self, t_s)
 
     @property
     def stacked(self) -> bool:
@@ -148,18 +176,23 @@ class ProgrammedLinear:
     def tree_flatten(self):
         children = (
             self.w_codes, self.g_eff, self.w_colsum, self.w_scale, self.x_scale,
-            self.g_spare, self.out_gather,
+            self.g_spare, self.out_gather, self.comp_scale,
         )
-        aux = (self.spec, self.adc_cfg, self.fast, self.report, self.repair)
+        aux = (
+            self.spec, self.adc_cfg, self.fast, self.report, self.repair,
+            self.device, self.t_service_s,
+        )
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        w_codes, g_eff, w_colsum, w_scale, x_scale, g_spare, out_gather = children
-        spec, adc_cfg, fast, report, repair = aux
+        (w_codes, g_eff, w_colsum, w_scale, x_scale, g_spare, out_gather,
+         comp_scale) = children
+        spec, adc_cfg, fast, report, repair, device, t_service_s = aux
         return cls(
             w_codes, g_eff, w_colsum, w_scale, x_scale, spec, adc_cfg, fast,
             report, g_spare=g_spare, out_gather=out_gather, repair=repair,
+            comp_scale=comp_scale, device=device, t_service_s=t_service_s,
         )
 
 
@@ -167,20 +200,29 @@ class ProgrammedLinear:
 # for serialization (checkpoint.save_programmed) and equality checks.
 ARTIFACT_ARRAY_FIELDS = (
     "w_codes", "g_eff", "w_colsum", "w_scale", "x_scale", "g_spare", "out_gather",
+    "comp_scale",
 )
 
 
 def artifacts_equal(a: "ProgrammedLinear", b: "ProgrammedLinear") -> bool:
     """Bit-exact artifact equality: every array field (None-ness included)
-    plus the static datapath aux (spec / adc_cfg / fast).  Reports are
-    observability metadata and deliberately not part of chip equality."""
+    plus the static datapath aux (spec / adc_cfg / fast) and the lifecycle
+    state (device / t_service_s — two chips at different service times are
+    different chips).  Reports are observability metadata and deliberately
+    not part of chip equality."""
     for f in ARTIFACT_ARRAY_FIELDS:
         va, vb = getattr(a, f), getattr(b, f)
         if (va is None) != (vb is None):
             return False
         if va is not None and not bool(jnp.array_equal(va, vb)):
             return False
-    return a.spec == b.spec and a.adc_cfg == b.adc_cfg and a.fast == b.fast
+    return (
+        a.spec == b.spec
+        and a.adc_cfg == b.adc_cfg
+        and a.fast == b.fast
+        and a.device == b.device
+        and a.t_service_s == b.t_service_s
+    )
 
 
 def program_layer(
@@ -193,6 +235,7 @@ def program_layer(
     w_scale: Optional[float] = None,
     fast: bool = True,
     with_report: bool = False,
+    chips: Optional[Tuple[int, ...]] = None,
 ) -> ProgrammedLinear:
     """Compile one (K, N) — or stacked (L, K, N) / (L, E, K, N) — weight.
 
@@ -212,21 +255,50 @@ def program_layer(
     expert bank ``(L, E, d_model, d_ff)`` compiles to an artifact whose
     arrays carry ``(L, E, ...)`` — the layer scan slices ``L``, the
     per-expert scan inside ``models.moe`` slices ``E``.
+
+    ``chips`` models chip-to-chip fleet spread: one ``DeviceConfig.chip``
+    identity per slice of the *innermost* stacking axis (the expert axis
+    for a 4-D bank, the layer axis for 3-D), so the slabs an EP mesh places
+    on different ranks draw decorrelated device perturbations — the same
+    expert weights on chip 3 and chip 5 are different physical dies.  The
+    stacked artifact's ``device`` aux keeps the base config (chip as
+    passed): aging depends only on the drift law, which the spread does not
+    touch.  ``chips=None`` (default) is bit-compatible with every
+    pre-lifecycle artifact.
     """
     w = jnp.asarray(w, jnp.float32)
     if w.ndim >= 3:  # stacked (L/E leading axes): compile per slice, stack
+        if chips is not None and w.ndim == 3:
+            if device is None:
+                raise ValueError("chips= requires a DeviceConfig")
+            if len(chips) != w.shape[0]:
+                raise ValueError(
+                    f"chips has {len(chips)} entries for stacking axis "
+                    f"of {w.shape[0]}"
+                )
+            devices = [
+                dataclasses.replace(device, chip=int(c)) for c in chips
+            ]
+        else:  # 4-D: forward chips to the inner (expert) axis
+            devices = [device] * w.shape[0]
         parts = [
             program_layer(
-                w[i], spec, device, adc_cfg, x_scale=x_scale, w_scale=w_scale,
-                fast=fast, with_report=with_report,
+                w[i], spec, devices[i], adc_cfg, x_scale=x_scale,
+                w_scale=w_scale, fast=fast, with_report=with_report,
+                chips=(chips if w.ndim > 3 else None),
             )
             for i in range(w.shape[0])
         ]
         reports = tuple(p.report for p in parts)
         repairs = tuple(p.repair for p in parts)
         # per-layer reports differ, which would make the tree structures
-        # unequal — strip them before stacking, reattach as tuples
-        parts = [dataclasses.replace(p, report=None, repair=None) for p in parts]
+        # unequal — strip them before stacking, reattach as tuples; the
+        # per-slice device aux (chip spread) is likewise normalized to the
+        # base config so every part flattens to the same treedef
+        parts = [
+            dataclasses.replace(p, report=None, repair=None, device=device)
+            for p in parts
+        ]
         out = jax.tree.map(lambda *xs: jnp.stack(xs), *parts)
         return dataclasses.replace(
             out,
@@ -272,7 +344,62 @@ def program_layer(
         x_scale=(jnp.asarray(x_scale, jnp.float32) if x_scale is not None else None),
         g_spare=g_spare, out_gather=out_gather,
         spec=spec, adc_cfg=adc_cfg, fast=fast, report=report, repair=repair_rep,
+        device=device, t_service_s=0.0,
     )
+
+
+# ---------------------------------------------------------------------------
+# Service-time aging (the chip lifecycle's clock)
+# ---------------------------------------------------------------------------
+
+
+def artifact_at_time(art: ProgrammedLinear, t_s: float) -> ProgrammedLinear:
+    """The chip as it reads at absolute service time ``t_s``.
+
+    Drift is monotone conductance loss — a programmed chip can only move
+    forward in time (``t_s >= art.t_service_s``; rejuvenation means
+    reprogramming, see ``ServingEngine.refresh``).  The decay between the
+    two service times is a single scalar factor from the device's power law
+    (``models.drift_time_factor``), pushed through the level map onto the
+    stored effective cells (``models.age_effective_codes``) — works
+    unchanged on stacked ``(L, …, S, K, N)`` arrays because the transform
+    is elementwise.  The digital record (``w_codes``, ``w_colsum``,
+    scales) never ages: it is the frozen reference the health monitor
+    compares against.
+
+    A drift-free chip (no device, ideal device, ``drift_nu == 0``) only
+    advances the clock — the arrays are the same objects, bit-identical by
+    construction.  The factor-1.0 short-circuit also matters for exactness:
+    the code -> conductance -> code round trip re-snaps to the write grid
+    and is not a float identity.
+    """
+    t_s = float(t_s)
+    if t_s < art.t_service_s:
+        raise ValueError(
+            f"cannot rejuvenate a chip: at_time({t_s}) < current service "
+            f"time {art.t_service_s} (reprogram instead)"
+        )
+    if art.g_eff is None or art.device is None:
+        return dataclasses.replace(art, t_service_s=t_s)
+    factor = dm.drift_time_factor(art.device, art.t_service_s, t_s)
+    if factor == 1.0:
+        return dataclasses.replace(art, t_service_s=t_s)
+    g_eff = dm.age_effective_codes(art.g_eff, art.spec, art.device, factor)
+    g_spare = (
+        dm.age_effective_codes(art.g_spare, art.spec, art.device, factor)
+        if art.g_spare is not None
+        else None
+    )
+    return dataclasses.replace(
+        art, g_eff=g_eff, g_spare=g_spare, t_service_s=t_s
+    )
+
+
+def age_artifact(art: ProgrammedLinear, dt_s: float) -> ProgrammedLinear:
+    """Advance a chip ``dt_s >= 0`` seconds of service (see ``artifact_at_time``)."""
+    if dt_s < 0:
+        raise ValueError(f"dt_s must be non-negative, got {dt_s}")
+    return artifact_at_time(art, art.t_service_s + float(dt_s))
 
 
 def programmed_matmul(
@@ -345,7 +472,15 @@ def programmed_matmul(
     # than the eager left-to-right product) — eager, jit and shard_map
     # executions of one artifact must dequantize bit-identically
     scale = jax.lax.optimization_barrier(x_scale * art.w_scale)
-    return yq.astype(jnp.float32) * (scale * (2.0 ** spec.drop_lsb))
+    y = yq.astype(jnp.float32) * (scale * (2.0 ** spec.drop_lsb))
+    if art.comp_scale is not None:
+        # drift compensation is a separate digital per-column multiply,
+        # after the dequantize and before the offset-correction colsum (the
+        # correction uses the time-invariant digital w_colsum, so only the
+        # analog product gets rescaled).  The barrier pins it as its own
+        # rounding step so eager/jit/shard_map stay bit-identical.
+        y = jax.lax.optimization_barrier(y) * art.comp_scale
+    return y
 
 
 def programmed_linear(
@@ -444,6 +579,9 @@ def artifact_shard_specs(art: ProgrammedLinear, wspec) -> Dict[str, Any]:
         # columns — keep it whole on every rank that holds the group's rows
         "g_spare": P(*stack, None, kspec, None),
         "out_gather": P(*stack, nspec),
+        # digital per-column compensation scales follow the output columns,
+        # exactly like w_colsum
+        "comp_scale": P(*stack, nspec),
     }
     return {f: specs[f] for f in ARTIFACT_ARRAY_FIELDS if getattr(art, f) is not None}
 
@@ -936,6 +1074,31 @@ class ProgrammedModel:
             if art.repair is not None
         }
 
+    def map_artifacts(
+        self, fn: Callable[[ProgrammedLinear], ProgrammedLinear]
+    ) -> "ProgrammedModel":
+        """A new ProgrammedModel with ``fn`` applied to every artifact."""
+        mapped = jax.tree_util.tree_map(
+            lambda a: fn(a) if isinstance(a, ProgrammedLinear) else a,
+            self.artifacts,
+            is_leaf=lambda x: isinstance(x, ProgrammedLinear),
+        )
+        return ProgrammedModel(mapped)
+
+    @property
+    def t_service_s(self) -> float:
+        """Fleet service time: the oldest chip's clock (chips age together
+        under ``age``/``at_time``, so normally they all agree)."""
+        return max((a.t_service_s for a in self.by_name.values()), default=0.0)
+
+    def age(self, dt_s: float) -> "ProgrammedModel":
+        """Every chip advanced ``dt_s`` seconds of service (no reprogramming)."""
+        return self.map_artifacts(lambda a: age_artifact(a, dt_s))
+
+    def at_time(self, t_s: float) -> "ProgrammedModel":
+        """Every chip at absolute service time ``t_s`` (see ``artifact_at_time``)."""
+        return self.map_artifacts(lambda a: artifact_at_time(a, t_s))
+
 
 def program_model(
     params: Any,
@@ -947,6 +1110,7 @@ def program_model(
     with_report: bool = False,
     tie_lm_head: bool = False,
     leaf_filter: Optional[Callable[[Tuple[Any, ...], Any], bool]] = None,
+    expert_chips: Optional[Tuple[int, ...]] = None,
 ) -> ProgrammedModel:
     """Walk a param pytree and compile every matmul-shaped leaf.
 
@@ -954,6 +1118,13 @@ def program_model(
     leaf, so an inference run (or a serving engine) works against a single
     fixed programmed chip.  ``leaf_filter(path, leaf) -> bool`` overrides
     the default projection-name predicate.
+
+    ``expert_chips`` gives every 4-D expert bank one chip identity per
+    expert (``program_layer(chips=...)``): an EP deployment that places
+    expert ``e`` on rank ``e`` then models genuine chip-to-chip spread —
+    each rank's slab drew its own device perturbations.  Leaves without an
+    expert axis (2-D / 3-D) keep the base device unchanged, so the knob is
+    a no-op for dense models and bit-compatible when ``None``.
 
     ``tie_lm_head=True`` additionally compiles the **transpose** of every
     2-D ``tokens`` embedding leaf and binds it to the embedding's own name
@@ -970,10 +1141,20 @@ def program_model(
     arts = []
     for path, leaf in flat:
         action = _program_action(path, leaf, pred, tie_lm_head)
+        chips = (
+            expert_chips
+            if (
+                expert_chips is not None
+                and action is not None
+                and getattr(leaf, "ndim", 0) == 4
+            )
+            else None
+        )
         arts.append(
             program_layer(
                 leaf.T if action == "transpose" else leaf,
                 spec, device, adc_cfg, fast=fast, with_report=with_report,
+                chips=chips,
             )
             if action is not None
             else None

@@ -93,6 +93,7 @@ class ServingEngine:
         mesh=None,
         param_axes=None,
         verify_coverage: bool = True,
+        expert_chips=None,
     ):
         self.cfg = cfg
         self.params = params
@@ -107,6 +108,11 @@ class ServingEngine:
         # the weights they shadow (device.programmed.shard_artifacts)
         self.mesh = mesh
         self.param_axes = param_axes
+        # fleet realism: one DeviceConfig.chip identity per expert, so the
+        # slabs an EP mesh places on different ranks draw decorrelated
+        # device perturbations (device.programmed.program_layer(chips=));
+        # remembered so refresh() reprograms the same fleet
+        self.expert_chips = tuple(expert_chips) if expert_chips is not None else None
         self.crossbar = self._program_crossbars(crossbar, spare_cols, restore_artifacts)
         if verify_coverage:
             self.verify_crossbar_coverage()
@@ -236,6 +242,7 @@ class ServingEngine:
             # tied LM heads serve from a transpose programmed once, bound to
             # the embedding's name (name-keyed binding makes this possible)
             tie_lm_head=(self.cfg.tie_embeddings and self.cfg.frontend == "token"),
+            expert_chips=self.expert_chips,
         )
         return dataclasses.replace(crossbar, programmed=self._shard_artifacts(prog))
 
@@ -321,9 +328,11 @@ class ServingEngine:
                 prog_mod.record_artifact_consumed(n)
             layers_mod.restore_crossbar_misses(before_misses)
 
-    def save_artifacts(self, directory: str) -> str:
+    def save_artifacts(self, directory: str, slot: Optional[str] = None) -> str:
         """Persist the programmed chip so a restart can restore instead of
-        reprogram (``ServingEngine(..., restore_artifacts=directory)``)."""
+        reprogram (``ServingEngine(..., restore_artifacts=directory)``).
+        ``slot`` writes into the double-buffered A/B layout (see
+        ``checkpoint.save_programmed``; commit with ``swap_active``)."""
         if self.crossbar is None or self.crossbar.programmed is None:
             raise ValueError(
                 "no programmed artifacts to save: construct the engine with "
@@ -331,7 +340,7 @@ class ServingEngine:
             )
         from repro.checkpoint import save_programmed
 
-        return save_programmed(directory, self.crossbar.programmed)
+        return save_programmed(directory, self.crossbar.programmed, slot=slot)
 
     def repair_reports(self):
         """Path -> spare-column ``RepairReport`` for every repaired
@@ -339,6 +348,161 @@ class ServingEngine:
         if self.crossbar is None or self.crossbar.programmed is None:
             return {}
         return self.crossbar.programmed.repair_reports()
+
+    # ------------------------------------------------------------------
+    # Chip lifecycle: monitor -> compensate -> refresh
+    # ------------------------------------------------------------------
+
+    @property
+    def programmed(self):
+        """The bound ``ProgrammedModel`` (None when not crossbar-serving)."""
+        if self.crossbar is None:
+            return None
+        return self.crossbar.programmed
+
+    @property
+    def uptime_s(self) -> float:
+        """Fleet service time of the bound chips, seconds since programming."""
+        prog = self.programmed
+        return prog.t_service_s if prog is not None else 0.0
+
+    def _require_programmed(self, what: str):
+        prog = self.programmed
+        if prog is None:
+            raise ValueError(
+                f"{what} needs programmed crossbar serving: construct the "
+                "engine with crossbar=CrossbarMode(enabled=True, ...)"
+            )
+        return prog
+
+    def _rebind(self, prog) -> None:
+        """Swap the served chip and rebuild every jitted step function.
+
+        Artifacts are *trace-time constants* inside the jitted prefill and
+        decode steps (the closures bind ``self.crossbar.programmed`` when
+        they trace) — mutating the crossbar mode alone would keep serving
+        the old chip out of the jit cache.  Dropping the wrappers forces a
+        retrace against the new binding; KV caches, slot state and pending
+        requests are untouched, so in-flight requests continue on the new
+        chip at the next tick — the zero-downtime part of ``hot_swap``.
+        """
+        self.crossbar = dataclasses.replace(self.crossbar, programmed=prog)
+        self._decode = jax.jit(
+            lambda p, t, pos, c: self._with_crossbar(
+                lambda: model_lib.decode_step(p, self.cfg, t, pos, c)
+            )
+        )
+        self._prefills = {}
+
+    def age(self, dt_s: float) -> None:
+        """Advance every bound chip ``dt_s`` seconds of service.
+
+        The lifecycle clock: cells decay through the device's retention
+        power law (``device.programmed.age_artifact``) without
+        reprogramming.  Drift-free configs only advance the clock
+        (bit-identical serving).
+        """
+        prog = self._require_programmed("age()")
+        self._rebind(prog.age(dt_s))
+
+    def health_check(self, n_probes: Optional[int] = None, seed: int = 0,
+                     budget: Optional[float] = None):
+        """Probe every bound artifact against its frozen digital reference.
+
+        Returns a ``device.health.HealthReport``; ``report.flagged`` names
+        the layers whose drift error crossed the budget — the refresh
+        candidates.  Purely digital, does not perturb the chips.
+        """
+        from repro.device import health as health_mod
+
+        prog = self._require_programmed("health_check()")
+        kw = {}
+        if n_probes is not None:
+            kw["n_probes"] = n_probes
+        if budget is not None:
+            kw["budget"] = budget
+        return health_mod.health_check(prog, seed=seed, **kw)
+
+    def compensate(self, n_probes: Optional[int] = None, seed: int = 0) -> None:
+        """Refit the free digital drift compensation on every noisy chip.
+
+        Updates each artifact's ``comp_scale`` (closed-form power-law
+        rescale + probe-fit residual, ``device.health.fit_compensation``)
+        and rebinds — zero reprogramming, recovers most of the drift-accrued
+        logit error between refreshes.
+        """
+        from repro.device import health as health_mod
+
+        prog = self._require_programmed("compensate()")
+        kw = {"n_probes": n_probes} if n_probes is not None else {}
+        self._rebind(health_mod.compensate_model(prog, seed=seed, **kw))
+
+    def hot_swap(self, directory: str, slot: Optional[str] = None) -> None:
+        """Rebind the chip from an artifact store without stopping serving.
+
+        Restores ``directory`` (following the ``ACTIVE`` slot pointer
+        unless ``slot`` is forced), validates it against this model's
+        expected projection set exactly like construction-time restore,
+        re-places it on the engine's mesh, and swaps between decode steps —
+        in-flight requests keep their caches and continue on the refreshed
+        chip at the next tick.  A swap onto a just-reprogrammed store is
+        bit-identical to an engine freshly constructed on that chip
+        (programming is deterministic; the store round-trips exact dtypes).
+        """
+        self._require_programmed("hot_swap()")
+        from repro.checkpoint import restore_programmed
+        from repro.device.programmed import expected_artifact_names
+
+        prog = restore_programmed(directory, mesh=self.mesh, slot=slot)
+        expected = expected_artifact_names(
+            self.params,
+            tie_lm_head=(self.cfg.tie_embeddings and self.cfg.frontend == "token"),
+        )
+        bad = sorted(
+            name for name, shape in expected.items()
+            if prog.lookup(name, shape) is None
+        )
+        if bad:
+            raise ValueError(
+                f"hot_swap store at {directory!r} does not match this model: "
+                f"{len(bad)}/{len(expected)} projections missing or "
+                f"shape-mismatched ({', '.join(bad[:5])}"
+                + (", ..." if len(bad) > 5 else "") + ")"
+            )
+        self._rebind(self._shard_artifacts(prog))
+
+    def refresh(self, directory: Optional[str] = None) -> Optional[str]:
+        """Reprogram fresh chips and swap them in — the lifecycle reset.
+
+        Reprograms every projection from the engine's params under the
+        construction-time device config (deterministic: the same chip the
+        engine started with, at service time zero).  With ``directory``,
+        the fresh chips are written into the *inactive* store slot while
+        the old ones keep serving, the ``ACTIVE`` pointer is atomically
+        swapped, and the engine hot-swaps from the store (serving exactly
+        what a restart would restore); returns the committed slot.  Without
+        a directory the fresh chips are rebound directly.
+        """
+        self._require_programmed("refresh()")
+        from repro.device.programmed import program_model
+
+        prog = program_model(
+            self.params,
+            device=self.crossbar.device,
+            fast=self.crossbar.fast,
+            tie_lm_head=(self.cfg.tie_embeddings and self.cfg.frontend == "token"),
+            expert_chips=self.expert_chips,
+        )
+        if directory is None:
+            self._rebind(self._shard_artifacts(prog))
+            return None
+        from repro.checkpoint import active_slot, save_programmed, swap_active
+
+        target = "B" if active_slot(directory) == "A" else "A"
+        save_programmed(directory, prog, slot=target)
+        swap_active(directory, target)
+        self.hot_swap(directory)
+        return target
 
     def _with_crossbar(self, fn):
         """Run ``fn`` under the engine's mesh and crossbar mode, with the

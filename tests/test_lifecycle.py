@@ -1,0 +1,476 @@
+"""Drift-aware chip lifecycle (ISSUE 7): aging artifacts, health
+monitoring, free digital compensation, and zero-downtime hot-swap.
+
+The contract under test:
+  * aging is a pure view of the same chip — a drift-free config ages to a
+    bit-identical chip (only the service clock moves), a drifting one shows
+    strictly growing error vs its immortal digital reference, and time
+    only moves forward (rejuvenation = reprogramming);
+  * the health monitor reads drift error without perturbing the chip, and
+    flags exactly the layers over budget;
+  * refitting the digital ``comp_scale`` recovers >= 50% of the aged error
+    with zero reprogramming (in practice near-total: retention drift is
+    almost pure common-mode conductance scale);
+  * the double-buffered store (slot A/B + atomic ACTIVE pointer) and
+    ``ServingEngine.hot_swap`` refresh a serving engine *between decode
+    steps*: a mid-run swap onto a reprogrammed chip generates the same
+    tokens as an uninterrupted run, and the store round-trips
+    ``t_service_s`` and the programming ``DeviceConfig``.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.device import (
+    DeviceConfig,
+    age_artifact,
+    artifact_at_time,
+    drift_time_factor,
+    effective_drift_nu,
+    fit_compensation,
+    health_check,
+    layer_health,
+    program_layer,
+    program_model,
+    programmed_linear,
+    programmed_matmul,
+)
+from repro.device.health import compensate_model, digital_twin
+
+pytestmark = pytest.mark.lifecycle
+
+DRIFT_DEV = DeviceConfig(sigma=0.02, drift_nu=0.05, seed=7)
+
+
+def _data(rng, B, K, N):
+    x = jnp.asarray(np.abs(rng.normal(size=(B, K))).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32) * 0.1)
+    return x, w
+
+
+# ---------------------------------------------------------------------------
+# aging semantics
+# ---------------------------------------------------------------------------
+
+def test_zero_drift_aging_is_bit_identical_noop():
+    """A drift-free chip ages to the same arrays — only the clock moves."""
+    rng = np.random.default_rng(0)
+    x, w = _data(rng, 4, 128, 16)
+    for dev in (None, DeviceConfig(sigma=0.05, seed=1)):
+        art = program_layer(w, device=dev)
+        aged = art.age(1e7)
+        assert aged.t_service_s == 1e7
+        assert art.t_service_s == 0.0  # aging never mutates the original
+        np.testing.assert_array_equal(np.asarray(art.w_codes), np.asarray(aged.w_codes))
+        if art.g_eff is not None:
+            np.testing.assert_array_equal(np.asarray(art.g_eff), np.asarray(aged.g_eff))
+        np.testing.assert_array_equal(
+            np.asarray(programmed_linear(x, art)),
+            np.asarray(programmed_linear(x, aged)),
+        )
+
+
+def test_aged_chip_error_grows_monotonically():
+    """Acceptance: drift_nu>0, t_service_s>0 shows monotone MSE growth vs
+    the frozen digital reference — the same chip, no reprogramming."""
+    rng = np.random.default_rng(1)
+    x, w = _data(rng, 4, 128, 16)
+    art = program_layer(w, device=DRIFT_DEV)
+    y_ref = programmed_matmul(x, digital_twin(art), interpret=True)
+
+    def mse(a):
+        return float(jnp.mean((programmed_matmul(x, a, interpret=True) - y_ref) ** 2))
+
+    errs = [mse(art.at_time(t)) for t in (1e2, 1e4, 1e6, 1e8)]
+    assert all(a < b for a, b in zip(errs, errs[1:])), errs
+
+
+def test_time_only_moves_forward():
+    rng = np.random.default_rng(2)
+    _, w = _data(rng, 1, 64, 8)
+    art = program_layer(w, device=DRIFT_DEV).age(100.0)
+    with pytest.raises(ValueError):
+        art.at_time(50.0)
+    with pytest.raises(ValueError):
+        age_artifact(art, -1.0)
+
+
+def test_incremental_aging_matches_absolute():
+    """age(a).age(b) lands at the same service time as at_time(a+b), and
+    the cells agree to one write-grid re-quantization step."""
+    rng = np.random.default_rng(3)
+    _, w = _data(rng, 1, 64, 8)
+    art = program_layer(w, device=DRIFT_DEV)
+    two = art.age(1e3).age(9e3)
+    one = artifact_at_time(art, 1e4)
+    assert two.t_service_s == one.t_service_s == 1e4
+    from repro.device import GEFF_FRAC_BITS
+
+    step = 2.0 ** -GEFF_FRAC_BITS
+    assert float(jnp.max(jnp.abs(two.g_eff - one.g_eff))) <= step + 1e-7
+
+
+def test_aged_stacked_artifact_slices_like_fresh():
+    """Aging commutes with stacking: at_time on the stacked artifact equals
+    at_time per slice (the elementwise decay has no cross-slice terms)."""
+    rng = np.random.default_rng(4)
+    ws = jnp.asarray(rng.normal(size=(3, 64, 8)).astype(np.float32))
+    stacked = program_layer(ws, device=DRIFT_DEV).at_time(1e6)
+    for i in range(3):
+        direct = program_layer(ws[i], device=DRIFT_DEV).at_time(1e6)
+        np.testing.assert_array_equal(
+            np.asarray(stacked.layer(i).g_eff), np.asarray(direct.g_eff)
+        )
+
+
+# ---------------------------------------------------------------------------
+# health monitor
+# ---------------------------------------------------------------------------
+
+def test_health_monitor_flags_only_over_budget_layers():
+    rng = np.random.default_rng(5)
+    _, w = _data(rng, 1, 128, 16)
+    params = {"wq": w}
+    prog = program_model(params, device=DRIFT_DEV)
+
+    fresh = health_check(prog, budget=1e9)  # absurd budget: nothing flags
+    assert fresh.healthy and fresh.flagged == ()
+
+    aged = health_check(prog.at_time(1e8), budget=1e-6)  # everything flags
+    assert not aged.healthy and aged.flagged == ("wq",)
+    assert aged.worst > fresh.worst
+
+
+def test_health_probe_does_not_perturb_the_chip():
+    rng = np.random.default_rng(6)
+    _, w = _data(rng, 1, 64, 8)
+    art = program_layer(w, device=DRIFT_DEV)
+    before = np.asarray(art.g_eff).copy()
+    layer_health("wq", art)
+    np.testing.assert_array_equal(before, np.asarray(art.g_eff))
+
+
+def test_ideal_chip_probes_error_free():
+    rng = np.random.default_rng(7)
+    _, w = _data(rng, 1, 64, 8)
+    h = layer_health("wq", program_layer(w))
+    assert h.rel_err == 0.0 and h.mse == 0.0
+
+
+# ---------------------------------------------------------------------------
+# free digital compensation
+# ---------------------------------------------------------------------------
+
+def test_compensation_recovers_at_least_half_the_aged_mse():
+    """Acceptance: digital scale compensation recovers >= 50% of the aged
+    MSE with zero reprogramming (the cells are untouched)."""
+    rng = np.random.default_rng(8)
+    x, w = _data(rng, 8, 128, 16)
+    art = program_layer(w, device=DRIFT_DEV)
+    aged = art.at_time(1e7)
+    comp = fit_compensation(aged)
+
+    np.testing.assert_array_equal(np.asarray(aged.g_eff), np.asarray(comp.g_eff))
+    y_ref = programmed_matmul(x, digital_twin(art), interpret=True)
+
+    def mse(a):
+        return float(jnp.mean((programmed_matmul(x, a, interpret=True) - y_ref) ** 2))
+
+    m_aged, m_comp = mse(aged), mse(comp)
+    assert m_comp <= 0.5 * m_aged, (m_aged, m_comp)
+
+
+def test_unit_comp_scale_is_bit_exact_noop():
+    """comp_scale of exactly 1.0 multiplies out bit-identically, so fresh
+    chips (comp_scale=None) and explicitly-unit-compensated chips serve the
+    same outputs."""
+    rng = np.random.default_rng(9)
+    x, w = _data(rng, 4, 64, 8)
+    art = program_layer(w, device=DRIFT_DEV)
+    unit = dataclasses.replace(art, comp_scale=jnp.ones(8, jnp.float32))
+    np.testing.assert_array_equal(
+        np.asarray(programmed_linear(x, art)),
+        np.asarray(programmed_linear(x, unit)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# temperature knob (Arrhenius drift scaling)
+# ---------------------------------------------------------------------------
+
+def test_reference_temperature_and_zero_ea_are_exact_noops():
+    base = DeviceConfig(drift_nu=0.05)
+    assert effective_drift_nu(base) == 0.05
+    assert effective_drift_nu(base.replace(temp_k=300.0, drift_ea_ev=0.4)) == 0.05
+    assert effective_drift_nu(base.replace(temp_k=360.0, drift_ea_ev=0.0)) == 0.05
+
+
+def test_hotter_chips_drift_faster():
+    base = DeviceConfig(drift_nu=0.05, drift_ea_ev=0.3)
+    hot, cold = base.replace(temp_k=360.0), base.replace(temp_k=250.0)
+    assert effective_drift_nu(hot) > 0.05 > effective_drift_nu(cold)
+    # more decay (smaller factor) at higher T over the same interval
+    assert drift_time_factor(hot, 0.0, 1e6) < drift_time_factor(base, 0.0, 1e6)
+    assert drift_time_factor(cold, 0.0, 1e6) > drift_time_factor(base, 0.0, 1e6)
+
+
+def test_temperature_scales_aged_error():
+    rng = np.random.default_rng(10)
+    x, w = _data(rng, 4, 64, 8)
+    y_ref = programmed_matmul(x, program_layer(w), interpret=True)
+
+    def mse_at(T):
+        dev = DRIFT_DEV.replace(temp_k=T, drift_ea_ev=0.3)
+        aged = program_layer(w, device=dev).at_time(1e6)
+        return float(jnp.mean((programmed_matmul(x, aged, interpret=True) - y_ref) ** 2))
+
+    assert mse_at(300.0) < mse_at(350.0)
+
+
+# ---------------------------------------------------------------------------
+# chip-to-chip spread
+# ---------------------------------------------------------------------------
+
+def test_chip_zero_is_bit_compatible():
+    """chip=0 (the default) folds nothing into the stage keys: spread-off
+    programming is bit-identical to pre-lifecycle artifacts."""
+    rng = np.random.default_rng(11)
+    ws = jnp.asarray(rng.normal(size=(2, 64, 8)).astype(np.float32))
+    plain = program_layer(ws, device=DRIFT_DEV)
+    spread0 = program_layer(ws, device=DRIFT_DEV, chips=(0, 0))
+    np.testing.assert_array_equal(np.asarray(plain.g_eff), np.asarray(spread0.g_eff))
+
+
+def test_chip_spread_decorrelates_identical_slabs():
+    """The same weight slab on two chip identities draws different device
+    perturbations — the fleet-realism knob for EP meshes."""
+    rng = np.random.default_rng(12)
+    w = rng.normal(size=(64, 8)).astype(np.float32)
+    ws = jnp.asarray(np.stack([w, w]))  # identical slabs
+    same = program_layer(ws, device=DRIFT_DEV)
+    spread = program_layer(ws, device=DRIFT_DEV, chips=(1, 2))
+    # without spread, identical slabs program to identical cells
+    np.testing.assert_array_equal(
+        np.asarray(same.g_eff[0]), np.asarray(same.g_eff[1])
+    )
+    assert not np.array_equal(np.asarray(spread.g_eff[0]), np.asarray(spread.g_eff[1]))
+    # per-slice equivalence: slice i == direct programming on chip i
+    for i, c in enumerate((1, 2)):
+        direct = program_layer(
+            jnp.asarray(w), device=DRIFT_DEV.replace(chip=c)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(spread.g_eff[i]), np.asarray(direct.g_eff)
+        )
+    # stacked aux is normalized to the base device (stackable treedef)
+    assert spread.device == DRIFT_DEV
+
+
+def test_chips_length_mismatch_raises():
+    rng = np.random.default_rng(13)
+    ws = jnp.asarray(rng.normal(size=(3, 32, 8)).astype(np.float32))
+    with pytest.raises(ValueError):
+        program_layer(ws, device=DRIFT_DEV, chips=(1, 2))
+    with pytest.raises(ValueError):
+        program_layer(ws, device=None, chips=(1, 2, 3))
+
+
+def test_expert_chips_spread_moe_banks():
+    """program_model(expert_chips=) varies chip identity along the expert
+    axis of 4-D banks and leaves 2-D/3-D leaves on the base chip."""
+    rng = np.random.default_rng(14)
+    w_e = rng.normal(size=(32, 8)).astype(np.float32)
+    params = {
+        "stage0": {
+            "b0": {
+                "ffn": {"wi": jnp.asarray(np.stack([np.stack([w_e, w_e])]))},  # (1, 2, K, N)
+                "mixer": {"wq": jnp.asarray(rng.normal(size=(32, 32)).astype(np.float32))},
+            }
+        }
+    }
+    plain = program_model(params, device=DRIFT_DEV)
+    spread = program_model(params, device=DRIFT_DEV, expert_chips=(1, 2))
+    wi_p = plain.by_name["stage0/b0/ffn/wi"]
+    wi_s = spread.by_name["stage0/b0/ffn/wi"]
+    np.testing.assert_array_equal(np.asarray(wi_p.g_eff[0, 0]), np.asarray(wi_p.g_eff[0, 1]))
+    assert not np.array_equal(np.asarray(wi_s.g_eff[0, 0]), np.asarray(wi_s.g_eff[0, 1]))
+    # 2-D leaves are untouched by the expert spread
+    np.testing.assert_array_equal(
+        np.asarray(plain.by_name["stage0/b0/mixer/wq"].g_eff),
+        np.asarray(spread.by_name["stage0/b0/mixer/wq"].g_eff),
+    )
+
+
+# ---------------------------------------------------------------------------
+# double-buffered store + service-time round trip
+# ---------------------------------------------------------------------------
+
+def test_store_round_trips_service_time_and_device(tmp_path):
+    """Acceptance: restore_programmed of an aged-then-saved chip round-trips
+    t_service_s (and the programming DeviceConfig) — the restored chip is
+    the aged chip, artifacts_equal including lifecycle state."""
+    from repro.checkpoint import restore_programmed, save_programmed
+    from repro.device.programmed import ProgrammedModel, artifacts_equal
+
+    rng = np.random.default_rng(15)
+    _, w = _data(rng, 1, 64, 8)
+    aged = program_layer(w, device=DRIFT_DEV).at_time(12345.5)
+    comp = fit_compensation(aged)
+    save_programmed(str(tmp_path), ProgrammedModel({"wq": comp}))
+    back = restore_programmed(str(tmp_path)).by_name["wq"]
+    assert back.t_service_s == 12345.5
+    assert back.device == DRIFT_DEV
+    assert back.comp_scale is not None
+    assert artifacts_equal(back, comp)
+
+
+def test_slot_swap_is_atomic_and_restore_follows_active(tmp_path):
+    from repro.checkpoint import (
+        active_slot,
+        restore_programmed,
+        save_programmed,
+        swap_active,
+    )
+    from repro.device.programmed import ProgrammedModel, artifacts_equal
+
+    rng = np.random.default_rng(16)
+    _, w = _data(rng, 1, 64, 8)
+    a = program_layer(w, device=DRIFT_DEV)
+    b = a.at_time(1e6)
+    d = str(tmp_path)
+
+    # swapping to an empty slot refuses — the pointer can never dangle
+    with pytest.raises(FileNotFoundError):
+        swap_active(d, "B")
+    assert active_slot(d) is None
+
+    save_programmed(d, ProgrammedModel({"wq": a}), slot="A")
+    swap_active(d, "A")
+    assert active_slot(d) == "A"
+    assert artifacts_equal(restore_programmed(d).by_name["wq"], a)
+
+    # writing the inactive slot does not disturb the active chip
+    save_programmed(d, ProgrammedModel({"wq": b}), slot="B")
+    assert artifacts_equal(restore_programmed(d).by_name["wq"], a)
+    swap_active(d, "B")
+    assert artifacts_equal(restore_programmed(d).by_name["wq"], b)
+    # a forced slot read overrides the pointer (rollback inspection)
+    assert artifacts_equal(restore_programmed(d, slot="A").by_name["wq"], a)
+    with pytest.raises(ValueError):
+        swap_active(d, "C")
+
+
+# ---------------------------------------------------------------------------
+# serving-engine lifecycle (tiny LM, end to end)
+# ---------------------------------------------------------------------------
+
+def _tiny_engine(params, cfg, dev, **kw):
+    from repro.models.layers import CrossbarMode
+    from repro.serving.engine import ServingEngine
+
+    return ServingEngine(
+        cfg, params, max_batch=1, max_seq=16,
+        crossbar=CrossbarMode(enabled=True, device=dev), **kw,
+    )
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    from benchmarks.noise_sweep import tiny_lm_config
+    from repro.models import model as M
+
+    cfg = tiny_lm_config()
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    return cfg, params
+
+
+def test_engine_lifecycle_monitor_compensate_refresh(tiny_lm, tmp_path):
+    """The full state machine on a serving engine: age degrades health,
+    compensate recovers it (no reprogramming), refresh through the
+    double-buffered store returns to a bit-identical fresh chip."""
+    from repro.device.programmed import artifacts_equal
+
+    cfg, params = tiny_lm
+    dev = DeviceConfig(sigma=0.02, drift_nu=0.05, seed=3)
+    eng = _tiny_engine(params, cfg, dev)
+    assert eng.uptime_s == 0.0
+
+    eng.age(1e7)
+    assert eng.uptime_s == 1e7
+    aged_health = eng.health_check()
+    assert aged_health.worst > 0
+
+    eng.compensate()
+    assert eng.health_check().worst < aged_health.worst
+    assert eng.uptime_s == 1e7  # compensation is not a refresh
+
+    slot = eng.refresh(str(tmp_path))
+    assert slot == "A" and eng.uptime_s == 0.0
+    fresh = _tiny_engine(params, cfg, dev)
+    a1, a2 = eng.crossbar.programmed.by_name, fresh.crossbar.programmed.by_name
+    assert set(a1) == set(a2)
+    for n in a1:
+        assert artifacts_equal(a1[n], a2[n]), n
+    # the next refresh lands in the other slot
+    assert eng.refresh(str(tmp_path)) == "B"
+
+
+def test_engine_hot_swap_mid_run_yields_uninterrupted_tokens(tiny_lm, tmp_path):
+    """Acceptance: hot_swap mid-run_until_done yields the same tokens as an
+    uninterrupted fresh-chip run — the swap rebinds between decode steps
+    without touching KV caches or slot state, and the refreshed chip is
+    bit-identical to the one that started the run."""
+    cfg, params = tiny_lm
+    dev = DeviceConfig(sigma=0.02, drift_nu=0.05, seed=3)
+    prompt = np.array([1, 2, 3], np.int32)
+
+    ref = _tiny_engine(params, cfg, dev)
+    ref.submit(prompt, max_new_tokens=5)
+    out_ref = ref.run_until_done()[0].generated
+
+    eng = _tiny_engine(params, cfg, dev)
+    eng.submit(prompt, max_new_tokens=5)
+    eng.step()  # admit + first decode
+    eng.step()
+    eng.refresh(str(tmp_path))  # reprogram -> inactive slot -> swap -> rebind
+    out = eng.run_until_done()[0].generated
+    assert out == out_ref and len(out) == 5
+
+
+def test_engine_hot_swap_validates_the_store(tiny_lm, tmp_path):
+    """A store from a different model fails hot_swap loudly — silent
+    degradation to per-call programming is the failure mode the name-keyed
+    binding layer exists to prevent."""
+    from repro.checkpoint import save_programmed
+    from repro.device.programmed import ProgrammedModel
+
+    cfg, params = tiny_lm
+    dev = DeviceConfig(sigma=0.02, drift_nu=0.05, seed=3)
+    eng = _tiny_engine(params, cfg, dev)
+    rng = np.random.default_rng(17)
+    stranger = program_layer(jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32)))
+    save_programmed(str(tmp_path), ProgrammedModel({"nope": stranger}))
+    with pytest.raises(ValueError, match="does not match"):
+        eng.hot_swap(str(tmp_path))
+
+
+def test_engine_restart_restores_aged_chip(tiny_lm, tmp_path):
+    """save_artifacts of an aged engine + restore_artifacts restart resumes
+    at the same service time with the same cells (t_service_s round-trips
+    through the store, engine-level)."""
+    from repro.device.programmed import artifacts_equal
+
+    cfg, params = tiny_lm
+    dev = DeviceConfig(sigma=0.02, drift_nu=0.05, seed=3)
+    eng = _tiny_engine(params, cfg, dev)
+    eng.age(5e5)
+    eng.save_artifacts(str(tmp_path))
+
+    eng2 = _tiny_engine(params, cfg, dev, restore_artifacts=str(tmp_path))
+    assert eng2.uptime_s == 5e5
+    a1, a2 = eng.crossbar.programmed.by_name, eng2.crossbar.programmed.by_name
+    for n in a1:
+        assert artifacts_equal(a1[n], a2[n]), n

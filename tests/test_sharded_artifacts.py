@@ -289,6 +289,117 @@ def test_engine_mesh_serving_matches_single_device(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# Chip lifecycle under the 8-rank mesh (ISSUE 7)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.lifecycle
+def test_ep_chip_spread_serves_bit_identical_sharded():
+    """Per-rank chip variation: expert_chips= programs each expert bank
+    slice on its own chip identity (distinct device perturbation draws),
+    and the spread chip still serves the shard_map EP path with zero
+    misses, bit-identical to the single-device programmed path.  Non-expert
+    leaves stay on the base chip, so spread-off programming (the default)
+    remains bit-compatible with pre-lifecycle chips — the existing EP
+    bit-identity test above pins that arm."""
+    res = _run(_SETUP + """
+    cfg, params, axes, tokens = make(layout="ep_only")
+    dev = DeviceConfig(sigma=0.05, p_stuck_on=1e-3, p_stuck_off=1e-3,
+                       write_verify_iters=2, seed=3)
+    pm0 = program_model(params, device=dev, tie_lm_head=True)
+    pm = program_model(params, device=dev, tie_lm_head=True,
+                       expert_chips=tuple(range(1, 9)))
+    mode = L.CrossbarMode(enabled=True, fast=True, device=dev, programmed=pm,
+                          strict=True)
+
+    wi0 = np.asarray(pm0.by_name["stage0/b0/ffn/wi"].g_eff)
+    wis = np.asarray(pm.by_name["stage0/b0/ffn/wi"].g_eff)
+    wq0 = np.asarray(pm0.by_name["stage0/b0/mixer/wq"].g_eff)
+    wqs = np.asarray(pm.by_name["stage0/b0/mixer/wq"].g_eff)
+
+    L.reset_crossbar_misses(); prog.reset_consumed_artifact_names()
+    y0 = np.asarray(jax.jit(forward_fn(cfg, pm, mode))(params, tokens))
+    pm.verify_consumed()
+
+    mesh = Mesh(np.array(jax.devices()).reshape(1, 8), ("data", "model"))
+    L.reset_crossbar_misses(); prog.reset_consumed_artifact_names()
+    with use_mesh(mesh, layout_overrides(cfg)), mesh:
+        y1 = np.asarray(jax.jit(forward_fn(cfg, pm, mode))(params, tokens))
+    pm.verify_consumed()
+
+    print(json.dumps({
+        "spread_changed_experts": bool(not np.array_equal(wi0, wis)),
+        "attn_on_base_chip": bool(np.array_equal(wq0, wqs)),
+        "misses": list(L.crossbar_misses()),
+        "bit_identical": bool(np.array_equal(y0, y1)),
+    }))
+    """)
+    assert res["spread_changed_experts"]
+    assert res["attn_on_base_chip"]
+    assert res["misses"] == []
+    assert res["bit_identical"]
+
+
+@pytest.mark.slow
+@pytest.mark.lifecycle
+def test_engine_mesh_hot_swap_mid_run_bit_identical(tmp_path):
+    """Acceptance (ISSUE 7): hot_swap after re-programming is bit-identical
+    to a fresh chip *under the 8-rank sharded path* — a mesh ServingEngine
+    ages its chip, refreshes through the double-buffered store mid-run, and
+    finishes the generation with exactly the tokens of an uninterrupted
+    fresh-chip run; the swapped-in artifacts equal the fresh engine's and
+    keep their mesh placement."""
+    res = _run(_SETUP + f"""
+    from repro.models.layers import CrossbarMode
+    from repro.serving.engine import ServingEngine
+    from repro.device.programmed import artifacts_equal
+
+    cfg, params, axes, tokens = make(layout="ep_only")
+    dev = DeviceConfig(sigma=0.05, p_stuck_on=1e-3, p_stuck_off=1e-3,
+                       write_verify_iters=2, drift_nu=0.05)
+    prompt = np.array([1, 2, 3], np.int32)
+    mesh = Mesh(np.array(jax.devices()).reshape(1, 8), ("data", "model"))
+
+    ref = ServingEngine(cfg, params, max_batch=1, max_seq=16,
+                        crossbar=CrossbarMode(enabled=True, device=dev),
+                        mesh=mesh, param_axes=axes)
+    ref.submit(prompt, max_new_tokens=5)
+    out_ref = ref.run_until_done()[0].generated
+
+    eng = ServingEngine(cfg, params, max_batch=1, max_seq=16,
+                        crossbar=CrossbarMode(enabled=True, device=dev),
+                        mesh=mesh, param_axes=axes)
+    eng.submit(prompt, max_new_tokens=5)
+    eng.step()  # admit + first decode on the original chip
+    eng.step()
+    slot = eng.refresh({str(tmp_path)!r})  # reprogram -> slot -> swap -> rebind
+    out = eng.run_until_done()[0].generated
+
+    a, b = eng.crossbar.programmed.by_name, ref.crossbar.programmed.by_name
+    equal = set(a) == set(b) and all(artifacts_equal(a[n], b[n]) for n in a)
+    wi = eng.crossbar.programmed.by_name["stage0/b0/ffn/wi"]
+
+    # aging works on the mesh-placed chip too: elementwise decay respects
+    # the recorded sharding and health sees the drift
+    eng.age(1e6)
+    worst_aged = eng.health_check().worst
+    eng.compensate()
+    worst_comp = eng.health_check().worst
+    print(json.dumps({{
+        "out_ref": out_ref, "out": out, "slot": slot,
+        "swap_equal_fresh": bool(equal),
+        "placed": str(wi.g_eff.sharding.spec),
+        "worst_aged": worst_aged, "worst_comp": worst_comp,
+    }}))
+    """)
+    assert res["out"] == res["out_ref"]
+    assert len(res["out"]) == 5
+    assert res["slot"] == "A"
+    assert "model" in res["placed"]
+    assert res["worst_comp"] < res["worst_aged"]
+    assert res["worst_aged"] > 0
+
+
+# ---------------------------------------------------------------------------
 # Single-process unit tests: spec derivation and rank-local slicing
 # ---------------------------------------------------------------------------
 
