@@ -41,6 +41,9 @@ HEADLINE = [
     ("kernel_lifecycle", "aged_monotone", "higher"),
     ("kernel_lifecycle", "comp_recovery_frac", "higher"),
     ("kernel_lifecycle", "refresh_bit_exact", "higher"),
+    ("kernel_planned", "bit_exact", "higher"),
+    ("kernel_planned", "conversions_ratio_max", "lower"),
+    ("kernel_planned", "energy_ratio_max", "lower"),
 ]
 REGRESSION_TOL = 0.20
 
@@ -65,6 +68,25 @@ ABSOLUTE_FLOORS = {
     ("kernel_lifecycle", "refresh_bit_exact"): 1.0,
     ("kernel_lifecycle", "comp_recovery_frac"): 0.5,
     ("kernel_lifecycle", "aged_monotone"): 1.0,
+    # repair acceptance (ISSUE 8): per-physical-crossbar repair with a
+    # self-fault-discounted spare pool must recover >= 97% of the stuck-at
+    # MSE at p = 1e-2 on the deep (K = 512) slab — the bench regime where
+    # whole-column sparing structurally capped out at ~54%
+    ("kernel_repaired", "recovery_frac"): 0.97,
+    # planned-chip acceptance (ISSUE 8): the heterogeneous compile must be
+    # bit-exact vs the homogeneous programmed path (ceilings below gate the
+    # strict predicted-cost win)
+    ("kernel_planned", "bit_exact"): 1.0,
+}
+
+# Ratio metrics where *small* is the win are gated against fixed acceptance
+# ceilings: the planner's compile must predict strictly fewer conversions /
+# less energy than the homogeneous baseline on every tested model (a ratio
+# of 1.0 means it never found a better datapath — a planner regression even
+# though nothing "slowed down")
+ABSOLUTE_CEILINGS = {
+    ("kernel_planned", "conversions_ratio_max"): 0.999,
+    ("kernel_planned", "energy_ratio_max"): 0.999,
 }
 
 
@@ -75,6 +97,11 @@ def check_regressions(old: dict, new: dict) -> list:
         if bench in new and key in new[bench] and float(new[bench][key]) < floor:
             failures.append(
                 f"{bench}.{key}: {float(new[bench][key]):.4g} < acceptance floor {floor}"
+            )
+    for (bench, key), ceil in ABSOLUTE_CEILINGS.items():
+        if bench in new and key in new[bench] and float(new[bench][key]) > ceil:
+            failures.append(
+                f"{bench}.{key}: {float(new[bench][key]):.4g} > acceptance ceiling {ceil}"
             )
     for bench, key, direction in HEADLINE:
         if bench not in old or key not in old.get(bench, {}):

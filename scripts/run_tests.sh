@@ -23,6 +23,12 @@
 #                                   refreshes the file
 #   scripts/run_tests.sh <args...>  extra args forwarded to pytest
 #
+# Wall-clock budget: the default fast tier targets < ~5 min on a laptop-class
+# CPU (interpret-mode Pallas).  Anything heavier belongs behind
+# @pytest.mark.slow (or the dist/lifecycle tiers); re-triage with
+#   python -m pytest -q --durations=25
+# when the fast tier creeps past the budget.
+#
 # pytest exits 2 on collection errors, so a broken import fails the run.
 set -euo pipefail
 cd "$(dirname "$0")/.."

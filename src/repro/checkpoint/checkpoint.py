@@ -156,6 +156,13 @@ def _decode_aux(obj):
     raise ValueError(f"unknown artifact aux kind: {kind!r}")
 
 
+def _decode_plan(obj: dict):
+    """Rebuild a ``core.planner.LayerPlan`` from its manifest dict."""
+    from repro.core.planner import LayerPlan
+
+    return LayerPlan(**obj)
+
+
 def _encode_pspec(spec) -> list:
     """JSON-encode a PartitionSpec's entries (None / str / tuple-of-str)."""
     return [list(e) if isinstance(e, tuple) else e for e in spec]
@@ -249,8 +256,10 @@ def save_programmed(
     One ``.npz`` per artifact (every non-None array leaf, exact dtypes) plus
     a manifest holding the name-keyed static aux: ``CrossbarSpec``,
     ``ADCConfig``, the kernel-path flag, the write-verify/repair reports,
-    and the lifecycle state (the programming ``DeviceConfig`` and the
-    chip's ``t_service_s`` service clock).  Restoring yields a
+    the lifecycle state (the programming ``DeviceConfig`` and the
+    chip's ``t_service_s`` service clock), and — for planned chips —
+    each layer's compile decision (``core.planner.LayerPlan``: datapath,
+    ADC schedule, spare budget).  Restoring yields a
     bit-identical chip — same effective cells, same fault realizations,
     same routing tables, same age.
 
@@ -298,6 +307,7 @@ def save_programmed(
             "sharding": _artifact_shardings(art),
             "device": (dc.asdict(art.device) if art.device is not None else None),
             "t_service_s": float(art.t_service_s),
+            "plan": (dc.asdict(art.plan) if art.plan is not None else None),
         }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -402,6 +412,10 @@ def restore_programmed(directory: str, mesh=None, slot: Optional[str] = None):
                 else None
             ),
             t_service_s=float(info.get("t_service_s", 0.0)),
+            # tolerant decode: pre-planner manifests carry no plan
+            plan=(
+                _decode_plan(info["plan"]) if info.get("plan") is not None else None
+            ),
         )
         node = tree
         parts = name.split("/")

@@ -139,7 +139,10 @@ def evaluate(
     # moved byte scales with it (ISAAC 39-bit private links vs Newton's
     # 16-bit shared links after embedded shift-and-add / adaptive ADC).
     out_bits = 23 if ima.compact_htree else spec.acc_bits
-    if ima.adc_cfg.mode == "adaptive":
+    if ima.compact_htree and ima.adc_cfg.mode == "adaptive":
+        # Adaptive ADC trims the *shared* compact links to 16 bits; without
+        # the compact HTree there are no shared links to trim, so a
+        # non-compact chip must not be credited with Newton's narrow links.
         out_bits = 16
     htree_width_scale = (out_bits + (16 if ima.compact_htree else 32)) / 32.0
 

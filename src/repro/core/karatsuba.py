@@ -150,10 +150,17 @@ def karatsuba_cost(levels: int, spec: CrossbarSpec = DEFAULT_SPEC) -> KaratsubaC
     if levels == 0:
         return KaratsubaCost(spec.n_iters * spec.n_slices, spec.n_iters, spec.n_slices)
     if levels == 1:
-        a = _cost_unsigned(8, 8)  # slices x iters for 8b x 8b
-        c = _cost_unsigned(9, 9)
-        slots = 2 * a[0] + c[0]
-        iters = max(a[1], a[1]) + c[1]  # A,B parallel then C
+        # Split mirrors _accumulate_unsigned: h = min(in//2, w//2), so
+        # A = W1X1 is an (in-h)b x (w-h)b product and B = W0X0 an h x h one
+        # (identical only for the symmetric 16x16 default); C widens both
+        # operand halves by one carry bit.
+        h = min(spec.input_bits // 2, spec.weight_bits // 2)
+        in_hi, w_hi = spec.input_bits - h, spec.weight_bits - h
+        a = _cost_unsigned(in_hi, w_hi, spec)
+        b = _cost_unsigned(h, h, spec)
+        c = _cost_unsigned(max(h, in_hi) + 1, max(h, w_hi) + 1, spec)
+        slots = a[0] + b[0] + c[0]
+        iters = max(a[1], b[1]) + c[1]  # A,B parallel then C
         return KaratsubaCost(slots, iters, 13)
     if levels == 2:
         # Paper §III.C: "8 ADCs busy in the first 4 iterations, 6 ADCs in the
@@ -163,9 +170,11 @@ def karatsuba_cost(levels: int, spec: CrossbarSpec = DEFAULT_SPEC) -> KaratsubaC
     raise ValueError("levels must be 0, 1, or 2")
 
 
-def _cost_unsigned(in_bits: int, w_bits: int) -> Tuple[int, int]:
-    slices = -(-w_bits // DEFAULT_SPEC.cell_bits)
-    iters = -(-in_bits // DEFAULT_SPEC.dac_bits)
+def _cost_unsigned(
+    in_bits: int, w_bits: int, spec: CrossbarSpec = DEFAULT_SPEC
+) -> Tuple[int, int]:
+    slices = -(-w_bits // spec.cell_bits)
+    iters = -(-in_bits // spec.dac_bits)
     return slices * iters, iters
 
 

@@ -46,13 +46,18 @@ def provision_spare_cols(
 ) -> int:
     """Spare columns per crossbar for a stuck-cell rate (provisioning rule).
 
-    A column is worth repairing when its most significant slice carries a
-    stuck cell (slice significance makes MSB-slice faults dominate output
-    error — see ``device.repair.column_salience``); the expected fraction of
-    such columns is ``1 - (1 - p)**rows``.  ``coverage`` scales the budget
-    (< 1 repairs only the worst offenders, > 1 over-provisions so the
-    planner can skip spares that are themselves faulty).  Capped at the
-    crossbar width.
+    Repair operates per physical column unit (one bit-slice x row-group
+    crossbar column of ``spec.rows`` cells — ``device.repair``); the
+    expected fraction of afflicted units is ``frac = 1 - (1 - p)**rows``.
+    Spares draw faults at the same rate, so only ``1 - frac`` of the pool
+    is clean: the budget that covers the victims is ``cols * frac``
+    *discounted by the usable-spare fraction*, ``cols * frac / (1 - frac)``
+    — at p = 1e-2 that self-fault correction is the difference between a
+    pool that structurally cannot reach the >= 97% recovery bar and one
+    that does (BENCH kernel_repaired).  ``coverage`` scales the budget
+    (< 1 repairs only the worst offenders, > 1 over-provisions further).
+    Capped at twice the crossbar width (the widest per-group output mux we
+    model).
 
     The budget is provisioned per column group in the same layout
     ``device.repair.spare_budget`` consumes: ``spare_cols`` redundant
@@ -64,7 +69,8 @@ def provision_spare_cols(
     if fault_rate <= 0.0 or coverage <= 0.0:
         return 0
     frac = 1.0 - (1.0 - fault_rate) ** spec.rows
-    return min(spec.cols, math.ceil(spec.cols * frac * coverage))
+    usable = max(1.0 - frac, 1.0 / (2.0 * spec.cols))  # cap binds anyway
+    return min(2 * spec.cols, math.ceil(spec.cols * frac / usable * coverage))
 
 
 @dataclasses.dataclass

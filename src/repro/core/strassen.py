@@ -192,11 +192,20 @@ def strassen_cost(
 
 
 def strassen_stats(
-    m: int, k: int, n: int, spec: CrossbarSpec = DEFAULT_SPEC, levels: int = 1
+    m: int,
+    k: int,
+    n: int,
+    spec: CrossbarSpec = DEFAULT_SPEC,
+    levels: int = 1,
+    widening: str = "paper",
 ) -> ConversionStats:
-    cost = strassen_cost(m, k, n, spec, levels)
+    """Conversion stats under the same ``widening`` accounting as
+    ``strassen_cost``: the "paper" mode reuses the original datapath width,
+    so it costs no extra iterations; only the "exact" mode (one bit wider
+    per level) pays the +1 iteration per level its extra slice implies."""
+    cost = strassen_cost(m, k, n, spec, levels, widening=widening)
     return ConversionStats(
         conversions=cost.adc_conversions,
         bit_decisions=cost.adc_conversions * spec.adc_bits,
-        iterations=spec.n_iters + levels,
+        iterations=spec.n_iters + (levels if widening == "exact" else 0),
     )

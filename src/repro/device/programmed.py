@@ -85,8 +85,10 @@ class ProgrammedLinear:
         the spare block plus ``out_gather`` are the explicit hardware
         record: the redundant columns as programmed and the column-mux
         routing table.
-      * ``out_gather``: (N,) int32 or None — physical column serving each
-        logical output (j, or N + b for repaired columns).
+      * ``out_gather``: (S, R, N) int32 or None — per-physical-crossbar
+        routing tables (R = row groups): the physical column serving each
+        logical output within that (slice, row group) array (j, or N + b
+        for repaired units).
       * ``comp_scale``: (N,) float32 or None — drift-compensating *digital*
         per-column output scales (``device.health.fit_compensation``).
         They live outside the chip — updating them costs no reprogramming —
@@ -114,7 +116,12 @@ class ProgrammedLinear:
     optional ``repair.RepairReport`` (tuples of them for stacked artifacts);
     ``device`` — the ``DeviceConfig`` the chip was programmed with (the
     lifecycle layer needs its drift law and level map to age the chip);
-    ``t_service_s`` — seconds of service since programming.
+    ``t_service_s`` — seconds of service since programming; ``plan`` — the
+    optional ``core.planner.LayerPlan`` this chip was compiled under: which
+    datapath serves it (direct / Karatsuba levels / Strassen — executed by
+    ``programmed_matmul`` on ideal chips, bit-identical by exact limb
+    arithmetic), which ADC schedule, and the spare/replication budgets the
+    programming pass materialized.
     """
 
     w_codes: jnp.ndarray
@@ -132,6 +139,7 @@ class ProgrammedLinear:
     comp_scale: Optional[jnp.ndarray] = None
     device: Optional[dm.DeviceConfig] = None
     t_service_s: float = 0.0
+    plan: Optional[Any] = None  # core.planner.LayerPlan (static, hashable)
 
     @property
     def noisy(self) -> bool:
@@ -180,7 +188,7 @@ class ProgrammedLinear:
         )
         aux = (
             self.spec, self.adc_cfg, self.fast, self.report, self.repair,
-            self.device, self.t_service_s,
+            self.device, self.t_service_s, self.plan,
         )
         return children, aux
 
@@ -188,11 +196,12 @@ class ProgrammedLinear:
     def tree_unflatten(cls, aux, children):
         (w_codes, g_eff, w_colsum, w_scale, x_scale, g_spare, out_gather,
          comp_scale) = children
-        spec, adc_cfg, fast, report, repair, device, t_service_s = aux
+        spec, adc_cfg, fast, report, repair, device, t_service_s, plan = aux
         return cls(
             w_codes, g_eff, w_colsum, w_scale, x_scale, spec, adc_cfg, fast,
             report, g_spare=g_spare, out_gather=out_gather, repair=repair,
             comp_scale=comp_scale, device=device, t_service_s=t_service_s,
+            plan=plan,
         )
 
 
@@ -222,6 +231,7 @@ def artifacts_equal(a: "ProgrammedLinear", b: "ProgrammedLinear") -> bool:
         and a.fast == b.fast
         and a.device == b.device
         and a.t_service_s == b.t_service_s
+        and a.plan == b.plan
     )
 
 
@@ -236,6 +246,7 @@ def program_layer(
     fast: bool = True,
     with_report: bool = False,
     chips: Optional[Tuple[int, ...]] = None,
+    plan: Optional[Any] = None,
 ) -> ProgrammedLinear:
     """Compile one (K, N) — or stacked (L, K, N) / (L, E, K, N) — weight.
 
@@ -265,6 +276,15 @@ def program_layer(
     passed): aging depends only on the drift law, which the spread does not
     touch.  ``chips=None`` (default) is bit-compatible with every
     pre-lifecycle artifact.
+
+    ``plan`` (a ``core.planner.LayerPlan``) compiles the chip under the
+    plan compiler's per-layer choices: the ADC config is materialized from
+    the plan's mode against the layer-scaled spec, a positive planned
+    spare-column budget overrides the device's (only when the device has
+    stuck faults to repair — a plan cannot conjure a fault model), and the
+    plan rides the artifact's static aux so ``programmed_matmul`` executes
+    the chosen datapath.  ``plan=None`` is the homogeneous compile,
+    bit-compatible with every pre-planner artifact.
     """
     w = jnp.asarray(w, jnp.float32)
     if w.ndim >= 3:  # stacked (L/E leading axes): compile per slice, stack
@@ -285,7 +305,7 @@ def program_layer(
             program_layer(
                 w[i], spec, devices[i], adc_cfg, x_scale=x_scale,
                 w_scale=w_scale, fast=fast, with_report=with_report,
-                chips=(chips if w.ndim > 3 else None),
+                chips=(chips if w.ndim > 3 else None), plan=plan,
             )
             for i in range(w.shape[0])
         ]
@@ -306,6 +326,21 @@ def program_layer(
             repair=(repairs if any(r is not None for r in repairs) else None),
         )
     spec = layer_scaled_spec(spec, w.shape[0])
+    if plan is not None:
+        from repro.core.planner import adc_config_for
+
+        # materialize the plan's choices: ADC schedule against *this*
+        # layer's scaled spec, spare budget onto the fault model (a plan
+        # with spares but no faulty device to repair is a no-op, not an
+        # error — the plan may have been compiled for a noisier deployment)
+        adc_cfg = adc_config_for(plan.adc_mode, spec)
+        if (
+            plan.spare_cols > 0
+            and device is not None
+            and not device.is_ideal
+            and (device.p_stuck_on > 0 or device.p_stuck_off > 0)
+        ):
+            device = dataclasses.replace(device, spare_cols=plan.spare_cols)
     if w_scale is None:
         # kept as a 0-d array so the steady-state dequantize is op-for-op
         # identical to the per-call path's traced scale
@@ -331,20 +366,20 @@ def program_layer(
         # (bit-identical cells, pinned by test_programming_is_deterministic)
         from repro.device import repair as repair_mod
 
-        g_eff, plan, report = repair_mod.repaired_effective_cells(
+        g_eff, rplan, report = repair_mod.repaired_effective_cells(
             wb, spec, device, with_report=with_report
         )
-        if plan is not None:
-            g_spare = plan.g_spare
-            out_gather = plan.out_gather
-            repair_rep = repair_mod.repair_report(plan)
+        if rplan is not None:
+            g_spare = rplan.g_spare
+            out_gather = rplan.out_gather
+            repair_rep = repair_mod.repair_report(rplan)
     return ProgrammedLinear(
         w_codes=wq, g_eff=g_eff, w_colsum=w_colsum,
         w_scale=w_scale_a,
         x_scale=(jnp.asarray(x_scale, jnp.float32) if x_scale is not None else None),
         g_spare=g_spare, out_gather=out_gather,
         spec=spec, adc_cfg=adc_cfg, fast=fast, report=report, repair=repair_rep,
-        device=device, t_service_s=0.0,
+        device=device, t_service_s=0.0, plan=plan,
     )
 
 
@@ -451,11 +486,34 @@ def programmed_matmul(
             jnp.maximum(jnp.max(x), 1e-9) / ((1 << spec.input_bits) - 1)
         )
     xq = quantize_input(x, spec, x_scale)
+    datapath = art.plan.datapath if art.plan is not None else "direct"
     if art.g_eff is not None:
+        # noisy chips always serve through the device kernel: the
+        # effective-cell read models physical arrays, which the
+        # divide-and-conquer datapaths re-tile rather than re-read — the
+        # plan still governs the ADC schedule (adc_cfg below) and the spare
+        # budget (baked into g_eff at programming time)
         yq = noisy_vmm_pallas(
             xq, art.g_eff, spec, adc_cfg=art.adc_cfg, interpret=interpret,
             skip_zero_planes=skip_zero_planes,
         )
+    elif datapath != "direct":
+        # planned heterogeneous datapath: exact limb arithmetic, so the
+        # output codes are bit-identical to the direct kernel's (the
+        # kernel_planned bench and tests/test_planner.py gate this)
+        if datapath == "strassen":
+            from repro.core.strassen import strassen_matmul
+
+            lead = xq.shape[:-1]
+            yq = strassen_matmul(
+                xq.reshape(-1, xq.shape[-1]), art.w_codes, spec, levels=1
+            ).reshape(lead + (art.w_codes.shape[-1],))
+        else:
+            from repro.core.karatsuba import karatsuba_vmm
+
+            yq = karatsuba_vmm(
+                xq, art.w_codes, spec, levels=art.plan.karatsuba_levels
+            )
     elif art.fast:
         yq = crossbar_vmm_pallas(
             xq, art.w_codes, spec, adc_cfg=None, fast=True, interpret=interpret,
@@ -578,7 +636,9 @@ def artifact_shard_specs(art: ProgrammedLinear, wspec) -> Dict[str, Any]:
         # the spare block is a per-group column *budget*, not logical output
         # columns — keep it whole on every rank that holds the group's rows
         "g_spare": P(*stack, None, kspec, None),
-        "out_gather": P(*stack, nspec),
+        # (S, R, N) per-crossbar routing tables: slice/row-group axes stay
+        # whole (they are physical-array coordinates), columns follow N
+        "out_gather": P(*stack, None, None, nspec),
         # digital per-column compensation scales follow the output columns,
         # exactly like w_colsum
         "comp_scale": P(*stack, nspec),
@@ -734,36 +794,40 @@ def local_artifact(
         n_cols = int(art.w_codes.shape[-1])
         size = int(np.prod([axis_sizes[a] for a in (nspec if isinstance(nspec, tuple) else (nspec,))]))
         n_loc = n_cols // size
-        gather = arrays["out_gather"]
-        lead = gather.shape[:-1]
-        gather = gather.reshape(-1, gather.shape[-1]).copy()
-        spare = arrays["g_spare"]
-        sp_lead = spare.shape[:-3] if spare.ndim > 3 else ()
-        spare2 = spare.reshape((-1,) + spare.shape[-3:]) if spare.ndim > 3 else spare[None]
+        gather = arrays["out_gather"]  # stack + (S, R, n_loc)
+        lead = gather.shape[:-3]
+        gather = gather.reshape((-1,) + gather.shape[-3:]).copy()
+        spare = arrays["g_spare"]  # stack + (S, K, B)
+        spare2 = spare.reshape((-1,) + spare.shape[-3:])
         new_spares = []
         for i in range(gather.shape[0]):
-            row = gather[i]
+            # one chip: compact its spare block to the columns any of the
+            # per-(slice, row group) routing tables actually reference,
+            # sharing one local numbering across all of them (a spare is one
+            # physical column position in every array of the group)
+            flat = gather[i].reshape(-1, gather.shape[-1])
             used: list = []
-            for j in range(n_loc):
-                g = int(row[j])
-                if g < n_cols:
-                    # data column: repair only ever redirects a column to
-                    # a spare, so the global value is this column's own
-                    # physical position — locally that is just j
-                    row[j] = j
-                else:
-                    b = g - n_cols
-                    if b not in used:
-                        used.append(b)
-                    row[j] = n_loc + used.index(b)
+            for u in range(flat.shape[0]):
+                for j in range(n_loc):
+                    g = int(flat[u, j])
+                    if g < n_cols:
+                        # data column: repair only ever redirects a column to
+                        # a spare, so the global value is this column's own
+                        # physical position — locally that is just j
+                        flat[u, j] = j
+                    else:
+                        b = g - n_cols
+                        if b not in used:
+                            used.append(b)
+                        flat[u, j] = n_loc + used.index(b)
             new_spares.append(spare2[i][..., used] if used else spare2[i][..., :0])
         width = max((s.shape[-1] for s in new_spares), default=0)
         padded = [
             np.pad(s, [(0, 0)] * (s.ndim - 1) + [(0, width - s.shape[-1])])
             for s in new_spares
         ]
-        spare_out = np.stack(padded).reshape(sp_lead + padded[0].shape) if sp_lead else padded[0]
-        arrays["out_gather"] = gather.reshape(lead + (gather.shape[-1],))
+        spare_out = np.stack(padded).reshape(lead + padded[0].shape) if lead else padded[0]
+        arrays["out_gather"] = gather.reshape(lead + gather.shape[-3:])
         arrays["g_spare"] = spare_out
     arrays = {f: jnp.asarray(v) for f, v in arrays.items()}
     return with_arrays(art, arrays)
@@ -1111,6 +1175,7 @@ def program_model(
     tie_lm_head: bool = False,
     leaf_filter: Optional[Callable[[Tuple[Any, ...], Any], bool]] = None,
     expert_chips: Optional[Tuple[int, ...]] = None,
+    plan: Optional[Any] = None,
 ) -> ProgrammedModel:
     """Walk a param pytree and compile every matmul-shaped leaf.
 
@@ -1134,6 +1199,11 @@ def program_model(
     per-call transpose has no stable object identity, but it does have a
     name).  The (D, V) artifact shares the key with the (V, D) embedding
     leaf; shape-checked lookup keeps the two uses apart.
+
+    ``plan`` (a ``core.planner.ChipPlan``, e.g. from ``planner.plan_model``
+    on the same params) compiles each leaf under its per-layer
+    ``LayerPlan``, matched by canonical artifact name; leaves the plan does
+    not cover compile homogeneous, exactly as with ``plan=None``.
     """
     pred = leaf_filter if leaf_filter is not None else _matmul_leaf
 
@@ -1150,11 +1220,16 @@ def program_model(
             )
             else None
         )
+        layer_plan = (
+            plan.layer_for(join_path(path))
+            if plan is not None and action is not None
+            else None
+        )
         arts.append(
             program_layer(
                 leaf.T if action == "transpose" else leaf,
                 spec, device, adc_cfg, fast=fast, with_report=with_report,
-                chips=chips,
+                chips=chips, plan=layer_plan,
             )
             if action is not None
             else None

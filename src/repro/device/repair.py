@@ -16,12 +16,22 @@ The pipeline here:
   |installed - target| cell-code error a column's stuck cells would cause,
   weighted by bit-slice significance ``2**(s * cell_bits)`` (a stuck MSB
   slice cell is 16384x a stuck LSB one for the default 16b/2b layout).
-* ``plan_repair`` — greedy budget assignment: repeatedly move the
-  (victim column, spare) pair with the largest salience *gain*.  Spares
-  draw their own seeded stuck-at field (stage ``"spare_faults"``), so a
-  faulty spare is never blindly trusted — a victim moves only where it
-  strictly improves.  Trace-safe: the loop has a static trip count (the
-  budget) and all choices are jnp argmax/where.
+* ``plan_repair`` — greedy budget assignment at **physical-crossbar
+  granularity**: each (bit-slice, row group) of a slab is its own 128x128
+  array with its own ADC, and both the slice shift-and-add and the
+  row-group accumulation happen digitally *after* conversion — so the
+  output mux can pick primary-or-spare independently per (slice, row
+  group, column), not just per whole logical column.  That granularity is
+  load-bearing: at p = 1e-2 a 512-row x 8-slice logical column is faulty
+  with near certainty (and so is any whole-column spare), while a single
+  128-cell physical column is clean with probability ~0.28 — per-unit
+  matching is what keeps deep slabs repairable.  Within each unit the
+  greedy repeatedly moves the (victim, spare) pair with the largest
+  salience *gain*.  Spares draw their own seeded stuck-at field (stage
+  ``"spare_faults"``), so a faulty spare is never blindly trusted — a
+  victim moves only where it strictly improves.  Trace-safe: the loop has
+  a static trip count (the budget) and all choices are jnp argmax/where,
+  vmapped over the slice x row-group units.
 * spare programming — the chosen victims' target codes are written into the
   spare block through the same write-verify pulse pipeline as primary cells
   (stage ``"spare_program"`` keys), then read back through drift/IR-drop.
@@ -54,10 +64,12 @@ def spare_budget(n_cols: int, spec: CrossbarSpec, cfg: dm.DeviceConfig) -> int:
 
     ``cfg.spare_cols`` is provisioned per physical crossbar column group; a
     slab spanning ``ceil(N / spec.cols)`` column groups owns that many
-    budgets, and each budget is group-local — a spare's output mux can only
-    stand in for columns of its own group (``plan_repair``).  (Each row
-    group reuses the same spare columns — a spare is a full-height column of
-    every bit-slice crossbar in the group.)
+    budgets, and each budget is group-local — a spare's output muxes can
+    only stand in for columns of their own group (``plan_repair``).  (A
+    spare is one redundant column position in every bit-slice x row-group
+    crossbar of the group; each of those S x R physical spare columns is
+    assigned its own victim independently, since the cross-array merge is
+    digital.)
     """
     return int(cfg.spare_cols) * max(1, -(-n_cols // spec.cols))
 
@@ -87,36 +99,52 @@ def column_salience(
     return jnp.sum(err, axis=(0, 1)).astype(jnp.float32)
 
 
-def _salience_in_spares(
-    target: jnp.ndarray,
-    spare_masks: Tuple[jnp.ndarray, jnp.ndarray],
+def _unit_view(a: jnp.ndarray, rows: int) -> jnp.ndarray:
+    """(S, K, X) -> (S, R, rows, X) physical-crossbar units, zero-padding a
+    partial last row group (padded cells carry target 0 and no faults, so
+    they never contribute salience or spare error)."""
+    S, K, X = a.shape
+    R = -(-K // rows)
+    pad = R * rows - K
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+    return a.reshape(S, R, rows, X)
+
+
+def _unit_fault_error(
+    target_u: jnp.ndarray,
+    masks_u: Tuple[jnp.ndarray, jnp.ndarray],
     spec: CrossbarSpec,
 ) -> jnp.ndarray:
-    """(B, N) salience of placing column n's targets into spare b."""
-    stuck_on, stuck_off = spare_masks
+    """(S, R, N) unweighted per-unit fault error of a unit view: the total
+    |stuck - target| cell error each physical column's hard faults inflict
+    (slice significance is a *cross*-unit weight and does not reorder
+    choices within one slice's crossbar)."""
     cell_max = float((1 << spec.cell_bits) - 1)
-    w = _slice_weights(spec)[:, None, None]
-    on = stuck_on.astype(jnp.float32)  # (S, K, B)
-    off = stuck_off.astype(jnp.float32)
-    t = target.astype(jnp.float32)  # (S, K, N)
-    return jnp.einsum("skb,skn->bn", on, (cell_max - t) * w) + jnp.einsum(
-        "skb,skn->bn", off, t * w
-    )
+    err = jnp.where(masks_u[0], cell_max - target_u, 0.0)
+    err = err + jnp.where(masks_u[1], target_u, 0.0)
+    return jnp.sum(err, axis=2).astype(jnp.float32)
 
 
 @dataclasses.dataclass
 class RepairPlan:
     """Trace-safe record of one slab's spare-column repair.
 
-    ``victim``: (B,) int32 — logical column programmed into each spare, -1
-    for unused spares.  ``out_gather``: (N,) int32 — physical column serving
-    each logical output (j itself, or N + b for repaired columns); the
-    hardware routing table a real chip would burn into its column mux.
+    Repair is resolved per physical crossbar: with ``R = ceil(K / rows)``
+    row groups and ``S`` bit slices, every (s, r) pair is its own array and
+    gets its own victim/gather tables.  ``victim``: (S, R, B) int32 — the
+    logical column whose (s, r) unit is programmed into each spare column's
+    (s, r) unit, -1 for unused slots.  ``out_gather``: (S, R, N) int32 —
+    physical column serving each logical output within that crossbar
+    (j itself, or N + b for repaired units); the routing tables a real chip
+    would burn into its per-array column muxes (the merge across slices and
+    row groups is digital, so per-array muxing costs nothing extra).
     ``g_spare``: (S, K, B) float32 effective cell codes of the programmed
-    spare block; unused spares are programmed toward target 0 but still
-    read back their own faults/variation, so detect them via
-    ``victim == -1``, not zero cells.  Saliences are pre/post-repair (N,)
-    vectors of ``column_salience`` units.
+    spare block; slots not serving a victim are programmed toward target 0
+    but still read back their own faults/variation, so detect them via
+    ``victim == -1``, not zero cells.  ``rows`` is the unit height (the
+    physical crossbar row count the plan was built for).  Saliences are
+    pre/post-repair (N,) vectors of ``column_salience`` units.
     """
 
     victim: jnp.ndarray
@@ -124,15 +152,21 @@ class RepairPlan:
     g_spare: jnp.ndarray
     salience_before: jnp.ndarray
     salience_after: jnp.ndarray
+    rows: int = 128
 
 
 @dataclasses.dataclass(frozen=True)
 class RepairReport:
-    """Host-side summary of a ``RepairPlan`` (hashable: rides pytree aux)."""
+    """Host-side summary of a ``RepairPlan`` (hashable: rides pytree aux).
+
+    ``budget`` and ``n_repaired`` count (slice, row group, spare) *unit
+    slots* — the per-physical-crossbar repair resolution; ``repaired_cols``
+    is the sorted set of logical columns with at least one repaired unit.
+    """
 
     budget: int
     n_repaired: int
-    repaired_cols: Tuple[int, ...]  # logical columns, in spare order
+    repaired_cols: Tuple[int, ...]  # logical columns with >= 1 repaired unit
     salience_before: float
     salience_after: float
 
@@ -196,14 +230,17 @@ def plan_repair(
 ) -> Optional[RepairPlan]:
     """Plan and program one slab's spare-column repair (trace-safe).
 
-    Planning is *per column group*: a spare column physically lives in one
-    128-column crossbar group and its output mux can only stand in for
-    columns of that group, so each group's ``cfg.spare_cols`` spares are
-    assigned greedily among its own <= ``spec.cols`` columns.  (This also
-    bounds the planner: every gain matrix is at most ``spare_cols x cols``,
-    so wide slabs — e.g. a vocab-sized LM head — cost one small greedy pass
-    per group instead of one quadratic pass over all columns.)  Spares carry
-    their own seeded stuck-at faults, write-verify pulse noise, drift and IR
+    Planning is *per column group and per physical crossbar*: a spare
+    column lives in one 128-column crossbar group and its per-array output
+    muxes can only stand in for columns of that group, so each group's
+    ``cfg.spare_cols`` spares are assigned greedily among its own
+    <= ``spec.cols`` columns — independently for every (bit-slice, row
+    group) unit, since each is its own array and the cross-array merge is
+    digital.  (This also bounds the planner: every gain matrix is at most
+    ``spare_cols x cols``, vmapped over the S x R units, so wide slabs —
+    e.g. a vocab-sized LM head — cost one small greedy pass per group
+    instead of one quadratic pass over all columns.)  Spares carry their
+    own seeded stuck-at faults, write-verify pulse noise, drift and IR
     drop, so the plan never pretends a spare is perfect.  Returns None when
     the config provisions no repair.
 
@@ -219,6 +256,7 @@ def plan_repair(
         target = dm.target_cell_codes(w_codes_biased, spec)
     target = target.astype(jnp.float32)
     S, K, N = target.shape
+    R = -(-K // spec.rows)
     B_per = int(cfg.spare_cols)
     B = spare_budget(N, spec, cfg)
     n_groups = B // B_per
@@ -228,41 +266,57 @@ def plan_repair(
         primary_masks = dm.fault_masks(cfg, (S, K, N), tag)
     spare_masks = dm.fault_masks(cfg, (S, K, B), tag, stage="spare_faults")
 
+    cell_max = float((1 << spec.cell_bits) - 1)
+    t_u = _unit_view(target, spec.rows)  # (S, R, rows, N)
+    units0 = _unit_fault_error(
+        t_u,
+        (_unit_view(primary_masks[0], spec.rows), _unit_view(primary_masks[1], spec.rows)),
+        spec,
+    )  # (S, R, N)
+    on_sp = _unit_view(spare_masks[0].astype(jnp.float32), spec.rows)  # (S,R,rows,B)
+    off_sp = _unit_view(spare_masks[1].astype(jnp.float32), spec.rows)
+
     sal0 = column_salience(target, primary_masks, spec)  # (N,)
-    sal = sal0
-    victim = jnp.full((B,), -1, jnp.int32)
-    gather = jnp.arange(N, dtype=jnp.int32)
+    units = units0
+    victim = jnp.full((S, R, B), -1, jnp.int32)
+    gather = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32), (S, R, N))
     for g in range(n_groups):
         n0, n1 = g * spec.cols, min((g + 1) * spec.cols, N)
-        b0 = g * B_per
-        err_sp = _salience_in_spares(
-            target[:, :, n0:n1],
-            (
-                spare_masks[0][:, :, b0 : b0 + B_per],
-                spare_masks[1][:, :, b0 : b0 + B_per],
-            ),
-            spec,
-        )  # (B_per, n1 - n0)
-        sal_g, victim_g, gather_g = _greedy_assign(sal0[n0:n1], err_sp)
         n_g = n1 - n0
-        victim = victim.at[b0 : b0 + B_per].set(
-            jnp.where(victim_g >= 0, victim_g + n0, -1)
+        b0 = g * B_per
+        t_g = t_u[:, :, :, n0:n1]
+        # err_sp[s, r, b, v]: fault error of spare b's (s, r) unit holding
+        # logical column v's targets for that unit
+        err_sp = jnp.einsum(
+            "srkb,srkv->srbv", on_sp[:, :, :, b0 : b0 + B_per], cell_max - t_g
+        ) + jnp.einsum("srkb,srkv->srbv", off_sp[:, :, :, b0 : b0 + B_per], t_g)
+        sal_u, victim_u, gather_u = jax.vmap(_greedy_assign)(
+            units0[:, :, n0:n1].reshape(S * R, n_g),
+            err_sp.reshape(S * R, B_per, n_g),
         )
-        gather = gather.at[n0:n1].set(
-            jnp.where(gather_g >= n_g, gather_g - n_g + N + b0, gather_g + n0)
+        victim_u = victim_u.reshape(S, R, B_per)
+        gather_u = gather_u.reshape(S, R, n_g)
+        victim = victim.at[:, :, b0 : b0 + B_per].set(
+            jnp.where(victim_u >= 0, victim_u + n0, -1)
         )
-        sal = sal.at[n0:n1].set(sal_g)
+        gather = gather.at[:, :, n0:n1].set(
+            jnp.where(gather_u >= n_g, gather_u - n_g + N + b0, gather_u + n0)
+        )
+        units = units.at[:, :, n0:n1].set(sal_u.reshape(S, R, n_g))
 
     # Program the chosen targets into the spare block through the standard
     # write-verify pipeline (independent "spare_program" pulse keys), then
     # read back through drift/IR drop at each group's true wordline
     # position: a spare physically sits right past its own group's data
     # columns (group-local mux), never at the near-driver corner — so
-    # repair is not optimistically biased under r_line_ohm.
-    used = victim >= 0
-    spare_target = jnp.where(
-        used[None, None, :], target[:, :, jnp.clip(victim, 0, N - 1)], 0.0
-    )
+    # repair is not optimistically biased under r_line_ohm.  Each spare
+    # column's (s, r) unit holds its own victim's targets — per-array
+    # muxing means one physical spare column serves up to S x R victims.
+    vt = jnp.take_along_axis(
+        t_u, jnp.clip(victim, 0, N - 1)[:, :, None, :], axis=3
+    )  # (S, R, rows, B)
+    vt = jnp.where((victim >= 0)[:, :, None, :], vt, 0.0)
+    spare_target = vt.reshape(S, R * spec.rows, B)[:, :K, :]
     key = dm._stage_key(cfg, "spare_program", tag)
     g = dm.write_verify_fixed(spare_target, spare_masks, key, spec, cfg)
     parts = []
@@ -276,12 +330,14 @@ def plan_repair(
         )
     g_spare = jnp.concatenate(parts, axis=2) if n_groups > 1 else parts[0]
 
+    w = _slice_weights(spec)
     return RepairPlan(
         victim=victim,
         out_gather=gather,
         g_spare=g_spare,
         salience_before=sal0,
-        salience_after=sal,
+        salience_after=jnp.sum(units * w[:, None, None], axis=(0, 1)),
+        rows=int(spec.rows),
     )
 
 
@@ -289,15 +345,21 @@ def apply_repair(g_eff_primary: jnp.ndarray, plan: Optional[RepairPlan]) -> jnp.
     """Scatter programmed spare cells into victim positions: the repaired
     (S, K, N) layout every kernel consumes with zero steady-state overhead.
 
-    Column-separability makes this exactly equivalent to running the
-    physical (S, K, N + B) layout and gathering kernel outputs through
-    ``plan.out_gather`` — see tests/test_repair.py, which pins the
-    equivalence down bit-for-bit.
+    Column-separability *per physical crossbar* makes this exactly
+    equivalent to running the physical (S, K, N + B) layout and gathering
+    each (slice, row group) unit's partial outputs through its
+    ``plan.out_gather`` table before the digital shift-and-add / row-group
+    merge — see tests/test_repair.py, which pins the equivalence down
+    bit-for-bit.
     """
     if plan is None:
         return g_eff_primary
+    S, K, N = g_eff_primary.shape
+    R = plan.out_gather.shape[1]
     g_full = jnp.concatenate([g_eff_primary, plan.g_spare], axis=2)
-    return jnp.take(g_full, plan.out_gather, axis=2)
+    rg = jnp.minimum(jnp.arange(K) // plan.rows, R - 1)
+    idx = plan.out_gather[:, rg, :]  # (S, K, N): per-row-of-cells gather
+    return jnp.take_along_axis(g_full, idx, axis=2)
 
 
 def repaired_effective_cells(
@@ -349,9 +411,9 @@ def repair_report(plan: Optional[RepairPlan]) -> Optional[RepairReport]:
         return None
     victim = np.asarray(plan.victim)
     return RepairReport(
-        budget=int(victim.shape[0]),
+        budget=int(victim.size),
         n_repaired=int((victim >= 0).sum()),
-        repaired_cols=tuple(int(v) for v in victim if v >= 0),
+        repaired_cols=tuple(sorted({int(v) for v in victim.ravel() if v >= 0})),
         salience_before=float(np.asarray(plan.salience_before).sum()),
         salience_after=float(np.asarray(plan.salience_after).sum()),
     )

@@ -94,6 +94,7 @@ class ServingEngine:
         param_axes=None,
         verify_coverage: bool = True,
         expert_chips=None,
+        plan=None,
     ):
         self.cfg = cfg
         self.params = params
@@ -113,6 +114,11 @@ class ServingEngine:
         # device perturbations (device.programmed.program_layer(chips=));
         # remembered so refresh() reprograms the same fleet
         self.expert_chips = tuple(expert_chips) if expert_chips is not None else None
+        # chip-plan compiler (core.planner.ChipPlan): per-layer heterogeneous
+        # datapath / ADC schedule / spare budget, threaded into program_model
+        # at deploy time and again on refresh() — the reprogrammed fleet must
+        # be the chip the plan admitted
+        self.plan = plan
         self.crossbar = self._program_crossbars(crossbar, spare_cols, restore_artifacts)
         if verify_coverage:
             self.verify_crossbar_coverage()
@@ -173,6 +179,15 @@ class ServingEngine:
                     "spare_cols= cannot rebudget a restored chip (not even "
                     "to 0): the repair plan was baked in when the artifacts "
                     "were programmed — reprogram with the desired budget"
+                )
+            if self.plan is not None:
+                # same bakery rule: a restored chip was compiled under the
+                # plan recorded in its artifacts (each carries its
+                # LayerPlan); a different plan needs a reprogram
+                raise ValueError(
+                    "plan= cannot replan a restored chip: the datapath / ADC "
+                    "/ spare choices were baked in when the artifacts were "
+                    "programmed — reprogram with the desired plan"
                 )
             from repro.checkpoint import restore_programmed
             from repro.device.programmed import expected_artifact_names
@@ -243,6 +258,7 @@ class ServingEngine:
             # the embedding's name (name-keyed binding makes this possible)
             tie_lm_head=(self.cfg.tie_embeddings and self.cfg.frontend == "token"),
             expert_chips=self.expert_chips,
+            plan=self.plan,
         )
         return dataclasses.replace(crossbar, programmed=self._shard_artifacts(prog))
 
@@ -492,6 +508,7 @@ class ServingEngine:
             fast=self.crossbar.fast,
             tie_lm_head=(self.cfg.tie_embeddings and self.cfg.frontend == "token"),
             expert_chips=self.expert_chips,
+            plan=self.plan,
         )
         if directory is None:
             self._rebind(self._shard_artifacts(prog))

@@ -127,6 +127,17 @@ def test_karatsuba_cost_matches_paper():
     assert abs(c2.adc_reduction_vs_baseline - 0.281) < 0.01
 
 
+def test_karatsuba_cost_asymmetric_spec():
+    """A (hi x hi) and B (lo x lo) are distinct products and must be costed
+    separately: for a 16b x 8b spec the split is h = 4, so A is 12b x 4b
+    (2 slices x 12 iters), B is 4b x 4b (2 x 4) and C is 13b x 5b (3 x 13)
+    => 24 + 8 + 39 = 71 slots, max(12, 4) + 13 = 25 iterations."""
+    spec = cb.DEFAULT_SPEC.replace(input_bits=16, weight_bits=8)
+    c1 = ka.karatsuba_cost(1, spec)
+    assert c1.adc_slots == 71
+    assert c1.iterations == 25
+
+
 # --- Strassen (T4) ---------------------------------------------------------
 
 @pytest.mark.parametrize("levels", [1, 2])
@@ -148,6 +159,20 @@ def test_strassen_cost_both_accountings():
     # honest accounting: operand widening makes Strassen a net conversion loss
     assert exact.adc_conversions > base.adc_conversions
     assert paper.imas_used == 7  # frees 1 IMA in 8 (Fig 8)
+
+
+def test_strassen_stats_iterations_follow_widening():
+    """The iteration charge must match the conversion accounting: "paper"
+    mode reuses the 16-bit datapath (no extra iteration), only "exact"
+    widening pays +1 iteration per level for its extra slice."""
+    base_iters = cb.DEFAULT_SPEC.n_iters
+    for levels in (1, 2):
+        paper = stn.strassen_stats(64, 256, 64, levels=levels)
+        exact = stn.strassen_stats(64, 256, 64, levels=levels, widening="exact")
+        assert paper.iterations == base_iters
+        assert exact.iterations == base_iters + levels
+        cost = stn.strassen_cost(64, 256, 64, levels=levels, widening="exact")
+        assert exact.conversions == cost.adc_conversions
 
 
 # --- fixed point helpers ----------------------------------------------------

@@ -33,6 +33,7 @@ def _run(code: str) -> dict:
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
+@pytest.mark.slow
 def test_dp_tp_loss_matches_single_device():
     res = _run("""
         import json, numpy as np, jax, jax.numpy as jnp
@@ -99,6 +100,7 @@ def test_moe_ep_matches_single_device():
     assert res["rel"] < 1e-3
 
 
+@pytest.mark.slow
 def test_compressed_allreduce_error_feedback():
     res = _run("""
         import json, numpy as np, jax, jax.numpy as jnp

@@ -94,6 +94,58 @@ def test_technique_stack_directions(suite_results):
     assert 0.75 < r < 0.99
 
 
+def test_htree_credit_requires_compact_links():
+    """Adaptive ADC narrows the *shared compact* HTree links to 16 bits; a
+    non-compact chip has no shared links, so flipping its ADC adaptive must
+    not change HTree energy (the override is gated on ``compact_htree``)."""
+    net = wl.alexnet()
+    e_plain = en.evaluate(
+        net,
+        arch.newton_chip(compact=False, adaptive=False, karatsuba=0,
+                         small_buffers=False, fc_tiles=False),
+        policy="newton",
+    ).breakdown["htree"]
+    e_adaptive = en.evaluate(
+        net,
+        arch.newton_chip(compact=False, adaptive=True, karatsuba=0,
+                         small_buffers=False, fc_tiles=False),
+        policy="newton",
+    ).breakdown["htree"]
+    assert e_adaptive == pytest.approx(e_plain)
+    # with compact links the adaptive trim does apply (23+16 -> 16+16 bits)
+    e_c = en.evaluate(
+        net,
+        arch.newton_chip(compact=True, adaptive=False, karatsuba=0,
+                         small_buffers=False, fc_tiles=False),
+        policy="newton",
+    ).breakdown["htree"]
+    e_ca = en.evaluate(
+        net,
+        arch.newton_chip(compact=True, adaptive=True, karatsuba=0,
+                         small_buffers=False, fc_tiles=False),
+        policy="newton",
+    ).breakdown["htree"]
+    assert e_ca == pytest.approx(e_c * 32 / 39)
+
+
+def test_technique_stack_orderings_pinned():
+    """The shipped cumulative stack always pairs adaptive ADC with the
+    compact HTree (so the gated 16-bit link credit still applies to every
+    shipped entry), and each technique is introduced exactly once, in the
+    paper's order."""
+    stack = en.technique_stack()
+    labels = [lab for lab, _, _, _ in stack]
+    assert labels == [
+        "isaac", "+compact-htree", "+adaptive-adc", "+karatsuba",
+        "+small-buffers", "+fc-tiles", "newton (+strassen)",
+    ]
+    for lab, chip, policy, strassen in stack[1:]:
+        ima = chip.conv_tile.ima
+        if ima.adc_cfg.mode == "adaptive":
+            assert ima.compact_htree, lab
+    assert [s for _, _, _, s in stack] == [False] * 6 + [True]
+
+
 def test_resnet_gains_least(suite_results):
     """Paper §V: Resnet does not gain much from heterogeneous FC tiles."""
     last, base = "newton (+strassen)", "isaac"

@@ -55,6 +55,7 @@ def _data(rng, B, K, N):
 # aging semantics
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_zero_drift_aging_is_bit_identical_noop():
     """A drift-free chip ages to the same arrays — only the clock moves."""
     rng = np.random.default_rng(0)
@@ -164,6 +165,7 @@ def test_ideal_chip_probes_error_free():
 # free digital compensation
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_compensation_recovers_at_least_half_the_aged_mse():
     """Acceptance: digital scale compensation recovers >= 50% of the aged
     MSE with zero reprogramming (the cells are untouched)."""
@@ -387,6 +389,7 @@ def tiny_lm():
     return cfg, params
 
 
+@pytest.mark.slow
 def test_engine_lifecycle_monitor_compensate_refresh(tiny_lm, tmp_path):
     """The full state machine on a serving engine: age degrades health,
     compensate recovers it (no reprogramming), refresh through the
@@ -418,6 +421,7 @@ def test_engine_lifecycle_monitor_compensate_refresh(tiny_lm, tmp_path):
     assert eng.refresh(str(tmp_path)) == "B"
 
 
+@pytest.mark.slow
 def test_engine_hot_swap_mid_run_yields_uninterrupted_tokens(tiny_lm, tmp_path):
     """Acceptance: hot_swap mid-run_until_done yields the same tokens as an
     uninterrupted fresh-chip run — the swap rebinds between decode steps

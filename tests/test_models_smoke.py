@@ -26,7 +26,8 @@ def _marked(archs, slow_set):
 
 
 _SLOW_FORWARD = {"jamba-v0.1-52b"}
-_SLOW_TRAIN = {"xlstm-350m", "deepseek-v2-236b", "musicgen-large"}
+_SLOW_TRAIN = {"xlstm-350m", "deepseek-v2-236b", "musicgen-large",
+               "jamba-v0.1-52b", "gemma2-9b"}
 
 
 def _inputs(cfg, key, B, S):
@@ -72,7 +73,7 @@ def test_one_train_step(arch):
     assert max(delta) > 0
 
 
-_SLOW_DECODE = {"kimi-k2-1t-a32b", "deepseek-v2-236b"}
+_SLOW_DECODE = {"kimi-k2-1t-a32b", "deepseek-v2-236b", "jamba-v0.1-52b"}
 
 
 @pytest.mark.parametrize("arch", _marked(ARCHS, _SLOW_DECODE))
@@ -324,6 +325,7 @@ def test_programmed_coverage_sweep_zero_misses(arch):
     prog.reset_consumed_artifact_names()
 
 
+@pytest.mark.slow
 def test_programmed_moe_forward_zero_misses_and_strict():
     """A fully programmed MoE model (tie_lm_head=True) serves every
     projection from an artifact: zero crossbar misses over a traced forward
@@ -371,6 +373,7 @@ def test_programmed_moe_forward_zero_misses_and_strict():
     L.reset_crossbar_misses()
 
 
+@pytest.mark.slow
 def test_moe_engine_save_restore_serve_round_trip(tmp_path):
     """ISSUE 4 acceptance: save -> restore -> serve is bit-identical to the
     original programmed MoE engine with zero reprogramming calls — the

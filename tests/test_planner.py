@@ -1,0 +1,252 @@
+"""Chip-plan compiler: selection behavior, serialization, and executed
+bit-exactness.
+
+The planner's contract (ISSUE 8): per layer it picks the datapath / ADC
+schedule / spare budget / replication that minimizes predicted ADC energy
+under ``core.energy``'s accounting, the result is deterministic and
+serializable, and a chip programmed under the plan produces the *same bits*
+as the homogeneous direct compile (exact limb arithmetic) while strictly
+reducing predicted conversions/energy.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core.adc import FULL_ADC, SAFE_ADAPTIVE
+from repro.core.crossbar import DEFAULT_SPEC, layer_scaled_spec
+from repro.core.planner import (
+    ADC_MODES,
+    ChipPlan,
+    LayerPlan,
+    adc_config_for,
+    datapath_crossbar_factor,
+    homogeneous_network,
+    plan_layer,
+    plan_model,
+    plan_network,
+)
+from repro.core.workloads import alexnet, lm_workload
+from repro.device import DeviceConfig, program_layer, programmed_matmul
+from repro.device.programmed import ProgrammedModel, program_model
+
+
+def _lm_net():
+    return lm_workload(get_config("smollm-360m"))
+
+
+# ---------------------------------------------------------------------------
+# selection behavior
+# ---------------------------------------------------------------------------
+
+def test_lm_plan_beats_homogeneous_and_is_deterministic():
+    net = _lm_net()
+    planned = plan_network(net)
+    homo = homogeneous_network(net)
+    # strictly cheaper in both currencies — the kernel_planned gate's claim
+    assert planned.total_conversions < homo.total_conversions
+    assert planned.total_energy_pj < homo.total_energy_pj
+    # unconstrained + paper widening: Karatsuba level 2 wins every fc layer
+    # (92 of 128 conversion slots), with the empirically-exact adaptive ADC
+    hist = planned.datapath_histogram()
+    assert hist == {"karatsuba2": len(net.layers)}
+    assert all(p.adc_mode == "safe_adaptive" for p in planned.layers.values())
+    # pure function of its inputs: replanning is the identical plan
+    assert plan_network(net) == planned
+
+
+def test_area_constraint_admits_strassen_only_under_paper_widening():
+    """At ``max_crossbar_factor=1.0`` (no slack arrays) Karatsuba is
+    inadmissible (1.625x / 2.5x crossbars) and Strassen — which *frees*
+    arrays at 7/8 — is the only conversion-cutting datapath.  Under the
+    exact widening accounting Strassen costs more conversions than direct,
+    so the planner must refuse it."""
+    net = alexnet()
+    tight = plan_network(net, max_crossbar_factor=1.0)
+    hist = tight.datapath_histogram()
+    assert hist.get("strassen", 0) > 0
+    assert "karatsuba1" not in hist and "karatsuba2" not in hist
+    exact = plan_network(net, widening="exact", max_crossbar_factor=1.0)
+    assert exact.datapath_histogram() == {"direct": len(net.layers)}
+
+
+def test_provable_exactness_restricts_adc_modes():
+    """``provable`` admits only schedules whose analytic LSB error bound is
+    exactly zero — safe_adaptive's loose worst-case bound excludes it."""
+    net = _lm_net()
+    provable = plan_network(net, exactness="provable")
+    assert all(
+        p.adc_mode in ("full", "exact_adaptive") for p in provable.layers.values()
+    )
+    # it still beats the full-ADC homogeneous compile on conversions
+    homo = homogeneous_network(net)
+    assert provable.total_conversions < homo.total_conversions
+
+
+def test_exact_adaptive_is_layer_scaled():
+    """The exact_adaptive guard must track the *layer's* drop_lsb, not the
+    default spec's — the module constant would under-guard a deep layer."""
+    deep = layer_scaled_spec(DEFAULT_SPEC, 4096)
+    assert deep.drop_lsb > DEFAULT_SPEC.drop_lsb
+    assert adc_config_for("exact_adaptive", deep).guard_bits == deep.drop_lsb
+    assert adc_config_for("full", deep).mode == "full"
+    assert adc_config_for("safe_adaptive", deep) == SAFE_ADAPTIVE
+
+
+def test_spare_budget_follows_fault_rate_and_salience():
+    kw = dict(rows=512, cols=512, spec=DEFAULT_SPEC)
+    assert plan_layer("a", **kw).spare_cols == 0  # no faults, no spares
+    lo = plan_layer("a", **kw, fault_rate=1e-2, salience=0.5)
+    hi = plan_layer("a", **kw, fault_rate=1e-2, salience=2.0)
+    assert 0 < lo.spare_cols <= hi.spare_cols
+
+
+def test_conv_replication_follows_pixel_ratio():
+    p = plan_layer("c", 363, 96, pixels=3025, kind="conv", pixels_ref=169)
+    assert p.replication == -(-3025 // 169)
+    assert plan_layer("f", 4096, 1000).replication == 1
+
+
+def test_crossbar_factors():
+    s = DEFAULT_SPEC
+    assert datapath_crossbar_factor("direct", s) == 1.0
+    assert datapath_crossbar_factor("karatsuba1", s) == pytest.approx(13 / 8)
+    assert datapath_crossbar_factor("karatsuba2", s) == pytest.approx(20 / 8)
+    assert datapath_crossbar_factor("strassen", s, "paper") == pytest.approx(7 / 8)
+    assert datapath_crossbar_factor("strassen", s, "exact") > 7 / 8
+
+
+# ---------------------------------------------------------------------------
+# serialization
+# ---------------------------------------------------------------------------
+
+def test_chip_plan_json_round_trip():
+    plan = plan_network(alexnet(), fault_rate=1e-3, max_crossbar_factor=1.0)
+    back = ChipPlan.from_json(plan.to_json())
+    assert back == plan
+    assert list(back.layers) == list(plan.layers)  # order preserved
+
+
+def test_layer_plan_validates():
+    with pytest.raises(ValueError, match="datapath"):
+        LayerPlan(name="x", datapath="fft")
+    with pytest.raises(ValueError, match="ADC mode"):
+        LayerPlan(name="x", adc_mode="lazy")
+    assert LayerPlan(name="x", datapath="karatsuba2").karatsuba_levels == 2
+    assert LayerPlan(name="x", datapath="strassen").karatsuba_levels == 0
+
+
+# ---------------------------------------------------------------------------
+# executed bit-exactness: plan choices must not change the bits
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("datapath", ["karatsuba1", "karatsuba2", "strassen"])
+def test_planned_ideal_datapath_bit_identical(datapath):
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(256, 64)).astype(np.float32) * 0.1)
+    x = jnp.asarray(np.abs(rng.normal(size=(4, 256))).astype(np.float32))
+    base = program_layer(w)
+    art = program_layer(
+        w, plan=LayerPlan(name="w", datapath=datapath, adc_mode="safe_adaptive")
+    )
+    assert art.plan is not None and art.plan.datapath == datapath
+    np.testing.assert_array_equal(
+        np.asarray(programmed_matmul(x, art, interpret=True)),
+        np.asarray(programmed_matmul(x, base, interpret=True)),
+    )
+
+
+def test_planned_noisy_chip_keeps_device_kernel():
+    """Noisy chips serve the analog read path regardless of the plan's
+    datapath (D&C re-tiles arrays it cannot re-read); the plan still picks
+    the ADC schedule and the spare budget the chip is programmed with."""
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(256, 32)).astype(np.float32))
+    x = jnp.asarray(np.abs(rng.normal(size=(4, 256))).astype(np.float32))
+    dev = DeviceConfig(sigma=0.05, p_stuck_on=1e-3, p_stuck_off=1e-3,
+                       write_verify_iters=4)
+    base = program_layer(w, device=dev)  # default adc_cfg is SAFE_ADAPTIVE
+    art = program_layer(
+        w, device=dev,
+        plan=LayerPlan(name="w", datapath="karatsuba2", adc_mode="safe_adaptive"),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(programmed_matmul(x, art, interpret=True)),
+        np.asarray(programmed_matmul(x, base, interpret=True)),
+    )
+    # a planned spare budget reaches the repair planner
+    spared = program_layer(
+        w, device=dev,
+        plan=LayerPlan(name="w", adc_mode="safe_adaptive", spare_cols=8),
+    )
+    assert spared.g_spare is not None and spared.device.spare_cols == 8
+
+
+# ---------------------------------------------------------------------------
+# model-level threading + persistence
+# ---------------------------------------------------------------------------
+
+def _tiny_params(rng):
+    return {
+        "wq": jnp.asarray(rng.normal(size=(128, 32)).astype(np.float32)),
+        "wk": jnp.asarray(rng.normal(size=(128, 32)).astype(np.float32) * 4.0),
+    }
+
+
+def test_plan_model_names_and_salience():
+    rng = np.random.default_rng(2)
+    params = _tiny_params(rng)
+    dev = DeviceConfig(p_stuck_on=5e-3, p_stuck_off=5e-3)
+    plan = plan_model(params, device=dev)
+    assert set(plan.layers) == {"wq", "wk"}
+    assert plan.fault_rate == pytest.approx(1e-2)
+    # wk's 4x magnitude means higher fault salience -> >= spare budget
+    assert plan.layers["wk"].spare_cols >= plan.layers["wq"].spare_cols > 0
+
+
+def test_program_model_attaches_plans_by_name():
+    rng = np.random.default_rng(3)
+    params = _tiny_params(rng)
+    plan = plan_model(params)
+    prog = program_model(params, plan=plan)
+    for name in ("wq", "wk"):
+        assert prog.by_name[name].plan == plan.layer_for(name)
+
+
+def test_plan_round_trips_through_artifact_store(tmp_path):
+    from repro.checkpoint import restore_programmed, save_programmed
+    from repro.device.programmed import artifacts_equal
+
+    rng = np.random.default_rng(4)
+    params = _tiny_params(rng)
+    prog = program_model(params, plan=plan_model(params))
+    save_programmed(str(tmp_path), prog)
+    back = restore_programmed(str(tmp_path))
+    for name, art in prog.by_name.items():
+        assert back.by_name[name].plan == art.plan
+        assert artifacts_equal(back.by_name[name], art)
+    # pre-planner stores (no plan) still restore
+    plain = program_model(params)
+    save_programmed(str(tmp_path / "plain"), plain)
+    assert restore_programmed(str(tmp_path / "plain")).by_name["wq"].plan is None
+
+
+def test_engine_rejects_plan_with_restored_chip(tmp_path):
+    import jax
+
+    from benchmarks.noise_sweep import tiny_lm_config
+    from repro.checkpoint import save_programmed
+    from repro.models import model as M
+    from repro.models.layers import CrossbarMode
+    from repro.serving.engine import ServingEngine
+
+    cfg = tiny_lm_config()
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    save_programmed(str(tmp_path), ProgrammedModel({}))
+    with pytest.raises(ValueError, match="replan a restored chip"):
+        ServingEngine(
+            cfg, params, max_batch=1, max_seq=16,
+            crossbar=CrossbarMode(enabled=True),
+            restore_artifacts=str(tmp_path),
+            plan=plan_model(params),
+        )

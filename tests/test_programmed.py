@@ -135,6 +135,7 @@ def test_crossbar_linear_programmed_bit_identical_bf16():
     )
 
 
+@pytest.mark.slow
 def test_programmed_bind_under_jit():
     """Artifact lookup resolves through tracers inside jit; the result
     matches the jitted per-call path to float fusion tolerance (XLA fuses

@@ -86,6 +86,7 @@ _SETUP = """
 """
 
 
+@pytest.mark.slow
 def test_ep_moe_programmed_bit_identical_and_zero_gaps():
     """Acceptance: a shard_map EP MoE forward on an 8-device host mesh
     serves programmed — zero crossbar misses/gaps under strict, the full
@@ -128,6 +129,7 @@ def test_ep_moe_programmed_bit_identical_and_zero_gaps():
     assert res["bit_identical"], res["max_abs_diff"]
 
 
+@pytest.mark.slow
 def test_ep_sharded_store_round_trip_serves_bit_identical(tmp_path):
     """save -> restore(mesh) -> serve: the sharded chip round-trips through
     the artifact store — recorded PartitionSpecs re-place every shard, the
@@ -293,6 +295,7 @@ def test_engine_mesh_serving_matches_single_device(tmp_path):
 # ---------------------------------------------------------------------------
 
 @pytest.mark.lifecycle
+@pytest.mark.slow
 def test_ep_chip_spread_serves_bit_identical_sharded():
     """Per-rank chip variation: expert_chips= programs each expert bank
     slice on its own chip identity (distinct device perturbation draws),
@@ -429,7 +432,8 @@ def test_artifact_shard_specs_follow_weight_axes():
     assert specs["w_colsum"] == P("model", None)
     assert specs["w_scale"] == P("model")
     assert specs["g_spare"] == P("model", None, None, None)
-    assert specs["out_gather"] == P("model", None)
+    # (E, S, R, N): slice / row-group axes are physical-array coordinates
+    assert specs["out_gather"] == P("model", None, None, None)
     # K-sharded: cells slice along rows; the full-K colsum cannot shard
     specs_k = artifact_shard_specs(art, P(None, "model", None))
     assert specs_k["w_codes"] == P(None, "model", None)
@@ -496,23 +500,29 @@ def test_local_artifact_reindexes_repair_tables_to_local_columns():
     art = _art(K=64, N=32, device=dev)
     assert art.repair is not None and art.repair.n_repaired > 0
     n_loc = 16
+    rows = int(art.spec.rows)
     seen_spare = 0
     for rank in (0, 1):
         loc = local_artifact(art, P(None, "model"), {"model": 2}, {"model": rank})
-        g = np.asarray(loc.out_gather)
-        assert g.shape == (n_loc,)
-        glob = np.asarray(art.out_gather)[rank * n_loc:(rank + 1) * n_loc]
-        for j in range(n_loc):
-            if glob[j] < 32:  # unrepaired: local identity
-                assert g[j] == j
-            else:  # repaired: points into the compacted local spare block
-                b = g[j] - n_loc
-                assert 0 <= b < loc.g_spare.shape[-1]
-                np.testing.assert_array_equal(
-                    np.asarray(loc.g_eff)[:, :, j],
-                    np.asarray(loc.g_spare)[:, :, b],
-                )
-                seen_spare += 1
+        g = np.asarray(loc.out_gather)  # (S, R, n_loc)
+        S, R = g.shape[:2]
+        assert g.shape == (S, R, n_loc)
+        glob = np.asarray(art.out_gather)[:, :, rank * n_loc:(rank + 1) * n_loc]
+        for s in range(S):
+            for r in range(R):
+                r0 = r * rows
+                r1 = min(r0 + rows, np.asarray(art.g_eff).shape[1])
+                for j in range(n_loc):
+                    if glob[s, r, j] < 32:  # unrepaired: local identity
+                        assert g[s, r, j] == j
+                    else:  # repaired: points into the compacted local spares
+                        b = g[s, r, j] - n_loc
+                        assert 0 <= b < loc.g_spare.shape[-1]
+                        np.testing.assert_array_equal(
+                            np.asarray(loc.g_eff)[s, r0:r1, j],
+                            np.asarray(loc.g_spare)[s, r0:r1, b],
+                        )
+                        seen_spare += 1
         np.testing.assert_array_equal(
             np.asarray(loc.g_eff), np.asarray(art.g_eff)[:, :, rank * n_loc:(rank + 1) * n_loc]
         )

@@ -225,6 +225,7 @@ def test_straggler_monitor_flags_outliers():
 
 # --- serving ------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_serving_engine_matches_teacher_forcing():
     cfg = reduced(configs.get_config("smollm-360m"))
     params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
@@ -246,6 +247,7 @@ def test_serving_engine_matches_teacher_forcing():
         assert req.generated[:5] == ref
 
 
+@pytest.mark.slow
 def test_serving_engine_recurrent_prefix():
     """Recurrent archs: small float reorders may flip late near-tie argmaxes
     on random weights; assert the prefix matches."""
