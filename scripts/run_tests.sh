@@ -13,6 +13,10 @@
 #                                   health-monitor / compensation / hot-swap
 #                                   tests (@pytest.mark.lifecycle), slow
 #                                   members included
+#   scripts/run_tests.sh --lint     static-analysis tier only: the
+#                                   repro.analysis test suite plus the
+#                                   python -m repro.analysis --check CI gate
+#                                   (nonzero exit on any error-level finding)
 #   scripts/run_tests.sh --bench    fast kernel-benchmark tier; runs the
 #                                   BENCH_kernels.json --check regression gate
 #                                   by default: fails on a >20% regression of
@@ -58,8 +62,16 @@ if [[ "${1:-}" == "--lifecycle" ]]; then
   # tier runs, slow members included
   exec python -m pytest -q -m lifecycle "$@"
 fi
+if [[ "${1:-}" == "--lint" ]]; then
+  shift
+  python -m pytest -q tests/test_analysis.py "$@"
+  exec python -m repro.analysis --check
+fi
 if [[ "${1:-}" == "--bench" ]]; then
   shift
   exec python -m benchmarks.run --only kernel --check "$@"
 fi
+# default fast tier: the static-analysis CI gate rides along — a contract
+# violation fails the run before (cheaply, from source alone) the tests do
+python -m repro.analysis --check --quiet
 exec python -m pytest -q "$@"

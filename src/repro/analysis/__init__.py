@@ -1,0 +1,44 @@
+"""Static contract checker for the crossbar stack.
+
+``repro.analysis`` enforces, from source and manifests alone, the
+invariants the runtime can only observe after the fact:
+
+* ``run_lint`` — AST rules over ``src/repro`` + ``benchmarks``:
+  digital-fallback audit (every models/ matmul classified), determinism
+  (seeded RNG, ``optimization_barrier``-pinned scale products), stage-key
+  registry collisions, aux-slot shadowing, Pallas kernel contracts.
+* ``verify_store`` — offline validation of a ``save_programmed`` artifact
+  store (manifest schema, npz-header shapes, slot/ACTIVE consistency,
+  plan admissibility) without loading arrays or running a model;
+  ``ServingEngine(restore_artifacts=)`` runs it fail-fast before binding.
+
+CLI: ``python -m repro.analysis [--check] [--store DIR]`` — ``--check``
+exits nonzero on any error-level finding (the CI gate wired into
+``scripts/run_tests.sh``).
+"""
+from repro.analysis.engine import (  # noqa: F401
+    ALL_RULES,
+    ERROR,
+    INFO,
+    Finding,
+    lint_source,
+    repo_root,
+    run_lint,
+)
+from repro.analysis.rules_determinism import rule_barrier, rule_rng
+from repro.analysis.rules_device import rule_shadowing, rule_stage_keys
+from repro.analysis.rules_matmul import rule_digital_fallback
+from repro.analysis.rules_pallas import rule_pallas
+from repro.analysis.store import StoreFinding, StoreReport, verify_store  # noqa: F401
+
+# rule registry: order is display order for same-line findings
+for _rule in (
+    rule_digital_fallback,
+    rule_rng,
+    rule_barrier,
+    rule_stage_keys,
+    rule_shadowing,
+    rule_pallas,
+):
+    if _rule not in ALL_RULES:
+        ALL_RULES.append(_rule)

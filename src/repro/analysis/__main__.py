@@ -1,0 +1,69 @@
+"""CLI: ``python -m repro.analysis [--check] [--store DIR] ...``.
+
+Default run lints the repo and prints every finding (``info`` findings —
+the audited known-digital projections — included).  ``--check`` is the CI
+gate: exit 1 if any *error*-level finding survives.  ``--store DIR`` runs
+the offline artifact-store verifier instead of (or in addition to) the
+lint pass; a failing store always exits nonzero.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis import ERROR, repo_root, run_lint, verify_store
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static contract checker for the crossbar stack",
+    )
+    p.add_argument("--check", action="store_true",
+                   help="CI gate: exit 1 on any error-level lint finding")
+    p.add_argument("--root", default=None,
+                   help="repo root to lint (default: autodetected)")
+    p.add_argument("--store", default=None, metavar="DIR",
+                   help="verify a save_programmed artifact store offline")
+    p.add_argument("--slot", default=None, choices=("A", "B"),
+                   help="verify a specific store slot (default: follow ACTIVE)")
+    p.add_argument("--max-crossbar-factor", type=float, default=None,
+                   help="area budget for plan admissibility checks")
+    p.add_argument("--exactness", default=None,
+                   help="ADC exactness contract for plan checks (e.g. 'provable')")
+    p.add_argument("--no-lint", action="store_true",
+                   help="skip the lint pass (with --store: verify only)")
+    p.add_argument("-q", "--quiet", action="store_true",
+                   help="print only error-level findings and the summary")
+    args = p.parse_args(argv)
+
+    status = 0
+
+    if not args.no_lint:
+        findings = run_lint(root=args.root or repo_root())
+        errors = [f for f in findings if f.level == ERROR]
+        for f in (errors if args.quiet else findings):
+            print(f.format())
+        print(
+            f"lint: {len(findings)} finding(s), {len(errors)} error(s) "
+            f"across rules"
+        )
+        if args.check and errors:
+            status = 1
+
+    if args.store is not None:
+        report = verify_store(
+            args.store,
+            slot=args.slot,
+            max_crossbar_factor=args.max_crossbar_factor,
+            exactness=args.exactness,
+        )
+        print(report.summary())
+        if not report.ok:
+            status = 1
+
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,164 @@
+"""AST lint engine for the crossbar stack's static contracts.
+
+The runtime already defends the "zero-miss, bit-identical" contract with
+miss counters, ``strict=`` and the eval_shape coverage sweep — but only
+after a model runs.  This engine checks the same contracts from source
+alone: every rule in ``rules_*`` is a function ``(relpath, tree, source)
+-> findings`` over one parsed module, and ``run_lint`` maps them across
+the repo's Python files.  Findings carry a severity: ``error`` findings
+fail the ``python -m repro.analysis --check`` CI gate; ``info`` findings
+(e.g. audited known-digital projections) are printed but do not fail —
+they are the visible, auditable form of what used to be folklore.
+
+Rules are registered in ``ALL_RULES`` (populated by ``repro.analysis``
+importing the rule modules); each rule decides from ``relpath`` which
+files it applies to, so the engine itself stays policy-free.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+
+ERROR = "error"
+INFO = "info"
+
+# roots scanned by default, relative to the repo root
+DEFAULT_ROOTS = ("src/repro", "benchmarks")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint finding: a rule violation (or audited ``info`` note) at a
+    source location.  ``path`` is repo-root-relative with forward slashes,
+    so findings are stable across machines and usable as fixture keys."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+    level: str = ERROR
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.level}[{self.rule}] {self.message}"
+
+
+Rule = Callable[[str, ast.Module, str], List[Finding]]
+
+# populated by repro.analysis.__init__ importing the rule modules; kept as
+# a mutable registry so tests can run single rules against fixture snippets
+ALL_RULES: List[Rule] = []
+
+
+def repo_root() -> str:
+    """The directory containing ``src/repro`` (walk up from this file)."""
+    d = os.path.dirname(os.path.abspath(__file__))
+    while True:
+        if os.path.isdir(os.path.join(d, "src", "repro")):
+            return d
+        parent = os.path.dirname(d)
+        if parent == d:  # filesystem root: fall back to cwd
+            return os.getcwd()
+        d = parent
+
+
+def iter_python_files(
+    root: str, roots: Sequence[str] = DEFAULT_ROOTS
+) -> Iterator[str]:
+    """Repo-relative paths of every ``.py`` under the scanned roots."""
+    for sub in roots:
+        base = os.path.join(root, sub)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    full = os.path.join(dirpath, fn)
+                    yield os.path.relpath(full, root).replace(os.sep, "/")
+
+
+def lint_source(
+    relpath: str, source: str, rules: Optional[Sequence[Rule]] = None
+) -> List[Finding]:
+    """Run rules over one module's source (the fixture-test entry point)."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [
+            Finding("syntax", relpath, e.lineno or 0, f"unparseable module: {e.msg}")
+        ]
+    out: List[Finding] = []
+    for rule in rules if rules is not None else ALL_RULES:
+        out.extend(rule(relpath, tree, source))
+    return out
+
+
+def run_lint(
+    root: Optional[str] = None,
+    roots: Sequence[str] = DEFAULT_ROOTS,
+    rules: Optional[Sequence[Rule]] = None,
+) -> List[Finding]:
+    """Lint every Python file under ``roots``; findings sorted by location."""
+    root = root or repo_root()
+    findings: List[Finding] = []
+    for relpath in iter_python_files(root, roots):
+        with open(os.path.join(root, relpath), "r", encoding="utf-8") as f:
+            source = f.read()
+        findings.extend(lint_source(relpath, source, rules))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Shared AST helpers
+# ---------------------------------------------------------------------------
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def parent_map(tree: ast.AST) -> Dict[ast.AST, ast.AST]:
+    parents: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+def enclosing_functions(tree: ast.Module) -> Dict[ast.AST, str]:
+    """Map every node to the name of its nearest enclosing function
+    (module-level nodes are absent)."""
+    owner: Dict[ast.AST, str] = {}
+
+    def visit(node: ast.AST, fn: Optional[str]):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            fn = node.name
+        for child in ast.iter_child_nodes(node):
+            if fn is not None:
+                owner[child] = fn
+            visit(child, fn)
+
+    visit(tree, None)
+    return owner
+
+
+def terminal_names(node: ast.AST) -> List[str]:
+    """Terminal identifiers of an expression: Name ids plus Attribute attrs
+    (``art.w_scale`` contributes ``w_scale``)."""
+    out = []
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            out.append(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.append(n.attr)
+    return out

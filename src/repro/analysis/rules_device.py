@@ -1,0 +1,237 @@
+"""Device-family contract rules: stage-key registry and aux-slot shadowing.
+
+**Stage-key collision.**  All programming randomness flows through
+``device.models._stage_key``; independence of the fault / program /
+spare_faults / spare_program draws rests entirely on each stage folding a
+*distinct* index into the key.  The registry in ``device/models.py``
+(``STAGE_*`` constants + ``_STAGES``) is the single source of truth:
+
+* the registry itself must be collision-free (distinct stage names AND
+  distinct fold_in indices — a duplicate index correlates two supposedly
+  independent fields), and built from constants, not ad-hoc literals;
+* call sites must pass the constants — a string literal ``stage="..."``
+  (or a literal second arg to ``_stage_key``) dodges the registry and is
+  flagged wherever it appears;
+* duplicate integer-literal ``fold_in(key, <n>)`` indices within one file
+  are flagged: two different streams folding the same literal collide.
+
+**Aux-slot shadowing.**  ``ProgrammedLinear`` carries hashable aux slots
+(``spec``/``adc_cfg``/``report``/``repair``/``device``/``plan``) whose
+names are also natural local-variable names.  PR 7 shipped exactly this
+bug: ``plan = plan_repair(...)`` rebound the layer's ``LayerPlan`` local
+to a ``RepairPlan`` and the wrong object rode into the artifact.  Inside
+the device family, any local binding of an aux-slot name must be in the
+audited allowlist (file, function, name) or it is a finding.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.engine import ERROR, Finding, dotted_name
+
+RULE_STAGE = "stage-key-collision"
+RULE_SHADOW = "aux-slot-shadowing"
+
+REGISTRY_FILE = "src/repro/device/models.py"
+
+# files where aux-slot locals are load-bearing (the ProgrammedLinear family)
+SHADOW_SCOPE = (
+    "src/repro/device/models.py",
+    "src/repro/device/programmed.py",
+    "src/repro/device/repair.py",
+    "src/repro/device/health.py",
+)
+
+AUX_SLOTS = {"plan", "repair", "device", "report", "spec", "adc_cfg"}
+
+# audited legitimate rebinds: (relpath, function, name) -> reason
+SHADOW_ALLOW: Dict[Tuple[str, str, str], str] = {
+    ("src/repro/device/programmed.py", "program_layer", "spec"):
+        "layer-scaled spec replaces the base spec for the whole layer",
+    ("src/repro/device/programmed.py", "program_layer", "adc_cfg"):
+        "planned ADC config derived from the (rebound) layer spec",
+    ("src/repro/device/programmed.py", "program_layer", "device"):
+        "plan's spare budget folded into the device config",
+    ("src/repro/device/programmed.py", "program_layer", "report"):
+        "ProgramReport destined for the report aux slot (correct type)",
+    ("src/repro/device/programmed.py", "programmed_matmul", "spec"):
+        "read-alias of art.spec (same object, same type)",
+    ("src/repro/device/programmed.py", "tree_unflatten", "spec"):
+        "canonical aux-tuple unpack in slot order",
+    ("src/repro/device/programmed.py", "tree_unflatten", "adc_cfg"):
+        "canonical aux-tuple unpack in slot order",
+    ("src/repro/device/programmed.py", "tree_unflatten", "report"):
+        "canonical aux-tuple unpack in slot order",
+    ("src/repro/device/programmed.py", "tree_unflatten", "repair"):
+        "canonical aux-tuple unpack in slot order",
+    ("src/repro/device/programmed.py", "tree_unflatten", "device"):
+        "canonical aux-tuple unpack in slot order",
+    ("src/repro/device/programmed.py", "tree_unflatten", "plan"):
+        "canonical aux-tuple unpack in slot order",
+    ("src/repro/device/repair.py", "repaired_effective_cells", "report"):
+        "ProgramReport destined for the report aux slot (correct type)",
+}
+
+
+def _registry_findings(relpath: str, tree: ast.Module) -> List[Finding]:
+    """Validate the STAGE_* registry inside device/models.py."""
+    findings: List[Finding] = []
+    const_strings: Dict[str, str] = {}
+    stages_dict: Optional[ast.Dict] = None
+    stages_line = 0
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt = node.targets[0]
+            if isinstance(tgt, ast.Name):
+                if tgt.id.startswith("STAGE_") and isinstance(node.value, ast.Constant):
+                    const_strings[tgt.id] = node.value.value
+                elif tgt.id == "_STAGES" and isinstance(node.value, ast.Dict):
+                    stages_dict = node.value
+                    stages_line = node.lineno
+    if stages_dict is None:
+        return [Finding(RULE_STAGE, relpath, 0,
+                        "no _STAGES registry dict found in device/models.py")]
+    names: List[str] = []
+    indices: List[int] = []
+    for k, v in zip(stages_dict.keys, stages_dict.values):
+        if isinstance(k, ast.Constant):
+            findings.append(Finding(
+                RULE_STAGE, relpath, k.lineno,
+                f"_STAGES key {k.value!r} is an ad-hoc literal — define a "
+                "STAGE_* constant so call sites can share it",
+            ))
+            names.append(k.value)
+        elif isinstance(k, ast.Name):
+            if k.id not in const_strings:
+                findings.append(Finding(
+                    RULE_STAGE, relpath, k.lineno,
+                    f"_STAGES key {k.id} is not a module-level STAGE_* "
+                    "string constant",
+                ))
+            else:
+                names.append(const_strings[k.id])
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            indices.append(v.value)
+        else:
+            findings.append(Finding(
+                RULE_STAGE, relpath, v.lineno,
+                f"_STAGES index `{ast.unparse(v)}` is not an int literal",
+            ))
+    if len(set(names)) != len(names):
+        dup = sorted({n for n in names if names.count(n) > 1})
+        findings.append(Finding(
+            RULE_STAGE, relpath, stages_line,
+            f"duplicate stage name(s) in registry: {dup} — two stages with "
+            "one name silently share draws",
+        ))
+    if len(set(indices)) != len(indices):
+        dup = sorted({i for i in indices if indices.count(i) > 1})
+        findings.append(Finding(
+            RULE_STAGE, relpath, stages_line,
+            f"stage fold_in index collision: {dup} — supposedly independent "
+            "stages would draw identical randomness",
+        ))
+    return findings
+
+
+def rule_stage_keys(relpath: str, tree: ast.Module, source: str) -> List[Finding]:
+    if not relpath.startswith("src/"):
+        return []
+    findings: List[Finding] = []
+    if relpath == REGISTRY_FILE or relpath.endswith("device/models.py"):
+        findings.extend(_registry_findings(relpath, tree))
+    fold_in_literals: Dict[int, List[int]] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dn = dotted_name(node.func) or ""
+        leaf = dn.split(".")[-1]
+        for kw in node.keywords:
+            if (
+                kw.arg == "stage"
+                and isinstance(kw.value, ast.Constant)
+                and isinstance(kw.value.value, str)
+            ):
+                findings.append(Finding(
+                    RULE_STAGE, relpath, node.lineno,
+                    f"ad-hoc stage literal stage={kw.value.value!r} — use the "
+                    "device.models.STAGE_* registry constant",
+                ))
+        if leaf == "_stage_key" and len(node.args) >= 2:
+            arg = node.args[1]
+            if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+                findings.append(Finding(
+                    RULE_STAGE, relpath, node.lineno,
+                    f"ad-hoc stage literal _stage_key(..., {arg.value!r}) — "
+                    "use the device.models.STAGE_* registry constant",
+                ))
+        if leaf == "fold_in" and len(node.args) >= 2:
+            arg = node.args[1]
+            if isinstance(arg, ast.Constant) and isinstance(arg.value, int):
+                fold_in_literals.setdefault(arg.value, []).append(node.lineno)
+    for val, lines in fold_in_literals.items():
+        if len(lines) > 1:
+            findings.append(Finding(
+                RULE_STAGE, relpath, lines[1],
+                f"fold_in index literal {val} used at lines {lines} — "
+                "distinct streams folding the same literal draw identical "
+                "randomness",
+            ))
+    return findings
+
+
+def _bound_names(target: ast.AST) -> List[ast.Name]:
+    if isinstance(target, ast.Name):
+        return [target]
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out = []
+        for elt in target.elts:
+            out.extend(_bound_names(elt))
+        return out
+    return []
+
+
+def rule_shadowing(relpath: str, tree: ast.Module, source: str) -> List[Finding]:
+    if relpath not in SHADOW_SCOPE and not relpath.endswith(
+        ("device/models.py", "device/programmed.py", "device/repair.py", "device/health.py")
+    ):
+        return []
+    findings: List[Finding] = []
+
+    def _walk_own(fn: ast.AST):
+        """Nodes of a function body, NOT descending into nested functions
+        (those are visited under their own name)."""
+        stack = list(fn.body)
+        while stack:
+            node = stack.pop()
+            yield node
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                stack.extend(ast.iter_child_nodes(node))
+
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for node in _walk_own(fn):
+            targets: List[ast.AST] = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, (ast.AnnAssign, ast.AugAssign, ast.NamedExpr)):
+                targets = [node.target]
+            elif isinstance(node, ast.For):
+                targets = [node.target]
+            for t in targets:
+                for name in _bound_names(t):
+                    if name.id not in AUX_SLOTS:
+                        continue
+                    key = (relpath, fn.name, name.id)
+                    if key in SHADOW_ALLOW:
+                        continue
+                    findings.append(Finding(
+                        RULE_SHADOW, relpath, node.lineno,
+                        f"local `{name.id} = ...` in {fn.name}() rebinds a "
+                        "frozen-artifact aux slot name (the PR 7 "
+                        "plan/RepairPlan bug class) — rename the local or "
+                        "audit it in rules_device.SHADOW_ALLOW",
+                    ))
+    return findings

@@ -1,0 +1,150 @@
+"""Pallas kernel contract rule.
+
+Kernel bodies (functions taking ``*_ref`` parameters) execute inside the
+Pallas tracer: Python-level side effects don't run per grid step the way
+they read, data-dependent Python branches on ``pl.program_id`` silently
+specialize to one trace, and a BlockSpec index map whose lambda arity
+disagrees with the grid raises only at call time on the machine that
+first exercises the kernel.  Statically enforced here:
+
+* no Python side effects in a kernel body (``print``/``open``/
+  ``breakpoint``, wall clock, numpy global RNG);
+* no ``global``/``nonlocal`` state;
+* no Python ``if`` on ``pl.program_id`` — grid-position guards must be
+  ``@pl.when`` so they stay inside the traced computation;
+* every ``pl.BlockSpec`` index-map lambda has exactly as many arguments
+  as the ``pallas_call`` grid has dimensions (grid resolved from a tuple
+  literal, an int literal, or a same-function tuple assignment).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.engine import ERROR, Finding, dotted_name
+
+RULE = "pallas-contract"
+
+SCOPE = "src/repro/kernels/"
+
+_SIDE_EFFECT_CALLS = {"print", "open", "input", "breakpoint", "exec", "eval"}
+
+
+def _is_kernel(fn: ast.FunctionDef) -> bool:
+    names = [a.arg for a in fn.args.args + fn.args.kwonlyargs]
+    return sum(1 for n in names if n.endswith("_ref")) >= 2
+
+
+def _kernel_body_findings(relpath: str, fn: ast.FunctionDef) -> List[Finding]:
+    findings: List[Finding] = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            dn = dotted_name(node.func) or ""
+            leaf = dn.split(".")[-1]
+            if dn in _SIDE_EFFECT_CALLS:
+                findings.append(Finding(
+                    RULE, relpath, node.lineno,
+                    f"Python side effect `{dn}(...)` inside kernel "
+                    f"{fn.name}() — kernel bodies must be pure traced code",
+                ))
+            elif dn.endswith("time.time") or (
+                ".random." in dn and dn.startswith(("np.", "numpy."))
+            ):
+                findings.append(Finding(
+                    RULE, relpath, node.lineno,
+                    f"host-state call `{dn}` inside kernel {fn.name}()",
+                ))
+        elif isinstance(node, (ast.Global, ast.Nonlocal)):
+            findings.append(Finding(
+                RULE, relpath, node.lineno,
+                f"`{'global' if isinstance(node, ast.Global) else 'nonlocal'}` "
+                f"state in kernel {fn.name}() — kernels cannot carry Python "
+                "state across grid steps",
+            ))
+        elif isinstance(node, ast.If):
+            if any(
+                isinstance(n, ast.Attribute) and n.attr == "program_id"
+                for n in ast.walk(node.test)
+            ):
+                findings.append(Finding(
+                    RULE, relpath, node.lineno,
+                    f"Python `if` on pl.program_id in kernel {fn.name}() — "
+                    "the branch is resolved once at trace time; guard with "
+                    "@pl.when so it executes per grid step",
+                ))
+    return findings
+
+
+def _grid_len(call: ast.Call, enclosing: Optional[ast.FunctionDef]) -> Optional[int]:
+    grid = None
+    for kw in call.keywords:
+        if kw.arg == "grid":
+            grid = kw.value
+    if grid is None:
+        return None
+    if isinstance(grid, ast.Tuple):
+        return len(grid.elts)
+    if isinstance(grid, ast.Constant) and isinstance(grid.value, int):
+        return 1
+    if isinstance(grid, ast.Name) and enclosing is not None:
+        # resolve a local ``grid = (gm, gn)`` tuple assignment
+        for node in ast.walk(enclosing):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name) and t.id == grid.id:
+                        if isinstance(node.value, ast.Tuple):
+                            return len(node.value.elts)
+    return None
+
+
+def _blockspec_arity_findings(
+    relpath: str, call: ast.Call, enclosing: Optional[ast.FunctionDef]
+) -> List[Finding]:
+    g = _grid_len(call, enclosing)
+    if g is None:
+        return []
+    findings: List[Finding] = []
+    for node in ast.walk(call):
+        if not isinstance(node, ast.Call):
+            continue
+        dn = dotted_name(node.func) or ""
+        if dn.split(".")[-1] != "BlockSpec":
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(arg, ast.Lambda):
+                arity = len(arg.args.args)
+                if arity != g:
+                    findings.append(Finding(
+                        RULE, relpath, arg.lineno,
+                        f"BlockSpec index map takes {arity} arg(s) but the "
+                        f"pallas_call grid has {g} dimension(s)",
+                    ))
+    return findings
+
+
+def rule_pallas(relpath: str, tree: ast.Module, source: str) -> List[Finding]:
+    if not relpath.startswith(SCOPE):
+        return []
+    findings: List[Finding] = []
+    for fn in ast.walk(tree):
+        if isinstance(fn, ast.FunctionDef) and _is_kernel(fn):
+            findings.extend(_kernel_body_findings(relpath, fn))
+    # pallas_call grid/BlockSpec arity, resolved per enclosing function
+    for fn in [None] + [
+        n for n in ast.walk(tree) if isinstance(n, ast.FunctionDef)
+    ]:
+        scope = tree if fn is None else fn
+        for node in (scope.body if fn is None else [fn]):
+            for call in ast.walk(node):
+                if not isinstance(call, ast.Call):
+                    continue
+                dn = dotted_name(call.func) or ""
+                if dn.split(".")[-1] == "pallas_call":
+                    findings.extend(
+                        _blockspec_arity_findings(relpath, call, fn)
+                    )
+    # dedupe: module-level pass sees function bodies too
+    uniq = {}
+    for f in findings:
+        uniq[(f.line, f.message)] = f
+    return sorted(uniq.values(), key=lambda f: f.line)

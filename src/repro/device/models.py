@@ -48,7 +48,23 @@ from repro.core.crossbar import CrossbarSpec
 # 384 * 256 = 98304 for the default spec, with ample headroom for variants.
 GEFF_FRAC_BITS = 8
 
-_STAGES = {"faults": 0, "program": 1, "spare_faults": 2, "spare_program": 3}
+# Stage-key registry: every independent randomness stream in the programming
+# pipeline is named here, once, with a distinct fold_in index.  Call sites
+# MUST use these constants (never string literals) — `repro.analysis`'s
+# stage-key collision rule enforces both halves statically: duplicate indices
+# here would correlate supposedly independent draws, and an ad-hoc literal at
+# a call site would dodge the registry.
+STAGE_FAULTS = "faults"
+STAGE_PROGRAM = "program"
+STAGE_SPARE_FAULTS = "spare_faults"
+STAGE_SPARE_PROGRAM = "spare_program"
+
+_STAGES = {
+    STAGE_FAULTS: 0,
+    STAGE_PROGRAM: 1,
+    STAGE_SPARE_FAULTS: 2,
+    STAGE_SPARE_PROGRAM: 3,
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -168,7 +184,7 @@ def fault_masks(
     cfg: DeviceConfig,
     shape: Tuple[int, ...],
     tag: Optional[jnp.ndarray] = None,
-    stage: str = "faults",
+    stage: str = STAGE_FAULTS,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Disjoint (stuck_on, stuck_off) bool maps — a pure function of
     (cfg, shape, tag): repeated calls (eager or under ``jax.jit``) return the
@@ -380,7 +396,7 @@ def programmed_conductance(
     target = target_cell_codes(w_codes_biased, spec)
     tag = _slab_tag(w_codes_biased)
     masks = fault_masks(cfg, target.shape, tag)
-    key = _stage_key(cfg, "program", tag)
+    key = _stage_key(cfg, STAGE_PROGRAM, tag)
     return write_verify_fixed(target, masks, key, spec, cfg)
 
 
@@ -436,10 +452,10 @@ def effective_cell_codes(
     if repair and wants_repair(cfg):
         from repro.device import repair as repair_mod  # deferred: repair imports models
 
-        plan = repair_mod.plan_repair(
+        rplan = repair_mod.plan_repair(
             w_codes_biased, spec, cfg, target=target, tag=tag, primary_masks=masks
         )
-        g_eff = repair_mod.apply_repair(g_eff, plan)
+        g_eff = repair_mod.apply_repair(g_eff, rplan)
     return g_eff
 
 
@@ -453,6 +469,6 @@ def _programmed_effective(
     target = target_cell_codes(w_codes_biased, spec)
     tag = _slab_tag(w_codes_biased)
     masks = fault_masks(cfg, target.shape, tag)
-    key = _stage_key(cfg, "program", tag)
+    key = _stage_key(cfg, STAGE_PROGRAM, tag)
     g = write_verify_fixed(target, masks, key, spec, cfg)
     return read_effective_codes(g, spec, cfg), target, tag, masks

@@ -71,7 +71,7 @@ def write_verify(
     if masks is None:
         masks = dm.fault_masks(cfg, target.shape, tag)
     stuck = masks[0] | masks[1]
-    key = dm._stage_key(cfg, "program", tag)
+    key = dm._stage_key(cfg, dm.STAGE_PROGRAM, tag)
     iters = max(1, cfg.write_verify_iters)
 
     g = dm.program_attempt(target_g, masks, cfg, key, 0)

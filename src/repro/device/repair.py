@@ -264,7 +264,7 @@ def plan_repair(
         tag = dm._slab_tag(w_codes_biased)
     if primary_masks is None:
         primary_masks = dm.fault_masks(cfg, (S, K, N), tag)
-    spare_masks = dm.fault_masks(cfg, (S, K, B), tag, stage="spare_faults")
+    spare_masks = dm.fault_masks(cfg, (S, K, B), tag, stage=dm.STAGE_SPARE_FAULTS)
 
     cell_max = float((1 << spec.cell_bits) - 1)
     t_u = _unit_view(target, spec.rows)  # (S, R, rows, N)
@@ -317,7 +317,7 @@ def plan_repair(
     )  # (S, R, rows, B)
     vt = jnp.where((victim >= 0)[:, :, None, :], vt, 0.0)
     spare_target = vt.reshape(S, R * spec.rows, B)[:, :K, :]
-    key = dm._stage_key(cfg, "spare_program", tag)
+    key = dm._stage_key(cfg, dm.STAGE_SPARE_PROGRAM, tag)
     g = dm.write_verify_fixed(spare_target, spare_masks, key, spec, cfg)
     parts = []
     for gi in range(n_groups):
@@ -398,10 +398,10 @@ def repaired_effective_cells(
             w_codes_biased, spec, cfg
         )
         report = None
-    plan = plan_repair(
+    rplan = plan_repair(
         w_codes_biased, spec, cfg, target=target, tag=tag, primary_masks=masks
     )
-    return apply_repair(g_eff, plan), plan, report
+    return apply_repair(g_eff, rplan), rplan, report
 
 
 def repair_report(plan: Optional[RepairPlan]) -> Optional[RepairReport]:

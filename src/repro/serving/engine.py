@@ -189,9 +189,35 @@ class ServingEngine:
                     "/ spare choices were baked in when the artifacts were "
                     "programmed — reprogram with the desired plan"
                 )
+            from repro.analysis.store import verify_store
             from repro.checkpoint import restore_programmed
             from repro.device.programmed import expected_artifact_names
 
+            expected = expected_artifact_names(
+                self.params,
+                tie_lm_head=(self.cfg.tie_embeddings and self.cfg.frontend == "token"),
+            )
+            # fail-fast static verification from manifests alone, before any
+            # array loads or binding: a corrupt slot pointer, undecodable
+            # spec/plan, inconsistent leaf shapes or a wrong name-set is
+            # refused with the failing rule named, instead of surfacing as a
+            # silent per-call reprogramming fallback mid-serving
+            vreport = verify_store(restore_artifacts, expected=expected)
+            # orphaned leaves (store ⊃ model) are left to verify_coverage
+            # below: a superset store serves correctly, and that check has
+            # an explicit opt-out (verify_coverage=False) for exotic setups
+            fatal = [
+                f for f in vreport.findings
+                if not (f.rule == "name-set" and "orphaned leaf" in f.message)
+            ]
+            if fatal:
+                vreport.findings[:] = fatal
+                raise ValueError(
+                    "restore_artifacts= store failed static verification "
+                    "(repro.analysis.verify_store): it is internally "
+                    "inconsistent or does not match this model —\n"
+                    + vreport.summary()
+                )
             # restore re-places shards on the engine's mesh from the specs
             # recorded at save time; _shard_artifacts below re-derives from
             # param_axes as well, so either source of truth suffices
@@ -200,10 +226,6 @@ class ServingEngine:
             # silently degrade every projection to per-call reprogramming —
             # the exact silent fallback this engine exists to prevent, so
             # cross-check the store against what this model would program
-            expected = expected_artifact_names(
-                self.params,
-                tie_lm_head=(self.cfg.tie_embeddings and self.cfg.frontend == "token"),
-            )
             bad = sorted(
                 name for name, shape in expected.items()
                 if prog.lookup(name, shape) is None
