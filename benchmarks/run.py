@@ -3,7 +3,7 @@ micro-benchmarks.  Prints ``name,us_per_call,derived`` CSV rows.
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--only fig21]
 
-Kernel-tier results (names starting with ``kernel_``) are additionally
+Gated-tier results (names starting with ``kernel_`` or ``serving_``) are
 persisted to ``BENCH_kernels.json`` at the repo root so the perf trajectory
 is tracked across PRs; ``--check`` compares the fresh run against the
 committed file first and **fails (exit 1) on a >20% regression** of any
@@ -44,6 +44,13 @@ HEADLINE = [
     ("kernel_planned", "bit_exact", "higher"),
     ("kernel_planned", "conversions_ratio_max", "lower"),
     ("kernel_planned", "energy_ratio_max", "lower"),
+    # serving traffic tier: latency is in decode *ticks* (deterministic —
+    # one tick = one jitted decode step), so it gates like a count
+    ("serving_traffic", "bit_exact", "higher"),
+    ("serving_traffic", "p99_ticks", "lower"),
+    ("serving_traffic", "p50_ticks", "lower"),
+    ("serving_traffic", "tokens_per_tick", "higher"),
+    ("serving_traffic", "farm_speedup_x", "higher"),
 ]
 REGRESSION_TOL = 0.20
 
@@ -77,6 +84,16 @@ ABSOLUTE_FLOORS = {
     # bit-exact vs the homogeneous programmed path (ceilings below gate the
     # strict predicted-cost win)
     ("kernel_planned", "bit_exact"): 1.0,
+    # serving-tier acceptance (ISSUE 10): the continuous-batching scheduler
+    # must serve token-identical outputs to the slot-loop engine for the
+    # same (seed, admission order); every request of the Poisson mix must
+    # complete; tokens/tick is the batching-efficiency floor (measured 3.0
+    # on the short/long mix); a 2-replica farm must beat 1 replica by
+    # >= 1.3x on drain ticks (measured ~1.67x)
+    ("serving_traffic", "bit_exact"): 1.0,
+    ("serving_traffic", "n_completed"): 12.0,
+    ("serving_traffic", "tokens_per_tick"): 2.0,
+    ("serving_traffic", "farm_speedup_x"): 1.3,
 }
 
 # Ratio metrics where *small* is the win are gated against fixed acceptance
@@ -87,6 +104,11 @@ ABSOLUTE_FLOORS = {
 ABSOLUTE_CEILINGS = {
     ("kernel_planned", "conversions_ratio_max"): 0.999,
     ("kernel_planned", "energy_ratio_max"): 0.999,
+    # serving-tier latency ceiling: p99 is in deterministic decode ticks
+    # (measured 18 on the pinned short/long mix) — a scheduler regression
+    # that stalls admission or preempts spuriously blows through this long
+    # before any wall clock would notice
+    ("serving_traffic", "p99_ticks"): 24.0,
 }
 
 
@@ -125,7 +147,7 @@ def check_regressions(old: dict, new: dict) -> list:
 
 def main() -> None:
     sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
-    from benchmarks import kernel_bench, noise_sweep, paper_figures
+    from benchmarks import kernel_bench, noise_sweep, paper_figures, serving_traffic
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="substring filter")
@@ -146,7 +168,9 @@ def main() -> None:
 
     kernel_results = {}
     print("name,us_per_call,derived")
-    for name, fn in paper_figures.ALL + kernel_bench.ALL + noise_sweep.ALL:
+    for name, fn in (
+        paper_figures.ALL + kernel_bench.ALL + noise_sweep.ALL + serving_traffic.ALL
+    ):
         if args.only and args.only not in name:
             continue
         t0 = time.perf_counter()
@@ -155,7 +179,9 @@ def main() -> None:
         compact = json.dumps({k: (round(v, 4) if isinstance(v, float) else v)
                               for k, v in derived.items()})
         print(f"{name},{dt_us:.0f},{compact}")
-        if name.startswith("kernel_"):
+        # the gated tiers: kernel micro-benches + the serving traffic tier
+        # both persist to BENCH_kernels.json (one trajectory file)
+        if name.startswith(("kernel_", "serving_")):
             kernel_results[name] = {
                 k: (round(float(v), 6) if isinstance(v, float) else v)
                 for k, v in derived.items()

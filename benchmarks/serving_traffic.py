@@ -1,0 +1,178 @@
+"""Serving-traffic benchmark: the continuous-batching tier under load.
+
+Drives ``serving.scheduler.ContinuousBatchingScheduler`` (and the
+``serving.farm.ChipFarm`` router) with a seeded Poisson arrival process
+over a short/long prompt mix and reports:
+
+  * ``serving_traffic.bit_exact`` — the tentpole refactor gate: for the
+    same (seed, admission order) the scheduler serves token-identical
+    outputs to the slot-loop ``ServingEngine`` (1.0 = every request's
+    token stream matches bit-for-bit);
+  * ``serving_traffic.p50_ticks`` / ``.p99_ticks`` — request latency in
+    decode ticks (arrival to final token) under the Poisson mix.  Ticks,
+    not wall clock: one tick = one jitted decode step, so the numbers are
+    deterministic and gateable (a scheduling regression — lost admission
+    slots, spurious preemption — moves them; host speed does not);
+  * ``serving_traffic.tokens_per_tick`` — batching efficiency: generated
+    tokens per decode tick (max_batch would be perfect packing);
+  * ``serving_traffic.farm_speedup_x`` — farm scaling: ticks to drain a
+    fixed workload on 1 replica vs 2 (pure fan-out, gated > 1.3x);
+  * ``serving_traffic.tokens_per_s`` — wall-clock throughput of the
+    scheduler run, reported for the record but NOT gated (host dependent).
+
+Traffic mixes are first-class frozen dataclasses (``PromptClass``,
+``TrafficMix``): a mix owns its arrival rate, class weights and seed, so
+a workload is one hashable value and every run over it replays the same
+arrival schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.serving import ContinuousBatchingScheduler, ChipFarm, ModelRunner, ServingEngine
+
+from benchmarks.noise_sweep import tiny_lm_config
+
+
+@dataclasses.dataclass(frozen=True)
+class PromptClass:
+    """One request shape in a traffic mix."""
+
+    name: str
+    prompt_len: int
+    max_new_tokens: int
+    weight: float  # relative admission probability within the mix
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficMix:
+    """A seeded Poisson arrival process over prompt classes.
+
+    ``rate`` is the mean number of arrivals per decode tick; class choice
+    and prompt tokens draw from the mix's own seeded generator, so one
+    ``TrafficMix`` value IS the workload — every sampling of it replays
+    the identical request schedule.
+    """
+
+    name: str
+    classes: Tuple[PromptClass, ...]
+    rate: float
+    n_requests: int
+    seed: int = 0
+
+    def sample_arrivals(self, vocab: int) -> List[Tuple[int, PromptClass, np.ndarray]]:
+        """(arrival_tick, class, prompt) for each request, tick-ordered."""
+        rng = np.random.default_rng(self.seed)
+        w = np.asarray([c.weight for c in self.classes], np.float64)
+        w = w / w.sum()
+        out: List[Tuple[int, PromptClass, np.ndarray]] = []
+        tick = 0
+        while len(out) < self.n_requests:
+            for _ in range(int(rng.poisson(self.rate))):
+                if len(out) >= self.n_requests:
+                    break
+                cls = self.classes[int(rng.choice(len(self.classes), p=w))]
+                prompt = rng.integers(1, vocab, size=cls.prompt_len).astype(np.int32)
+                out.append((tick, cls, prompt))
+            tick += 1
+        return out
+
+
+# the headline mix: mostly short interactive prompts with a long-prompt
+# tail — the shape that makes continuous batching pay (short requests
+# drain and refill slots while long ones keep decoding)
+SHORT_LONG = TrafficMix(
+    name="short_long",
+    classes=(
+        PromptClass("short", prompt_len=6, max_new_tokens=4, weight=0.7),
+        PromptClass("long", prompt_len=20, max_new_tokens=10, weight=0.3),
+    ),
+    rate=0.75,
+    n_requests=12,
+    seed=0,
+)
+
+
+def _tiny_setup():
+    cfg = tiny_lm_config()
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    return cfg, params
+
+
+def serving_traffic_bench(mix: TrafficMix = SHORT_LONG) -> Dict[str, float]:
+    cfg, params = _tiny_setup()
+    arrivals = mix.sample_arrivals(cfg.vocab_size)
+    max_batch, max_seq = 4, 48
+
+    # -- bit-exactness gate: scheduler vs slot-loop engine, same (seed,
+    # admission order) — every request submitted up front, FIFO
+    eng = ServingEngine(cfg, params, max_batch=max_batch, max_seq=max_seq, seed=0)
+    for _, cls, prompt in arrivals:
+        eng.submit(prompt, max_new_tokens=cls.max_new_tokens)
+    eng_out = {r.rid: r.generated for r in eng.run_until_done()}
+
+    runner = ModelRunner(cfg, params, max_seq=max_seq, seed=0)
+    sched = ContinuousBatchingScheduler(runner, max_batch=max_batch)
+    for _, cls, prompt in arrivals:
+        sched.submit(prompt, max_new_tokens=cls.max_new_tokens)
+    sched_out = {r.rid: r.generated for r in sched.run()}
+    bit_exact = float(sched_out == eng_out and len(sched_out) == len(arrivals))
+
+    # -- latency/throughput under the Poisson arrival schedule
+    runner = ModelRunner(cfg, params, max_seq=max_seq, seed=0)
+    sched = ContinuousBatchingScheduler(runner, max_batch=max_batch)
+    queue = list(arrivals)
+    t0 = time.perf_counter()
+    while queue or sched.load:
+        while queue and queue[0][0] <= sched.tick:
+            _, cls, prompt = queue.pop(0)
+            sched.submit(prompt, max_new_tokens=cls.max_new_tokens)
+        sched.step()
+    wall = time.perf_counter() - t0
+    done = sorted(sched.completed.values(), key=lambda r: r.rid)
+    lat = np.asarray([r.finish - r.arrival for r in done], np.float64)
+    n_tokens = sum(len(r.generated) for r in done)
+    ticks = max(1, sched.tick)
+
+    # -- farm scaling: ticks to drain the same workload, 1 vs 2 replicas
+    def farm_ticks(n_replicas: int) -> int:
+        farm = ChipFarm(
+            cfg, params, n_replicas=n_replicas, policy="round_robin",
+            max_batch=2, max_seq=max_seq, seed=0,
+        )
+        for _, cls, prompt in arrivals:
+            farm.submit(prompt, max_new_tokens=cls.max_new_tokens)
+        n = 0
+        while not all(farm.is_idle(i) for i in range(n_replicas)):
+            farm.step()
+            n += 1
+        return n
+
+    speedup = farm_ticks(1) / max(1, farm_ticks(2))
+
+    return {
+        "bit_exact": bit_exact,
+        "n_completed": float(len(done)),
+        "p50_ticks": float(np.percentile(lat, 50)),
+        "p99_ticks": float(np.percentile(lat, 99)),
+        "tokens_per_tick": n_tokens / ticks,
+        "farm_speedup_x": speedup,
+        "tokens_per_s": n_tokens / max(wall, 1e-9),
+    }
+
+
+ALL = [("serving_traffic", serving_traffic_bench)]
+
+
+if __name__ == "__main__":
+    for name, fn in ALL:
+        print(f"== {name}")
+        for k, v in fn().items():
+            print(f"  {k}: {v:.4f}")

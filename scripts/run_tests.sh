@@ -13,6 +13,15 @@
 #                                   health-monitor / compensation / hot-swap
 #                                   tests (@pytest.mark.lifecycle), slow
 #                                   members included
+#   scripts/run_tests.sh --serving  serving traffic tier only: engine
+#                                   request-lifecycle regression tests +
+#                                   continuous-batching scheduler / block
+#                                   KV cache / chip-farm tests
+#                                   (@pytest.mark.serving, slow members
+#                                   included), then the serving_traffic
+#                                   bench gates (bit-exactness vs the
+#                                   slot-loop engine, p99 tick ceiling,
+#                                   tokens/tick floor, farm scaling)
 #   scripts/run_tests.sh --lint     static-analysis tier only: the
 #                                   repro.analysis test suite plus the
 #                                   python -m repro.analysis --check CI gate
@@ -61,6 +70,13 @@ if [[ "${1:-}" == "--lifecycle" ]]; then
   # -m lifecycle overrides the "not slow" default: the whole lifecycle
   # tier runs, slow members included
   exec python -m pytest -q -m lifecycle "$@"
+fi
+if [[ "${1:-}" == "--serving" ]]; then
+  shift
+  # -m serving overrides the "not slow" default: the whole serving tier
+  # runs, slow members included
+  python -m pytest -q -m serving "$@"
+  exec python -m benchmarks.run --only serving_traffic --check
 fi
 if [[ "${1:-}" == "--lint" ]]; then
   shift

@@ -1,1 +1,4 @@
-from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.engine import ModelRunner, Request, ServingEngine  # noqa: F401
+from repro.serving.farm import ChipFarm  # noqa: F401
+from repro.serving.kvcache import BlockCacheConfig, BlockKVCache  # noqa: F401
+from repro.serving.scheduler import ContinuousBatchingScheduler  # noqa: F401

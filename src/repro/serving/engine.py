@@ -1,6 +1,17 @@
-"""Batched serving engine with continuous batching.
+"""Batched serving, split into a model runner and a slot scheduler.
 
-Slot-based design (vLLM-lite, adapted to JAX static shapes):
+Two layers (the scheduler/model-runner split):
+
+``ModelRunner`` owns the *model* half of serving: the params, the
+programmed crossbar chip and its whole lifecycle (program-once
+compilation, artifact store save/restore, aging, health probes,
+compensation, zero-downtime hot-swap/refresh), the jitted prefill/decode
+step functions, and sampling.  It is stateless with respect to traffic —
+it does not know about slots, requests or queues — so any number of
+scheduling policies can drive one runner.
+
+``ServingEngine`` is the synchronous slot scheduler on top (vLLM-lite,
+adapted to JAX static shapes):
   * a fixed pool of ``max_batch`` cache slots, each holding one request's
     KV/state cache at its own position;
   * admission: a pending request is prefilled with a batch-1 prefill
@@ -10,11 +21,17 @@ Slot-based design (vLLM-lite, adapted to JAX static shapes):
     tick with per-slot positions; finished slots are freed and refilled
     without stalling the others.
 
-Sampling is greedy or temperature-based with a per-engine PRNG; generation
+The continuous-batching traffic tier builds on the same runner:
+``serving.scheduler.ContinuousBatchingScheduler`` adds per-request
+deadlines, mid-flight eviction and a block-allocated KV cache
+(``serving.kvcache``), and ``serving.farm.ChipFarm`` routes requests
+across N programmed replicas restored from one artifact store.
+
+Sampling is greedy or temperature-based with a per-runner PRNG; generation
 is deterministic given (seed, admission order), which the tests assert.
 
 Crossbar serving: pass ``crossbar=CrossbarMode(enabled=True, device=...)``
-and the engine compiles every projection onto programmed crossbars **once**
+and the runner compiles every projection onto programmed crossbars **once**
 at construction (``repro.device.programmed.program_model``) — the paper's
 program-once premise as a serving feature.  Every prefill/decode then runs
 the steady-state artifact path inside the jitted step functions: one fixed
@@ -30,7 +47,10 @@ effective cells, frozen scales, write-verify reports, spare blocks and
 gather tables — through ``repro.checkpoint``; a later
 ``ServingEngine(..., restore_artifacts=dir)`` restores the *same* chip
 bit-for-bit and skips reprogramming entirely (restart latency is file I/O,
-not write-verify).
+not write-verify).  Both construction-time restore *and* ``hot_swap()``
+run the same ``analysis.verify_store`` fail-fast static verification
+before binding, so a corrupt store is refused up front instead of hitting
+mid-flight serving.
 
 Mesh serving: pass ``mesh=`` (plus ``param_axes=`` from ``init_model``)
 and every jitted step runs under the mesh with the config's layout
@@ -50,7 +70,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import itertools
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -67,8 +87,21 @@ class Request:
     prompt: np.ndarray  # (S,) int32 tokens (or (S, D) embeddings)
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    # allow silently truncating a prompt longer than max_seq to its last
+    # max_seq tokens-worth prefix; without it an over-length prompt is
+    # refused at submit() with a ValueError
+    truncate: bool = False
+    # traffic tier (serving.scheduler): absolute tick by which the request
+    # must finish, else it is evicted with expired=True; None = no deadline
+    deadline: Optional[int] = None
+    # streaming: called as on_token(req, tok) for every generated token,
+    # including the prefill-sampled first token of recurrent archs
+    on_token: Optional[Callable[["Request", int], None]] = None
+    arrival: int = 0  # scheduler tick at submit time
+    finish: Optional[int] = None  # scheduler tick after the finishing step
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    expired: bool = False
 
 
 def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048)) -> int:
@@ -78,12 +111,21 @@ def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048)) -> int:
     return -(-n // 2048) * 2048
 
 
-class ServingEngine:
+class ModelRunner:
+    """The model half of serving: chip + jitted steps + sampling.
+
+    Owns everything about *how* one token batch is computed — programmed
+    crossbar artifacts and their lifecycle, mesh placement, the jitted
+    prefill/decode closures, the sampling PRNG — and nothing about *which*
+    requests run when.  Schedulers (the slot loop in ``ServingEngine``,
+    the continuous-batching tier in ``serving.scheduler``) hold the
+    traffic state and call into one runner.
+    """
+
     def __init__(
         self,
         cfg: ModelConfig,
         params,
-        max_batch: int = 4,
         max_seq: int = 512,
         temperature: float = 0.0,
         seed: int = 0,
@@ -98,14 +140,13 @@ class ServingEngine:
     ):
         self.cfg = cfg
         self.params = params
-        self.max_batch = max_batch
         self.max_seq = max_seq
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
         # mesh serving: every jitted step runs under ``use_mesh(mesh,
         # layout_overrides(cfg))`` so the model's shard_map EP/TP paths
         # engage; ``param_axes`` (the logical-axes tree from init_model)
-        # lets the engine shard programmed artifacts with the same specs as
+        # lets the runner shard programmed artifacts with the same specs as
         # the weights they shadow (device.programmed.shard_artifacts)
         self.mesh = mesh
         self.param_axes = param_axes
@@ -122,12 +163,6 @@ class ServingEngine:
         self.crossbar = self._program_crossbars(crossbar, spare_cols, restore_artifacts)
         if verify_coverage:
             self.verify_crossbar_coverage()
-        self.cache = model_lib.init_cache(cfg, max_batch, max_seq, dtype=jnp.float32)
-        self.slots: List[Optional[Request]] = [None] * max_batch
-        self.pos = np.zeros(max_batch, np.int32)  # position of next write
-        self.last_tok = np.zeros(max_batch, np.int32)
-        self.pending: List[Request] = []
-        self._rid = itertools.count()
         self._decode = jax.jit(
             lambda p, t, pos, c: self._with_crossbar(
                 lambda: model_lib.decode_step(p, self.cfg, t, pos, c)
@@ -136,6 +171,43 @@ class ServingEngine:
         self._prefills: Dict[int, object] = {}
 
     # ------------------------------------------------------------------
+    @property
+    def _tie_lm_head(self) -> bool:
+        return self.cfg.tie_embeddings and self.cfg.frontend == "token"
+
+    def _verify_store(self, directory: str, slot: Optional[str], what: str):
+        """Fail-fast static store verification shared by construction-time
+        restore and ``hot_swap`` — same rules, same orphaned-leaf carve-out.
+
+        Verifies from manifests alone, before any array loads or binding: a
+        corrupt slot pointer, undecodable spec/plan, inconsistent leaf
+        shapes or a wrong name-set is refused with the failing rule named,
+        instead of surfacing as a silent per-call reprogramming fallback
+        mid-serving.  Returns the expected name -> shape map for the
+        follow-up binding cross-check.
+        """
+        from repro.analysis.store import verify_store
+        from repro.device.programmed import expected_artifact_names
+
+        expected = expected_artifact_names(self.params, tie_lm_head=self._tie_lm_head)
+        vreport = verify_store(directory, expected=expected, slot=slot)
+        # orphaned leaves (store ⊃ model) are left to verify_coverage: a
+        # superset store serves correctly, and that check has an explicit
+        # opt-out (verify_coverage=False) for exotic setups
+        fatal = [
+            f for f in vreport.findings
+            if not (f.rule == "name-set" and "orphaned leaf" in f.message)
+        ]
+        if fatal:
+            vreport.findings[:] = fatal
+            raise ValueError(
+                f"{what} store failed static verification "
+                "(repro.analysis.verify_store): it is internally "
+                "inconsistent or does not match this model —\n"
+                + vreport.summary()
+            )
+        return expected
+
     def _program_crossbars(
         self,
         crossbar: Optional[CrossbarMode],
@@ -150,7 +222,7 @@ class ServingEngine:
         ``DeviceConfig`` the whole engine serves from one fixed chip
         instead of redrawing noise per layer call).
 
-        ``spare_cols`` (engine constructor arg) overrides the device's
+        ``spare_cols`` (constructor arg) overrides the device's
         spare-column repair budget at deploy time: the fault-aware planner
         (``device.repair``) then remaps the worst stuck-cell columns of
         every projection into programmed spares before serving begins.
@@ -189,35 +261,9 @@ class ServingEngine:
                     "/ spare choices were baked in when the artifacts were "
                     "programmed — reprogram with the desired plan"
                 )
-            from repro.analysis.store import verify_store
             from repro.checkpoint import restore_programmed
-            from repro.device.programmed import expected_artifact_names
 
-            expected = expected_artifact_names(
-                self.params,
-                tie_lm_head=(self.cfg.tie_embeddings and self.cfg.frontend == "token"),
-            )
-            # fail-fast static verification from manifests alone, before any
-            # array loads or binding: a corrupt slot pointer, undecodable
-            # spec/plan, inconsistent leaf shapes or a wrong name-set is
-            # refused with the failing rule named, instead of surfacing as a
-            # silent per-call reprogramming fallback mid-serving
-            vreport = verify_store(restore_artifacts, expected=expected)
-            # orphaned leaves (store ⊃ model) are left to verify_coverage
-            # below: a superset store serves correctly, and that check has
-            # an explicit opt-out (verify_coverage=False) for exotic setups
-            fatal = [
-                f for f in vreport.findings
-                if not (f.rule == "name-set" and "orphaned leaf" in f.message)
-            ]
-            if fatal:
-                vreport.findings[:] = fatal
-                raise ValueError(
-                    "restore_artifacts= store failed static verification "
-                    "(repro.analysis.verify_store): it is internally "
-                    "inconsistent or does not match this model —\n"
-                    + vreport.summary()
-                )
+            expected = self._verify_store(restore_artifacts, None, "restore_artifacts=")
             # restore re-places shards on the engine's mesh from the specs
             # recorded at save time; _shard_artifacts below re-derives from
             # param_axes as well, so either source of truth suffices
@@ -278,14 +324,14 @@ class ServingEngine:
             fast=crossbar.fast,
             # tied LM heads serve from a transpose programmed once, bound to
             # the embedding's name (name-keyed binding makes this possible)
-            tie_lm_head=(self.cfg.tie_embeddings and self.cfg.frontend == "token"),
+            tie_lm_head=self._tie_lm_head,
             expert_chips=self.expert_chips,
             plan=self.plan,
         )
         return dataclasses.replace(crossbar, programmed=self._shard_artifacts(prog))
 
     def _shard_artifacts(self, prog):
-        """Place every artifact on the engine's mesh with its weight's spec.
+        """Place every artifact on the runner's mesh with its weight's spec.
 
         No-op without a mesh or without ``param_axes`` (artifacts stay
         replicated — the shard_map bodies still slice them per rank on the
@@ -327,10 +373,10 @@ class ServingEngine:
     def verify_crossbar_coverage(self) -> None:
         """Structural name-set check at construction (abstract trace only).
 
-        Traces one forward with ``jax.eval_shape`` under the engine's
+        Traces one forward with ``jax.eval_shape`` under the runner's
         crossbar mode and asserts the programmed model's emitted name set
         was consumed exactly — a renamed layer or an artifact no call site
-        serves fails engine construction loudly, *before* the first request
+        serves fails construction loudly, *before* the first request
         (and before the miss counter could ever catch the orphaned-artifact
         direction, which produces zero misses).  No kernels execute and
         nothing is allocated.
@@ -339,7 +385,6 @@ class ServingEngine:
             return
         from repro.device import programmed as prog_mod
         from repro.models import layers as layers_mod
-        from repro.models import model as model_lib
 
         if self.cfg.frontend == "token":
             inp = jax.ShapeDtypeStruct((1, 4), jnp.int32)
@@ -421,8 +466,9 @@ class ServingEngine:
         they trace) — mutating the crossbar mode alone would keep serving
         the old chip out of the jit cache.  Dropping the wrappers forces a
         retrace against the new binding; KV caches, slot state and pending
-        requests are untouched, so in-flight requests continue on the new
-        chip at the next tick — the zero-downtime part of ``hot_swap``.
+        requests live in the scheduler layer and are untouched, so
+        in-flight requests continue on the new chip at the next tick — the
+        zero-downtime part of ``hot_swap``.
         """
         self.crossbar = dataclasses.replace(self.crossbar, programmed=prog)
         self._decode = jax.jit(
@@ -478,24 +524,23 @@ class ServingEngine:
     def hot_swap(self, directory: str, slot: Optional[str] = None) -> None:
         """Rebind the chip from an artifact store without stopping serving.
 
-        Restores ``directory`` (following the ``ACTIVE`` slot pointer
-        unless ``slot`` is forced), validates it against this model's
-        expected projection set exactly like construction-time restore,
-        re-places it on the engine's mesh, and swaps between decode steps —
-        in-flight requests keep their caches and continue on the refreshed
-        chip at the next tick.  A swap onto a just-reprogrammed store is
+        Runs the *same* ``analysis.verify_store`` fail-fast static
+        verification as construction-time ``restore_artifacts=`` (same
+        orphaned-leaf carve-out), restores ``directory`` (following the
+        ``ACTIVE`` slot pointer unless ``slot`` is forced), cross-checks it
+        against this model's expected projection set, re-places it on the
+        runner's mesh, and swaps between decode steps — in-flight requests
+        keep their caches and continue on the refreshed chip at the next
+        tick.  A corrupt or mismatched store is refused up front and the
+        old chip keeps serving.  A swap onto a just-reprogrammed store is
         bit-identical to an engine freshly constructed on that chip
         (programming is deterministic; the store round-trips exact dtypes).
         """
         self._require_programmed("hot_swap()")
         from repro.checkpoint import restore_programmed
-        from repro.device.programmed import expected_artifact_names
 
+        expected = self._verify_store(directory, slot, "hot_swap")
         prog = restore_programmed(directory, mesh=self.mesh, slot=slot)
-        expected = expected_artifact_names(
-            self.params,
-            tie_lm_head=(self.cfg.tie_embeddings and self.cfg.frontend == "token"),
-        )
         bad = sorted(
             name for name, shape in expected.items()
             if prog.lookup(name, shape) is None
@@ -512,12 +557,12 @@ class ServingEngine:
     def refresh(self, directory: Optional[str] = None) -> Optional[str]:
         """Reprogram fresh chips and swap them in — the lifecycle reset.
 
-        Reprograms every projection from the engine's params under the
+        Reprograms every projection from the runner's params under the
         construction-time device config (deterministic: the same chip the
         engine started with, at service time zero).  With ``directory``,
         the fresh chips are written into the *inactive* store slot while
         the old ones keep serving, the ``ACTIVE`` pointer is atomically
-        swapped, and the engine hot-swaps from the store (serving exactly
+        swapped, and the runner hot-swaps from the store (serving exactly
         what a restart would restore); returns the committed slot.  Without
         a directory the fresh chips are rebound directly.
         """
@@ -528,7 +573,7 @@ class ServingEngine:
             self.params,
             device=self.crossbar.device,
             fast=self.crossbar.fast,
-            tie_lm_head=(self.cfg.tie_embeddings and self.cfg.frontend == "token"),
+            tie_lm_head=self._tie_lm_head,
             expert_chips=self.expert_chips,
             plan=self.plan,
         )
@@ -544,7 +589,7 @@ class ServingEngine:
         return target
 
     def _with_crossbar(self, fn):
-        """Run ``fn`` under the engine's mesh and crossbar mode, with the
+        """Run ``fn`` under the runner's mesh and crossbar mode, with the
         programmed model's name-keyed artifact table bound for the dynamic
         scope (works at jit trace time — lookups resolve by name, not by
         leaf identity, so any congruent params tree serves).  With a mesh,
@@ -563,10 +608,12 @@ class ServingEngine:
             return fn()
 
     # ------------------------------------------------------------------
-    def submit(self, prompt, max_new_tokens: int = 16, eos_id: Optional[int] = None) -> int:
-        req = Request(next(self._rid), np.asarray(prompt), max_new_tokens, eos_id)
-        self.pending.append(req)
-        return req.rid
+    # Scheduler-facing surface: cache init, prefill-admit, decode, sample
+    # ------------------------------------------------------------------
+
+    def init_cache(self, batch: int, dtype=jnp.float32):
+        """A dense slot-pool cache sized to this runner's ``max_seq``."""
+        return model_lib.init_cache(self.cfg, batch, self.max_seq, dtype=dtype)
 
     def _prefill_fn(self, bucket: int):
         if bucket not in self._prefills:
@@ -577,37 +624,68 @@ class ServingEngine:
             self._prefills[bucket] = jax.jit(fn)
         return self._prefills[bucket]
 
-    def _admit(self):
-        for slot in range(self.max_batch):
-            if self.slots[slot] is not None or not self.pending:
-                continue
-            req = self.pending.pop(0)
-            S = len(req.prompt)
-            # Recurrent archs (ssm/hybrid) must not process padding tokens —
-            # their state would absorb them — so they prefill exact lengths;
-            # attention caches tolerate padding (masked by position), so they
-            # use buckets + an idempotent catch-up re-issue of token S-1.
-            recurrent = self.cfg.family in ("ssm", "hybrid")
-            bucket = S if recurrent else min(_bucket(S), self.max_seq)
-            prompt = np.zeros((1, bucket), np.int32)
-            prompt[0, :S] = req.prompt[:bucket]
-            small_cache = model_lib.init_cache(self.cfg, 1, self.max_seq, dtype=jnp.float32)
-            logits, filled = self._prefill_fn(bucket)(self.params, jnp.asarray(prompt), small_cache)
-            self.cache = jax.tree.map(
-                lambda big, one: big.at[:, slot].set(one[:, 0]), self.cache, filled
-            )
-            if recurrent:
-                tok = int(self._sample(np.asarray(logits, np.float32))[0])
-                self.pos[slot] = S
-                self.last_tok[slot] = tok
-                req.generated.append(tok)
-            else:
-                self.pos[slot] = S - 1
-                self.last_tok[slot] = int(req.prompt[S - 1])
-            self.slots[slot] = req
+    def check_prompt(self, prompt, truncate: bool) -> int:
+        """Validate a prompt against ``max_seq``; returns the effective
+        (possibly truncated) prefill length.
 
-    # ------------------------------------------------------------------
-    def _sample(self, logits: np.ndarray) -> np.ndarray:
+        A prompt longer than ``max_seq`` cannot be coherently prefilled —
+        the slot pool has no room for its tail — so it is refused with a
+        clear error unless the caller explicitly opted into truncation
+        (``truncate=True`` keeps the first ``max_seq`` tokens and admits
+        with pos/last_tok derived from the truncated length).
+        """
+        S = len(prompt)
+        if S > self.max_seq:
+            if not truncate:
+                raise ValueError(
+                    f"prompt of length {S} exceeds max_seq={self.max_seq}: "
+                    "it cannot be prefilled into the slot pool — raise "
+                    "max_seq, shorten the prompt, or pass truncate=True to "
+                    "serve the first max_seq tokens"
+                )
+            return self.max_seq
+        return S
+
+    def admit_slot(self, cache, slot: int, req: Request):
+        """Prefill one request and scatter its cache into slot ``slot``.
+
+        Returns ``(cache, pos, last_tok, first_tok)`` where ``first_tok``
+        is the prefill-sampled first generated token for recurrent archs
+        (None for attention, which re-issues the last prompt token on the
+        first decode tick instead).
+        """
+        S = self.check_prompt(req.prompt, req.truncate)
+        # Recurrent archs (ssm/hybrid) must not process padding tokens —
+        # their state would absorb them — so they prefill exact lengths;
+        # attention caches tolerate padding (masked by position), so they
+        # use buckets + an idempotent catch-up re-issue of token S-1.
+        recurrent = self.cfg.family in ("ssm", "hybrid")
+        bucket = S if recurrent else min(_bucket(S), self.max_seq)
+        prompt = np.zeros((1, bucket), np.int32)
+        # S <= bucket always (check_prompt clamps S to max_seq >= bucket),
+        # so the copy below never silently drops tokens the bookkeeping
+        # would then point past
+        prompt[0, :S] = req.prompt[:S]
+        small_cache = self.init_cache(1)
+        logits, filled = self._prefill_fn(bucket)(self.params, jnp.asarray(prompt), small_cache)
+        cache = jax.tree.map(
+            lambda big, one: big.at[:, slot].set(one[:, 0]), cache, filled
+        )
+        if recurrent:
+            tok = int(self.sample(np.asarray(logits, np.float32))[0])
+            return cache, S, tok, tok
+        # pos/last_tok from the *effective* length: after truncation both
+        # point at the last token that was actually prefilled
+        return cache, S - 1, int(np.asarray(req.prompt)[S - 1]), None
+
+    def decode(self, last_tok: np.ndarray, pos: np.ndarray, cache):
+        """One jitted decode tick over the whole slot pool; returns
+        ``(logits, cache)`` with logits as host float32."""
+        toks = jnp.asarray(np.asarray(last_tok)[:, None])
+        logits, cache = self._decode(self.params, toks, jnp.asarray(pos), cache)
+        return np.asarray(logits, np.float32), cache
+
+    def sample(self, logits: np.ndarray) -> np.ndarray:
         if self.temperature <= 0.0:
             return np.argmax(logits, axis=-1).astype(np.int32)
         self.key, sub = jax.random.split(self.key)
@@ -616,44 +694,209 @@ class ServingEngine:
             jnp.argmax(logits / self.temperature + g, axis=-1), np.int32
         )
 
+
+class ServingEngine:
+    """Slot scheduler over a ``ModelRunner`` (the pre-traffic-tier loop).
+
+    Composes a runner with a fixed slot pool and a FIFO pending queue;
+    ``step()`` admits and advances, ``run_until_done()`` drains.  All
+    model/chip concerns (programming, lifecycle, persistence, sampling)
+    delegate to the runner — ``eng.crossbar``, ``eng.hot_swap(...)`` etc.
+    keep working as before the scheduler/model-runner split.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        max_batch: int = 4,
+        max_seq: int = 512,
+        temperature: float = 0.0,
+        seed: int = 0,
+        crossbar: Optional[CrossbarMode] = None,
+        spare_cols: Optional[int] = None,
+        restore_artifacts: Optional[str] = None,
+        mesh=None,
+        param_axes=None,
+        verify_coverage: bool = True,
+        expert_chips=None,
+        plan=None,
+        rid_start: int = 0,
+    ):
+        self.runner = ModelRunner(
+            cfg,
+            params,
+            max_seq=max_seq,
+            temperature=temperature,
+            seed=seed,
+            crossbar=crossbar,
+            spare_cols=spare_cols,
+            restore_artifacts=restore_artifacts,
+            mesh=mesh,
+            param_axes=param_axes,
+            verify_coverage=verify_coverage,
+            expert_chips=expert_chips,
+            plan=plan,
+        )
+        self.max_batch = max_batch
+        self.cache = self.runner.init_cache(max_batch)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.pos = np.zeros(max_batch, np.int32)  # position of next write
+        self.last_tok = np.zeros(max_batch, np.int32)
+        self.pending: List[Request] = []
+        # completion ledger: step() records every finished request here the
+        # moment it frees the slot, so a request that is admitted and
+        # finishes within one step() (max_new_tokens=1) cannot vanish from
+        # run_until_done()'s returned list
+        self._completed: Dict[int, Request] = {}
+        # rid_start: disjoint rid ranges per replica when a ChipFarm fans
+        # one request stream across several engines (serving.farm)
+        self._rid = itertools.count(rid_start)
+
+    # -- delegation: the model half lives on the runner -----------------
+    @property
+    def cfg(self) -> ModelConfig:
+        return self.runner.cfg
+
+    @property
+    def params(self):
+        return self.runner.params
+
+    @property
+    def max_seq(self) -> int:
+        return self.runner.max_seq
+
+    @property
+    def temperature(self) -> float:
+        return self.runner.temperature
+
+    @property
+    def mesh(self):
+        return self.runner.mesh
+
+    @property
+    def param_axes(self):
+        return self.runner.param_axes
+
+    @property
+    def plan(self):
+        return self.runner.plan
+
+    @property
+    def expert_chips(self):
+        return self.runner.expert_chips
+
+    @property
+    def crossbar(self) -> Optional[CrossbarMode]:
+        return self.runner.crossbar
+
+    @property
+    def programmed(self):
+        return self.runner.programmed
+
+    @property
+    def uptime_s(self) -> float:
+        return self.runner.uptime_s
+
+    def verify_crossbar_coverage(self) -> None:
+        self.runner.verify_crossbar_coverage()
+
+    def save_artifacts(self, directory: str, slot: Optional[str] = None) -> str:
+        return self.runner.save_artifacts(directory, slot=slot)
+
+    def repair_reports(self):
+        return self.runner.repair_reports()
+
+    def age(self, dt_s: float) -> None:
+        self.runner.age(dt_s)
+
+    def health_check(self, n_probes: Optional[int] = None, seed: int = 0,
+                     budget: Optional[float] = None):
+        return self.runner.health_check(n_probes=n_probes, seed=seed, budget=budget)
+
+    def compensate(self, n_probes: Optional[int] = None, seed: int = 0) -> None:
+        self.runner.compensate(n_probes=n_probes, seed=seed)
+
+    def hot_swap(self, directory: str, slot: Optional[str] = None) -> None:
+        self.runner.hot_swap(directory, slot=slot)
+
+    def refresh(self, directory: Optional[str] = None) -> Optional[str]:
+        return self.runner.refresh(directory)
+
+    # ------------------------------------------------------------------
+    def submit(
+        self,
+        prompt,
+        max_new_tokens: int = 16,
+        eos_id: Optional[int] = None,
+        truncate: bool = False,
+        on_token: Optional[Callable[[Request, int], None]] = None,
+    ) -> int:
+        prompt = np.asarray(prompt)
+        # refuse over-length prompts at submit time (not deep in _admit
+        # mid-serving) unless truncation was explicitly allowed
+        self.runner.check_prompt(prompt, truncate)
+        req = Request(
+            next(self._rid), prompt, max_new_tokens, eos_id,
+            truncate=truncate, on_token=on_token,
+        )
+        self.pending.append(req)
+        return req.rid
+
+    def _admit(self):
+        for slot in range(self.max_batch):
+            if self.slots[slot] is not None or not self.pending:
+                continue
+            req = self.pending.pop(0)
+            self.cache, p, lt, first = self.runner.admit_slot(self.cache, slot, req)
+            self.pos[slot] = p
+            self.last_tok[slot] = lt
+            if first is not None:
+                req.generated.append(first)
+                if req.on_token is not None:
+                    req.on_token(req, first)
+            self.slots[slot] = req
+
+    # ------------------------------------------------------------------
     def step(self) -> int:
         """Admit pending requests and advance every occupied slot one token.
 
-        Returns the number of active slots advanced."""
+        Finished requests are recorded in the completion ledger as their
+        slots free.  Returns the number of active slots advanced."""
         self._admit()
         active = [i for i in range(self.max_batch) if self.slots[i] is not None]
         if not active:
             return 0
-        toks = jnp.asarray(self.last_tok[:, None])
-        pos = jnp.asarray(self.pos)
-        logits, self.cache = self._decode(self.params, toks, pos, self.cache)
-        nxt = self._sample(np.asarray(logits, np.float32))
+        logits, self.cache = self.runner.decode(self.last_tok, self.pos, self.cache)
+        nxt = self.runner.sample(logits)
         for i in active:
             req = self.slots[i]
             self.pos[i] += 1
             tok = int(nxt[i])
             req.generated.append(tok)
             self.last_tok[i] = tok
+            if req.on_token is not None:
+                req.on_token(req, tok)
             if (
                 len(req.generated) >= req.max_new_tokens
                 or (req.eos_id is not None and tok == req.eos_id)
                 or self.pos[i] >= self.max_seq - 1
             ):
                 req.done = True
+                self._completed[req.rid] = req
                 self.slots[i] = None
         return len(active)
 
     def run_until_done(self, max_ticks: int = 10_000) -> List[Request]:
-        finished: List[Request] = []
-        seen: Dict[int, Request] = {}
         for _ in range(max_ticks):
-            for s in self.slots:
-                if s is not None:
-                    seen[s.rid] = s
             if not self.pending and all(s is None for s in self.slots):
                 break
             self.step()
+        # completion ledger + whatever is still in flight at the tick
+        # budget: nothing is lost, even a request admitted and finished
+        # inside a single step()
+        out = dict(self._completed)
         for s in self.slots:
             if s is not None:
-                seen[s.rid] = s
-        return sorted(seen.values(), key=lambda r: r.rid)
+                out[s.rid] = s
+        return sorted(out.values(), key=lambda r: r.rid)
